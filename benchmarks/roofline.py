@@ -1,0 +1,105 @@
+"""Roofline report: per (arch x shape x mesh) terms from the dry-run.
+
+Reads ``benchmarks/out/dryrun_results.json`` (produced by
+``python -m repro.launch.dryrun --sweep``), adds an analytic per-device
+memory estimate (XLA-CPU memory_analysis is unreliable for temp sizes),
+and emits the §Roofline table rows.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.models.plan import plan_attention
+
+OUT = Path(__file__).resolve().parent / "out" / "dryrun_results.json"
+
+HBM = 16e9
+Row = tuple[str, float, str]
+
+
+def analytic_device_memory(rec: dict) -> float:
+    """Per-device bytes: sharded state + working activations."""
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    tp = 16
+    dp = chips // tp
+    plan = plan_attention(cfg, tp)
+    n = cfg.n_params()
+    if shape.kind == "train":
+        adam_b = 2.03 if rec.get("opt8bit") else 8.0  # int8 rows vs f32
+        state = n * (4 + adam_b) / chips  # master + moments, fully sharded
+        b_loc = max(shape.global_batch // dp, 1)
+        act = b_loc * shape.seq_len * cfg.d_model * 2 * 6  # live set w/ remat
+        logits = b_loc * shape.seq_len * max(cfg.vocab_size // tp, 1) * 4
+        layer_w = 2 * n / max(cfg.n_layers, 1) / tp  # one gathered layer
+        return state + act + logits + layer_w
+    params = n * 2 / chips if shape.kind != "train" else 0
+    if shape.kind == "prefill":
+        b_loc = max(shape.global_batch // dp, 1)
+        act = b_loc * shape.seq_len * cfg.d_model * 2 * 4
+        cache = _cache_dev(cfg, plan, shape, chips)
+        return params + act + cache
+    cache = _cache_dev(cfg, plan, shape, chips)
+    return params + cache + 1e6
+
+
+def _cache_dev(cfg, plan, shape, chips) -> float:
+    from repro.launch.costs import _cache_bytes
+
+    return _cache_bytes(cfg, plan, shape.global_batch, shape.seq_len) / chips
+
+
+def rows(mesh: str = "16x16", path: Path | None = None) -> list[Row]:
+    recs = json.loads((path or OUT).read_text())
+    out: list[Row] = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        dom = r["dominant"]
+        total = max(
+            r["compute_term_s"], r["memory_term_s"], r["collective_term_s"]
+        )
+        mem_dev = analytic_device_memory(r)
+        frac = r["compute_term_s"] / max(total, 1e-12)
+        out.append((f"{name}/compute_s", r["compute_term_s"], f"dom={dom}"))
+        out.append((f"{name}/memory_s", r["memory_term_s"], ""))
+        out.append((f"{name}/collective_s", r["collective_term_s"],
+                    str(r.get("coll_by_kind", ""))[:80]))
+        out.append((f"{name}/useful_ratio", r["useful_ratio"],
+                    "6ND(active)/analytic"))
+        out.append((f"{name}/roofline_fraction", frac,
+                    "compute_term/dominant_term"))
+        out.append((f"{name}/mem_per_device_gb", mem_dev / 1e9,
+                    f"fits={mem_dev < HBM}"))
+    return out
+
+
+def summary_table(mesh: str = "16x16", path: Path | None = None) -> str:
+    recs = json.loads((path or OUT).read_text())
+    lines = [
+        f"| arch | shape | dominant | compute_s | memory_s | coll_s | "
+        f"useful | mem/dev GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        mem = analytic_device_memory(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant']} "
+            f"| {r['compute_term_s']:.3f} | {r['memory_term_s']:.3f} "
+            f"| {r['collective_term_s']:.3f} | {r['useful_ratio']:.2f} "
+            f"| {mem / 1e9:.2f} | {'y' if mem < HBM else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table("16x16"))
+    print()
+    print(summary_table("2x16x16"))

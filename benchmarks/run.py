@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,value,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,table2] [--full]
+
+Emits one CSV row per measurement: ``name,value,derived``.  Paper
+benches run the calibrated simulator at the paper's configuration
+(100 tiles ~ one image, as §V-C..G; fig14 full scale behind --full);
+``roofline`` reads the dry-run sweep results.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (fig7..fig14,roofline)")
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale fig14 (36,848 tiles; minutes)")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip real variant timing in fig7")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figs import ALL_BENCHES
+
+    selected = (
+        args.only.split(",") if args.only else list(ALL_BENCHES) + ["roofline"]
+    )
+    print("name,value,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            if name == "roofline":
+                from benchmarks.roofline import OUT, rows
+
+                if not OUT.exists():
+                    print(f"roofline/skipped,0,run repro.launch.dryrun --sweep")
+                    continue
+                bench_rows = rows("16x16") + rows("2x16x16")
+            elif name == "fig14":
+                bench_rows = ALL_BENCHES[name](full=args.full)
+            elif name == "fig7":
+                bench_rows = ALL_BENCHES[name](measure=not args.no_measure)
+            else:
+                bench_rows = ALL_BENCHES[name]()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for row_name, value, derived in bench_rows:
+            print(f"{row_name},{value:.6g},{derived}")
+        print(f"{name}/bench_wall_s,{time.time() - t0:.1f},harness timing")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""The hierarchical WSI analysis workflow + variant registration.
+
+Builds the two-level abstract workflow of paper Fig 1/2 over the real
+operation implementations and registers the CPU/accelerator function
+variants with their calibrated PATS speedup estimates.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from ..core.calibration import OP_PROFILES, PARALLEL_FEATURE_OPS
+from ..core.variants import VariantRegistry, registry as global_registry
+from ..core.workflow import AbstractWorkflow, Operation, Stage
+from ..core.worker import OpContext
+from . import features as F
+from . import segmentation as S
+
+__all__ = ["build_workflow", "register_variants", "run_tile", "OP_IMPLS"]
+
+#: op name -> (cpu impl, accel impl) over the pipeline state dict.
+OP_IMPLS: dict[str, tuple[Any, Any]] = {
+    "rbc_detection": (S.rbc_detection_cpu, S.rbc_detection_accel),
+    "morph_open": (S.morph_open_cpu, S.morph_open_accel),
+    "recon_to_nuclei": (S.recon_to_nuclei_cpu, S.recon_to_nuclei_accel),
+    "area_threshold": (S.area_threshold_cpu, S.area_threshold_accel),
+    "fill_holes": (S.fill_holes_cpu, S.fill_holes_accel),
+    "pre_watershed": (S.pre_watershed_cpu, S.pre_watershed_accel),
+    "watershed": (S.watershed_cpu, S.watershed_accel),
+    "bwlabel": (S.bwlabel_cpu, S.bwlabel_accel),
+    "color_deconv": (F.color_deconv_cpu, F.color_deconv_accel),
+    "pixel_stats": (F.pixel_stats_cpu, F.pixel_stats_accel),
+    "gradient_stats": (F.gradient_stats_cpu, F.gradient_stats_accel),
+    "haralick": (F.haralick_cpu, F.haralick_accel),
+    "canny_edge": (F.canny_edge_cpu, F.canny_edge_accel),
+    "morphometry": (F.morphometry_cpu, F.morphometry_accel),
+}
+
+_SEG_ORDER = (
+    "rbc_detection",
+    "morph_open",
+    "recon_to_nuclei",
+    "area_threshold",
+    "fill_holes",
+    "pre_watershed",
+    "watershed",
+    "bwlabel",
+)
+
+
+def build_workflow() -> AbstractWorkflow:
+    seg_ops = [Operation(n) for n in _SEG_ORDER]
+    feat_ops = [Operation("color_deconv")] + [
+        Operation(n) for n in PARALLEL_FEATURE_OPS
+    ]
+    feat_edges = tuple(("color_deconv", n) for n in PARALLEL_FEATURE_OPS)
+    return AbstractWorkflow.chain(
+        "wsi-analysis",
+        [
+            Stage.chain("segmentation", seg_ops),
+            Stage("features", tuple(feat_ops), feat_edges),
+        ],
+    )
+
+
+def _wrap(fn):
+    """Adapt a state-dict function to the OpContext calling convention.
+
+    The first op receives the raw tile (chunk payload); downstream ops
+    receive the upstream op's state dict.  Feature ops merge the
+    color_deconv state when both are present.
+    """
+
+    def impl(ctx: OpContext):
+        if not ctx.inputs:
+            return fn(ctx.chunk.payload)
+        if len(ctx.inputs) == 1:
+            return fn(next(iter(ctx.inputs.values())))
+        merged: dict[str, Any] = {}
+        for v in ctx.inputs.values():
+            merged.update(v)
+        return fn(merged)
+
+    return impl
+
+
+def register_variants(
+    reg: VariantRegistry | None = None, accel_kind: str = "gpu",
+    with_pallas: bool = False,
+) -> VariantRegistry:
+    reg = reg or global_registry
+    for name, (cpu_fn, accel_fn) in OP_IMPLS.items():
+        p = OP_PROFILES[name]
+        reg.register(name, "cpu", _wrap(cpu_fn), speedup=1.0)
+        reg.register(
+            name,
+            accel_kind,
+            _wrap(accel_fn),
+            speedup=p.gpu_speedup,
+            transfer_impact=p.transfer_impact,
+        )
+    if with_pallas:
+        _register_pallas_variants(reg)
+    return reg
+
+
+def _register_pallas_variants(reg: VariantRegistry) -> None:
+    """Bind the Pallas kernels as ``tpu`` variants of their ops
+    (interpret-mode on CPU; compiled on real TPUs)."""
+    import jax.numpy as jnp
+
+    from ..kernels import ops as K
+
+    def color_deconv_pallas(ctx: OpContext):
+        state = dict(next(iter(ctx.inputs.values())))
+        rgb = np.asarray(state["rgb"], np.float32)
+        hema, eosin, _ = K.color_deconv(
+            jnp.asarray(rgb[..., 0]), jnp.asarray(rgb[..., 1]),
+            jnp.asarray(rgb[..., 2]), block=(128, 128),
+        )
+        return {**state, "hema": hema, "eosin": eosin}
+
+    def recon_pallas(ctx: OpContext):
+        state = dict(next(iter(ctx.inputs.values())))
+        gray = jnp.asarray(state["gray"], jnp.float32)
+        inv = 255.0 - gray
+        # Marker via iterated erosion (XLA), then the Pallas
+        # block-synchronous reconstruction for the fixpoint hot loop.
+        from .segmentation import _erode_j
+
+        marker = inv
+        for _ in range(8):
+            marker = _erode_j(marker)
+        recon = K.morph_recon(marker, inv, stripe=64, inner_iters=16)
+        nuclei = ((inv - recon) > 25.0) & jnp.asarray(state["fg_open"])
+        return {**state, "recon": recon, "nuclei": nuclei}
+
+    p = OP_PROFILES["color_deconv"]
+    reg.register("color_deconv", "tpu", color_deconv_pallas,
+                 speedup=p.gpu_speedup, transfer_impact=p.transfer_impact)
+    p = OP_PROFILES["recon_to_nuclei"]
+    reg.register("recon_to_nuclei", "tpu", recon_pallas,
+                 speedup=p.gpu_speedup, transfer_impact=p.transfer_impact)
+
+
+def run_tile(tile: np.ndarray, variant: str = "cpu") -> dict:
+    """Reference single-threaded execution of the full pipeline."""
+    idx = 0 if variant == "cpu" else 1
+    state: Any = tile
+    for name in _SEG_ORDER + ("color_deconv",):
+        state = OP_IMPLS[name][idx](state)
+    for name in PARALLEL_FEATURE_OPS:
+        state = OP_IMPLS[name][idx](state)
+    return state

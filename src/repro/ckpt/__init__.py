@@ -1,0 +1,5 @@
+"""Checkpointing: async, sharded, atomic (msgpack + zstd)."""
+
+from .checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
+
+__all__ = ["AsyncCheckpointer", "load_checkpoint", "save_checkpoint"]

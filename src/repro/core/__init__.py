@@ -1,0 +1,58 @@
+"""Core middleware: the paper's contribution as a composable library.
+
+* :mod:`repro.core.workflow` — hierarchical abstract/concrete workflows
+* :mod:`repro.core.variants` — function-variant registry
+* :mod:`repro.core.scheduling` — FCFS / PATS / DL policies
+* :mod:`repro.core.worker` — threaded Worker Resource Manager
+* :mod:`repro.core.manager` — demand-driven Manager (fault tolerant)
+* :mod:`repro.core.simulator` — discrete-event cluster simulator
+* :mod:`repro.core.calibration` — paper-calibrated workload model
+* :mod:`repro.core.cost_model` — roofline PATS estimates (TPU plane)
+"""
+
+from .calibration import OP_PROFILES, PIPELINE_ORDER
+from .cost_model import OpCost, estimate_speedup, roofline_terms
+from .manager import Manager, ManagerConfig
+from .scheduling import ReadyScheduler, SchedulerStats
+from .simulator import ClusterSim, SimConfig, SimResult, run_simulation
+from .variants import FunctionVariant, VariantRegistry, registry
+from .worker import DeviceMemory, LaneSpec, OpContext, WorkerRuntime
+from .workflow import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    Operation,
+    OperationInstance,
+    Stage,
+    StageInstance,
+)
+
+__all__ = [
+    "AbstractWorkflow",
+    "ClusterSim",
+    "ConcreteWorkflow",
+    "DataChunk",
+    "DeviceMemory",
+    "FunctionVariant",
+    "LaneSpec",
+    "Manager",
+    "ManagerConfig",
+    "OpContext",
+    "OpCost",
+    "Operation",
+    "OperationInstance",
+    "OP_PROFILES",
+    "PIPELINE_ORDER",
+    "ReadyScheduler",
+    "SchedulerStats",
+    "SimConfig",
+    "SimResult",
+    "Stage",
+    "StageInstance",
+    "VariantRegistry",
+    "WorkerRuntime",
+    "estimate_speedup",
+    "registry",
+    "roofline_terms",
+    "run_simulation",
+]

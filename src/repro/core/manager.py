@@ -1,0 +1,255 @@
+"""Demand-driven Manager (paper §III-B, Fig 4) with fault tolerance.
+
+The Manager has the overall view of the runtime: it instantiates the
+abstract workflow, tracks inter-stage dependencies, and leases stage
+instances to Workers demand-driven — each Worker holds at most
+``window`` leases and requests more as leases complete (the paper's
+*Window size*, §V-F).
+
+Beyond the paper, the Manager provides the fault-tolerance required for
+thousand-node deployments:
+
+* **heartbeats** — a Worker that stops reporting is declared dead and
+  its outstanding leases return to the queue (chunk processing is
+  idempotent, so re-execution is safe);
+* **straggler backup tasks** — at the tail of a run, outstanding leases
+  are duplicated onto idle Workers and the first completion wins;
+* **elastic membership** — Workers may register/deregister mid-run;
+  the lease queue simply redistributes.
+
+In a single process the Worker objects are invoked directly; on a
+cluster the same protocol runs over MPI/gRPC — the Manager class is
+transport-agnostic (``transport`` hooks).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .workflow import ConcreteWorkflow, StageInstance
+from .worker import WorkerRuntime
+
+__all__ = ["Manager", "ManagerConfig"]
+
+
+@dataclass
+class ManagerConfig:
+    window: int = 4                  # leases in flight per worker
+    heartbeat_timeout: float = 60.0  # seconds without progress => dead
+    backup_tasks: bool = True       # duplicate tail leases
+    poll_interval: float = 0.01
+
+
+@dataclass
+class _WorkerState:
+    runtime: WorkerRuntime
+    leases: set[int] = field(default_factory=set)
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    dead: bool = False
+
+
+class Manager:
+    def __init__(self, workflow: ConcreteWorkflow, cfg: ManagerConfig | None = None):
+        self.cw = workflow
+        self.cfg = cfg or ManagerConfig()
+        self._lock = threading.RLock()
+        self._workers: dict[int, _WorkerState] = {}
+        self._pending: list[StageInstance] = []
+        self._stage_done: set[int] = set()
+        self._stage_outputs: dict[int, dict[str, Any]] = {}
+        self._dup_issued: set[int] = set()
+        self.recovered_leases = 0
+        self.duplicated_leases = 0
+        self._done_event = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        self._stop_monitor = False
+
+    # -- membership -------------------------------------------------------
+
+    def register_worker(self, runtime: WorkerRuntime) -> None:
+        runtime.on_stage_complete = self._make_completion_cb(runtime.worker_id)
+        runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
+        with self._lock:
+            self._workers[runtime.worker_id] = _WorkerState(runtime=runtime)
+
+    def _heartbeat(self, worker_id: int) -> None:
+        with self._lock:
+            st = self._workers.get(worker_id)
+            if st is not None:
+                st.last_heartbeat = time.monotonic()
+
+    def deregister_worker(self, worker_id: int) -> None:
+        """Elastic scale-down: return the worker's leases to the queue."""
+        with self._lock:
+            st = self._workers.pop(worker_id, None)
+            if st is None:
+                return
+            for uid in st.leases:
+                if uid not in self._stage_done:
+                    self._pending.append(self.cw.stage_instances[uid])
+            self._dispatch_all_locked()
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, timeout: float = 120.0) -> bool:
+        """Lease everything and block until the workflow completes."""
+        with self._lock:
+            self._pending.extend(self.cw.ready_stage_instances(self._stage_done))
+            self._dispatch_all_locked()
+        self._stop_monitor = False
+        self._monitor = threading.Thread(target=self._monitor_loop, daemon=True)
+        self._monitor.start()
+        ok = self._done_event.wait(timeout=timeout)
+        self._stop_monitor = True
+        self._monitor.join(timeout=2.0)
+        return ok
+
+    def progress(self) -> tuple[int, int]:
+        with self._lock:
+            total = sum(
+                1 for uid in self.cw.stage_instances if uid not in self._clone_map()
+            )
+            return len(self._stage_done - set(self._clone_map())), total
+
+    def stage_outputs(self, uid: int) -> dict[str, Any]:
+        with self._lock:
+            return self._stage_outputs.get(uid, {})
+
+    # -- internals ---------------------------------------------------------------
+
+    def _clone_map(self) -> dict[int, int]:
+        return getattr(self, "_clones_of", {})
+
+    def _make_completion_cb(self, worker_id: int):
+        def cb(si: StageInstance, outputs: dict[str, Any]) -> None:
+            self._on_stage_complete(worker_id, si, outputs)
+
+        return cb
+
+    def _on_stage_complete(
+        self, worker_id: int, si: StageInstance, outputs: dict[str, Any]
+    ) -> None:
+        with self._lock:
+            st = self._workers.get(worker_id)
+            if st is not None:
+                st.last_heartbeat = time.monotonic()
+            clones_of = self._clone_map()
+            primary_uid = clones_of.get(si.uid, si.uid)
+            if primary_uid in self._stage_done:
+                return  # a backup twin already completed this lease
+            self._stage_done.add(primary_uid)
+            if si.uid != primary_uid:
+                self._stage_done.add(si.uid)
+            self._stage_outputs[primary_uid] = outputs
+            for wst in self._workers.values():
+                wst.leases.discard(si.uid)
+                wst.leases.discard(primary_uid)
+                # Cancel twins on other workers.
+                for c_uid, p_uid in clones_of.items():
+                    if p_uid == primary_uid and c_uid in wst.leases:
+                        wst.runtime.cancel_stage(c_uid)
+                        wst.leases.discard(c_uid)
+            primary = self.cw.stage_instances[primary_uid]
+            # Unlock downstream stage instances and forward their inputs.
+            for dep_uid in primary.dependents:
+                dsi = self.cw.stage_instances[dep_uid]
+                if dsi.deps.issubset(self._stage_done) and dep_uid not in self._stage_done:
+                    already = any(
+                        dep_uid in w.leases for w in self._workers.values()
+                    ) or any(p.uid == dep_uid for p in self._pending)
+                    if not already:
+                        self._pending.append(dsi)
+            self._dispatch_all_locked()
+            self._check_done_locked()
+
+    def _dispatch_all_locked(self) -> None:
+        for st in self._workers.values():
+            if st.dead or not st.runtime.alive:
+                continue
+            while len(st.leases) < self.cfg.window and self._pending:
+                si = self._pending.pop(0)
+                st.leases.add(si.uid)
+                self._forward_upstream_outputs(st.runtime, si)
+                st.runtime.submit_stage(si)
+        if self.cfg.backup_tasks and not self._pending:
+            self._issue_backups_locked()
+
+    def _forward_upstream_outputs(self, rt: WorkerRuntime, si: StageInstance) -> None:
+        """Provide cross-stage inputs (sink op outputs of upstream stages)."""
+        for oi in si.op_instances:
+            for dep_uid in oi.deps:
+                if dep_uid not in self.cw.op_instances:
+                    continue
+                dep_oi = self.cw.op_instances[dep_uid]
+                if dep_oi.stage_instance.uid != si.uid:
+                    up_outputs = self._stage_outputs.get(
+                        dep_oi.stage_instance.uid, {}
+                    )
+                    if dep_oi.op.name in up_outputs:
+                        rt.provide_input(dep_uid, up_outputs[dep_oi.op.name])
+
+    def _issue_backups_locked(self) -> None:
+        clones_of = getattr(self, "_clones_of", None)
+        if clones_of is None:
+            clones_of = self._clones_of = {}
+        idle = [
+            st
+            for st in self._workers.values()
+            if not st.dead and st.runtime.alive and not st.leases
+        ]
+        if not idle:
+            return
+        outstanding: list[StageInstance] = []
+        for st in self._workers.values():
+            for uid in st.leases:
+                if (
+                    uid not in self._stage_done
+                    and uid not in self._dup_issued
+                    and uid not in clones_of
+                ):
+                    outstanding.append(self.cw.stage_instances[uid])
+        for st, si in zip(idle, outstanding):
+            self._dup_issued.add(si.uid)
+            self.duplicated_leases += 1
+            clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
+            clones_of[clone.uid] = si.uid
+            st.leases.add(clone.uid)
+            self._forward_upstream_outputs(st.runtime, clone)
+            st.runtime.submit_stage(clone)
+
+    def _check_done_locked(self) -> None:
+        clones = set(self._clone_map())
+        for uid in self.cw.stage_instances:
+            if uid in clones:
+                continue
+            if uid not in self._stage_done:
+                return
+        self._done_event.set()
+
+    def _monitor_loop(self) -> None:
+        """Heartbeat watchdog: reap dead workers, re-lease their work."""
+        while not self._stop_monitor and not self._done_event.is_set():
+            time.sleep(self.cfg.poll_interval)
+            now = time.monotonic()
+            with self._lock:
+                for st in self._workers.values():
+                    if st.dead:
+                        continue
+                    inflight = bool(st.leases)
+                    expired = (
+                        now - st.last_heartbeat > self.cfg.heartbeat_timeout
+                    )
+                    if not st.runtime.alive or (inflight and expired):
+                        st.dead = True
+                        for uid in st.leases:
+                            if uid not in self._stage_done:
+                                self.recovered_leases += 1
+                                self._pending.append(
+                                    self.cw.stage_instances[uid]
+                                )
+                        st.leases.clear()
+                self._dispatch_all_locked()
+                self._check_done_locked()

@@ -1,0 +1,211 @@
+"""Within-node operation scheduling: FCFS, PATS, and data-locality (DL).
+
+This module contains the decision logic only — it is shared verbatim by
+the real threaded Worker (``core/worker.py``) and by the discrete-event
+cluster simulator (``core/simulator.py``), so scheduling behaviour
+measured in the simulator is the behaviour of the production code.
+
+Policies (paper §IV):
+
+* ``fcfs``  — FIFO queue; the next idle device takes the head.
+* ``pats``  — queue kept sorted by estimated accelerator speedup.  An
+  idle accelerator takes the *maximum*-speedup ready tuple, an idle CPU
+  core the *minimum*-speedup tuple.  Only the relative order of the
+  estimates matters (paper §V-G).
+
+Data-locality conscious assignment (DL, paper §IV-C) is orthogonal and
+applies to accelerator lanes: prefer a ready dependent whose inputs are
+already resident in that accelerator's memory.  When speedups are
+known, the dependent wins only if ``S_d >= S_q * (1 - transferImpact)``
+where ``S_q`` is the best non-resident candidate and ``transferImpact``
+is the fraction of that candidate's execution time spent moving data.
+"""
+
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from .workflow import OperationInstance
+
+__all__ = ["ReadyScheduler", "SchedulerStats", "HOST_KIND"]
+
+HOST_KIND = "cpu"
+
+
+@dataclass
+class SchedulerStats:
+    """Per-(op name, lane kind) assignment counts — Fig 10/12 profiles."""
+
+    assigned: dict[tuple[str, str], int] = field(default_factory=dict)
+    reuse_hits: int = 0
+    reuse_misses: int = 0
+
+    def record(self, op_name: str, lane_kind: str) -> None:
+        key = (op_name, lane_kind)
+        self.assigned[key] = self.assigned.get(key, 0) + 1
+
+    def profile(self) -> dict[str, dict[str, int]]:
+        out: dict[str, dict[str, int]] = {}
+        for (op, kind), n in self.assigned.items():
+            out.setdefault(op, {})[kind] = n
+        return out
+
+    def accel_fraction(self, accel_kind: str = "gpu") -> dict[str, float]:
+        prof = self.profile()
+        return {
+            op: kinds.get(accel_kind, 0) / max(sum(kinds.values()), 1)
+            for op, kinds in prof.items()
+        }
+
+
+class _SortedTasks:
+    """Tasks kept sorted by (speedup, seq).  O(log n) insert/remove."""
+
+    def __init__(self) -> None:
+        self._keys: list[tuple[float, int]] = []
+        self._tasks: list[OperationInstance] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._tasks)
+
+    def add(self, task: OperationInstance) -> None:
+        key = (task.speedup, self._seq)
+        self._seq += 1
+        i = bisect.bisect(self._keys, key)
+        self._keys.insert(i, key)
+        self._tasks.insert(i, task)
+
+    def pop_min(self) -> OperationInstance:
+        self._keys.pop(0)
+        return self._tasks.pop(0)
+
+    def pop_max(self) -> OperationInstance:
+        self._keys.pop()
+        return self._tasks.pop()
+
+    def peek_max(self) -> OperationInstance:
+        return self._tasks[-1]
+
+    def remove(self, task: OperationInstance) -> None:
+        # speedup is not mutated while queued, so key search is exact.
+        lo = bisect.bisect_left(self._keys, (task.speedup, -1))
+        for i in range(lo, len(self._tasks)):
+            if self._tasks[i] is task:
+                del self._keys[i]
+                del self._tasks[i]
+                return
+            if self._keys[i][0] > task.speedup:
+                break
+        raise ValueError("task not in queue")
+
+    def __iter__(self) -> Iterable[OperationInstance]:
+        return iter(self._tasks)
+
+
+class ReadyScheduler:
+    """Queue of ready ``(data chunk, operation)`` tuples + pop policy."""
+
+    def __init__(self, policy: str = "fcfs", locality: bool = False,
+                 speedups_known: bool = True):
+        if policy not in ("fcfs", "pats"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.policy = policy
+        self.locality = locality
+        # DL degrades gracefully when estimates are unavailable: always
+        # prefer reuse (paper §IV-C, first case).
+        self.speedups_known = speedups_known
+        self.stats = SchedulerStats()
+        self._fifo: deque[OperationInstance] = deque()
+        self._sorted = _SortedTasks()
+
+    # -- queue maintenance ---------------------------------------------------
+
+    def push(self, task: OperationInstance) -> None:
+        if self.policy == "pats":
+            self._sorted.add(task)
+        else:
+            self._fifo.append(task)
+
+    def __len__(self) -> int:
+        return len(self._sorted) if self.policy == "pats" else len(self._fifo)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    # -- dispatch --------------------------------------------------------------
+
+    def pop(
+        self,
+        lane_kind: str,
+        resident_producers: Optional[set[int]] = None,
+    ) -> Optional[OperationInstance]:
+        """Select the next tuple for an idle lane of ``lane_kind``.
+
+        ``resident_producers`` — uids of op instances whose outputs are
+        already in this lane's device memory (accelerator lanes only).
+        """
+        if not self:
+            return None
+        task: Optional[OperationInstance]
+        if self.locality and lane_kind != HOST_KIND and resident_producers:
+            task = self._pop_locality(lane_kind, resident_producers)
+        elif self.policy == "pats":
+            task = (
+                self._sorted.pop_min()
+                if lane_kind == HOST_KIND
+                else self._sorted.pop_max()
+            )
+        else:
+            task = self._fifo.popleft()
+        if task is not None:
+            self.stats.record(task.op.name, lane_kind)
+        return task
+
+    def _pop_locality(
+        self, lane_kind: str, resident: set[int]
+    ) -> Optional[OperationInstance]:
+        pool = list(self._sorted) if self.policy == "pats" else list(self._fifo)
+        reusing = [t for t in pool if t.deps & resident]
+        if not reusing:
+            self.stats.reuse_misses += 1
+            return self._pop_plain(lane_kind)
+        if self.policy == "fcfs" or not self.speedups_known:
+            # No (usable) estimates: reuse always wins.
+            choice = reusing[0]
+            self._remove(choice)
+            self.stats.reuse_hits += 1
+            return choice
+        # PATS + DL: best dependent vs best non-resident candidate.
+        best_dep = max(reusing, key=lambda t: t.speedup)
+        non_reusing = [t for t in pool if not (t.deps & resident)]
+        if not non_reusing:
+            self._remove(best_dep)
+            self.stats.reuse_hits += 1
+            return best_dep
+        best_q = max(non_reusing, key=lambda t: t.speedup)
+        if best_dep.speedup >= best_q.speedup * (1.0 - best_q.transfer_impact):
+            self._remove(best_dep)
+            self.stats.reuse_hits += 1
+            return best_dep
+        self._remove(best_q)
+        self.stats.reuse_misses += 1
+        return best_q
+
+    def _pop_plain(self, lane_kind: str) -> Optional[OperationInstance]:
+        if self.policy == "pats":
+            return (
+                self._sorted.pop_min()
+                if lane_kind == HOST_KIND
+                else self._sorted.pop_max()
+            )
+        return self._fifo.popleft()
+
+    def _remove(self, task: OperationInstance) -> None:
+        if self.policy == "pats":
+            self._sorted.remove(task)
+        else:
+            self._fifo.remove(task)

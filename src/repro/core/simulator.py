@@ -1,0 +1,650 @@
+"""Deterministic discrete-event simulator of the middleware on a cluster.
+
+The container has one CPU core; the paper's experiments use 100 nodes
+with 12 cores + 3 GPUs each.  To evaluate the *scheduling* behaviour at
+that scale we simulate time while making every scheduling decision with
+the production scheduler code (:mod:`repro.core.scheduling`) and the
+production workflow graphs (:mod:`repro.core.workflow`).  Operation
+durations come from the calibrated workload model
+(:mod:`repro.core.calibration`), with deterministic per-chunk
+variability.
+
+Modeled effects (paper section in parens):
+
+* demand-driven Manager with per-worker window (III-B, V-F),
+* FCFS / PATS queues, DL locality, function variants (IV-B, IV-C),
+* upload/process/download phases, prefetch & async copy (IV-D),
+* Closest vs OS control-thread placement (IV-A, V-C),
+* multi-core memory-bandwidth contention (V-D: 12 cores -> ~9x),
+* shared parallel filesystem with aggregate bandwidth cap (V-H),
+* node failures (heartbeat + re-lease) and stragglers (backup tasks)
+  — beyond-paper fault-tolerance features of this framework.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import calibration as cal
+from .scheduling import HOST_KIND, ReadyScheduler
+from .workflow import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    Operation,
+    OperationInstance,
+    Stage,
+    StageInstance,
+)
+
+__all__ = [
+    "SimConfig",
+    "SimResult",
+    "ClusterSim",
+    "segmentation_feature_workflow",
+    "monolithic_workflow",
+    "make_tiles",
+    "run_simulation",
+]
+
+ACCEL_KIND = "gpu"
+
+
+# --------------------------------------------------------------------------
+# Workflow builders for the flagship application
+# --------------------------------------------------------------------------
+
+
+def segmentation_feature_workflow() -> AbstractWorkflow:
+    """Two-level hierarchical pipeline of Fig 1/2 (pipelined version)."""
+    seg_ops = [
+        Operation(name, inputs=("tile",), outputs=(name,))
+        for name in cal.PIPELINE_ORDER
+        if cal.OP_PROFILES[name].stage == "segmentation"
+    ]
+    feat_ops = [
+        Operation("color_deconv", inputs=("mask",), outputs=("deconv",))
+    ] + [
+        Operation(name, inputs=("deconv",), outputs=(name,))
+        for name in cal.PARALLEL_FEATURE_OPS
+    ]
+    feat_edges = tuple(
+        ("color_deconv", name) for name in cal.PARALLEL_FEATURE_OPS
+    )
+    return AbstractWorkflow.chain(
+        "wsi-analysis",
+        [
+            Stage.chain("segmentation", seg_ops),
+            Stage("features", tuple(feat_ops), feat_edges),
+        ],
+    )
+
+
+def monolithic_workflow() -> AbstractWorkflow:
+    """Non-pipelined version: the whole tile is one task (§V-D)."""
+    op = Operation("monolithic", inputs=("tile",), outputs=("features",))
+    return AbstractWorkflow.chain("wsi-monolithic", [Stage.single(op)])
+
+
+def make_tiles(n: int, seed: int = 0) -> list[DataChunk]:
+    """Synthetic tile descriptors with deterministic workload variability."""
+    rng = np.random.default_rng(seed)
+    scale = rng.uniform(0.8, 1.2, size=n)  # foreground-density proxy
+    return [
+        DataChunk(chunk_id=i, meta={"work_scale": float(scale[i])})
+        for i in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------
+# Configuration / results
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SimConfig:
+    n_nodes: int = 1
+    node: cal.NodeConfig = field(default_factory=lambda: cal.KEENELAND_NODE)
+    n_gpus: int | None = None          # override node.n_gpus
+    n_cpu_cores: int | None = None     # override compute cores (excl. ctrl)
+    policy: str = "pats"               # "fcfs" | "pats"
+    locality: bool = False             # DL (§IV-C)
+    prefetch: bool = False             # §IV-D
+    placement: str = "closest"         # "closest" | "os" (§IV-A)
+    window: int = 15                   # stage instances per worker (§V-F)
+    pipelined: bool = True             # False => monolithic tasks
+    speedups_known: bool = True
+    speedup_error: float = 0.0         # §V-G protocol, 0..1
+    include_io: bool = True
+    gpu_memory_slots: int = 48         # LRU residency capacity per GPU
+    dispatch_latency: float = 0.002    # Manager round-trip (MPI)
+    seed: int = 0
+    # Fault tolerance / stragglers (beyond-paper features).
+    fail_node_at: Optional[tuple[int, float]] = None  # (node_id, time)
+    heartbeat_timeout: float = 5.0
+    straggler_factor: dict[int, float] = field(default_factory=dict)
+    backup_tasks: bool = False         # duplicate tail leases
+
+    @property
+    def gpus(self) -> int:
+        return self.n_gpus if self.n_gpus is not None else self.node.n_gpus
+
+    @property
+    def cpu_cores(self) -> int:
+        if self.n_cpu_cores is not None:
+            return self.n_cpu_cores
+        # One control thread pinned per GPU (paper §V-D).
+        return self.node.n_cpu_cores - self.gpus
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    tiles: int
+    tiles_per_second: float
+    profile: dict[str, dict[str, int]]     # op -> lane kind -> count
+    lane_busy: dict[str, float]            # lane kind -> busy seconds
+    io_wait: float
+    n_events: int
+    reuse_hits: int
+    reuse_misses: int
+    completed_ok: bool
+    recovered_leases: int = 0
+    duplicated_leases: int = 0
+
+    def utilization(self, cfg: SimConfig) -> dict[str, float]:
+        denom = {
+            HOST_KIND: cfg.cpu_cores * cfg.n_nodes * max(self.makespan, 1e-9),
+            ACCEL_KIND: cfg.gpus * cfg.n_nodes * max(self.makespan, 1e-9),
+        }
+        return {
+            k: self.lane_busy.get(k, 0.0) / denom[k]
+            for k in denom
+            if denom[k] > 1e-6
+        }
+
+    def gpu_fraction_by_op(self) -> dict[str, float]:
+        return {
+            op: kinds.get(ACCEL_KIND, 0) / max(sum(kinds.values()), 1)
+            for op, kinds in self.profile.items()
+        }
+
+
+# --------------------------------------------------------------------------
+# Simulator internals
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _Lane:
+    node_id: int
+    kind: str            # "cpu" | "gpu"
+    lane_id: int
+    busy: bool = False
+    busy_total: float = 0.0
+    executed: int = 0
+    # Accelerator lanes: LRU of producer op-instance uids resident in
+    # device memory (dict preserves insertion order).
+    resident: dict[int, None] = field(default_factory=dict)
+    transfer_penalty: float = 1.0  # placement-dependent (§IV-A)
+
+
+@dataclass
+class _Node:
+    node_id: int
+    lanes: list[_Lane]
+    scheduler: ReadyScheduler
+    leased: set[int] = field(default_factory=set)   # stage-instance uids
+    inflight_ops: int = 0
+    slow: float = 1.0
+    alive: bool = True
+    # chunk_id -> io-ready time (tile read from the filesystem)
+    io_ready: dict[int, float] = field(default_factory=dict)
+
+
+class ClusterSim:
+    def __init__(self, workflow: ConcreteWorkflow, cfg: SimConfig):
+        self.cw = workflow
+        self.cfg = cfg
+        self.now = 0.0
+        self._events: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.n_events = 0
+        self.io_wait_total = 0.0
+        self._io_pipe_free = 0.0
+        self.recovered = 0
+        self.duplicated = 0
+
+        self.nodes: list[_Node] = []
+        for nid in range(cfg.n_nodes):
+            # Accelerator lanes first: when several lanes idle, the GPU
+            # control threads win the race to the queue head.
+            lanes = [_Lane(nid, ACCEL_KIND, i) for i in range(cfg.gpus)]
+            lanes += [_Lane(nid, HOST_KIND, i) for i in range(cfg.cpu_cores)]
+            for lane in lanes:
+                if lane.kind == ACCEL_KIND:
+                    lane.transfer_penalty = self._placement_penalty(lane.lane_id)
+            sched = ReadyScheduler(
+                policy=cfg.policy,
+                locality=cfg.locality,
+                speedups_known=cfg.speedups_known,
+            )
+            node = _Node(nid, lanes, sched)
+            node.slow = cfg.straggler_factor.get(nid, 1.0)
+            self.nodes.append(node)
+
+        # Manager state.
+        self.pending: list[StageInstance] = []   # ready, unassigned (FIFO)
+        self.stage_done: set[int] = set()
+        self.op_done: set[int] = set()
+        self.cancelled_ops: set[int] = set()
+        self.op_location: dict[int, tuple[int, str, int]] = {}
+        self.stage_node: dict[int, int] = {}      # stage uid -> node
+        self.completion_order: list[int] = []
+        # Backup-task bookkeeping: clone uid <-> original uid.
+        self._clone_of: dict[int, int] = {}
+        self._clones: dict[int, list[int]] = {}
+        self._dup_issued: set[int] = set()
+        self._n_primary_stages = len(self.cw.stage_instances)
+
+        # Error-injected speedup estimates (§V-G protocol).
+        self._est = self._make_estimates()
+
+    # -- calibrated cost model -------------------------------------------------
+
+    def _make_estimates(self) -> dict[str, float]:
+        est = {}
+        e = self.cfg.speedup_error
+        agg = cal.aggregate_gpu_speedup()
+        for name, p in cal.OP_PROFILES.items():
+            s = p.gpu_speedup
+            if e > 0:
+                if e >= 1.0:  # adversarial: invert the ordering entirely
+                    s = 0.0 if p.gpu_speedup > agg * 0.5 else 2.0 * s
+                elif p.gpu_speedup <= agg * 0.5:
+                    s = s * (1.0 + e)  # low-speedup ops inflated
+                else:
+                    s = s * (1.0 - e)  # high-speedup ops deflated
+            est[name] = s
+        est["monolithic"] = cal.aggregate_gpu_speedup(include_transfer=False)
+        return est
+
+    def _profile(self, op_name: str) -> cal.OpProfile:
+        if op_name == "monolithic":
+            return cal.OpProfile(
+                "monolithic", 1.0,
+                cal.aggregate_gpu_speedup(), cal.TRANSFER_IMPACT, "all",
+            )
+        return cal.OP_PROFILES[op_name]
+
+    def _cpu_seconds(self, oi: OperationInstance) -> float:
+        p = self._profile(oi.op.name)
+        return (
+            cal.TILE_CPU_SECONDS
+            * p.cpu_fraction
+            * float(oi.chunk.meta.get("work_scale", 1.0))
+        )
+
+    def _placement_penalty(self, gpu_id: int) -> float:
+        """Closest: 1.0.  OS: control threads packed on socket 0, so
+        GPUs 2/3 (attached to the second I/O hub, Fig 6) pay extra QPI
+        traversals; GPU 1 pays a mild migration penalty."""
+        if self.cfg.placement == "closest":
+            return 1.0
+        return 1.25 if gpu_id == 0 else 1.75
+
+    # -- event engine -----------------------------------------------------------
+
+    def _post(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), fn))
+
+    def run(self, max_time: float = 10**9) -> SimResult:
+        self.pending.extend(self.cw.ready_stage_instances(self.stage_done))
+        for node in self.nodes:
+            self._fill_window(node)
+        if self.cfg.fail_node_at is not None:
+            nid, t = self.cfg.fail_node_at
+            self._post(t, lambda: self._kill_node(nid))
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            if t > max_time:
+                break
+            self.now = t
+            self.n_events += 1
+            fn()
+        return self._result()
+
+    def _result(self) -> SimResult:
+        done_primary = sum(
+            1 for uid in self.stage_done if uid not in self._clone_of
+        )
+        completed = done_primary >= self._n_primary_stages
+        n_tiles = len(
+            {
+                si.chunk.chunk_id
+                for uid, si in self.cw.stage_instances.items()
+                if uid not in self._clone_of
+            }
+        )
+        profile: dict[str, dict[str, int]] = {}
+        hits = misses = 0
+        lane_busy: dict[str, float] = {}
+        for node in self.nodes:
+            for (op, kind), n in node.scheduler.stats.assigned.items():
+                profile.setdefault(op, {}).setdefault(kind, 0)
+                profile[op][kind] += n
+            hits += node.scheduler.stats.reuse_hits
+            misses += node.scheduler.stats.reuse_misses
+            for lane in node.lanes:
+                lane_busy[lane.kind] = (
+                    lane_busy.get(lane.kind, 0.0) + lane.busy_total
+                )
+        return SimResult(
+            makespan=self.now,
+            tiles=n_tiles,
+            tiles_per_second=n_tiles / max(self.now, 1e-9),
+            profile=profile,
+            lane_busy=lane_busy,
+            io_wait=self.io_wait_total,
+            n_events=self.n_events,
+            reuse_hits=hits,
+            reuse_misses=misses,
+            completed_ok=completed,
+            recovered_leases=self.recovered,
+            duplicated_leases=self.duplicated,
+        )
+
+    # -- Manager: demand-driven assignment --------------------------------------
+
+    def _fill_window(self, node: _Node) -> None:
+        if not node.alive:
+            return
+        while len(node.leased) < self.cfg.window and self.pending:
+            si = self._pick_for_node(node)
+            node.leased.add(si.uid)
+            self.stage_node[si.uid] = node.node_id
+            self._post(
+                self.now + self.cfg.dispatch_latency,
+                lambda si=si, node=node: self._start_stage(node, si),
+            )
+        self._maybe_backup_tasks()
+
+    def _pick_for_node(self, node: _Node) -> StageInstance:
+        """FIFO, with a locality preference: a stage whose upstream ran
+        on this node keeps its data local (files / in-memory store)."""
+        for i, si in enumerate(self.pending):
+            if si.deps and all(
+                self.stage_node.get(d) == node.node_id for d in si.deps
+            ):
+                return self.pending.pop(i)
+        return self.pending.pop(0)
+
+    def _dep_satisfied(self, deps: set[int]) -> bool:
+        # A cancelled op's stage was completed by a backup twin, so its
+        # output exists: cancelled counts as satisfied.
+        return all(
+            d in self.op_done or d in self.cancelled_ops for d in deps
+        )
+
+    def _start_stage(self, node: _Node, si: StageInstance) -> None:
+        if not node.alive or si.uid in self.stage_done:
+            return
+        # Tile read from the shared filesystem gates the source ops.
+        if self.cfg.include_io and not si.deps:
+            self._issue_io(node, si)
+        for oi in si.op_instances:
+            if oi.uid in self.op_done or oi.uid in self.cancelled_ops:
+                continue
+            if self._dep_satisfied(oi.deps):
+                self._prepare_op(oi)
+                self._enqueue_op(node, oi)
+        self._dispatch_idle_lanes(node)
+
+    def _prepare_op(self, oi: OperationInstance) -> None:
+        oi.speedup = self._est[oi.op.name]
+        oi.transfer_impact = self._profile(oi.op.name).transfer_impact
+
+    def _issue_io(self, node: _Node, si: StageInstance) -> None:
+        start = max(self.now, self._io_pipe_free)
+        self._io_pipe_free = start + 1.0 / cal.LUSTRE_AGGREGATE_BW_TILES
+        ready = start + cal.IO_SECONDS_PER_TILE
+        self.io_wait_total += ready - self.now
+        node.io_ready[si.chunk.chunk_id] = ready
+
+    def _enqueue_op(self, node: _Node, oi: OperationInstance) -> None:
+        gate = node.io_ready.get(oi.chunk.chunk_id, 0.0)
+        if not oi.deps and gate > self.now:
+            self._post(gate, lambda: self._enqueue_op_now(node, oi))
+        else:
+            self._enqueue_op_now(node, oi)
+
+    def _enqueue_op_now(self, node: _Node, oi: OperationInstance) -> None:
+        if not node.alive or oi.uid in self.cancelled_ops:
+            return
+        node.scheduler.push(oi)
+        self._dispatch_idle_lanes(node)
+
+    # -- Worker Resource Manager: lane dispatch ---------------------------------
+
+    def _dispatch_idle_lanes(self, node: _Node) -> None:
+        if not node.alive:
+            return
+        for lane in node.lanes:
+            while not lane.busy and node.scheduler:
+                resident = set(lane.resident) if lane.kind == ACCEL_KIND else None
+                oi = node.scheduler.pop(lane.kind, resident)
+                if oi is None:
+                    break
+                if oi.uid in self.cancelled_ops or oi.uid in self.op_done:
+                    continue  # stale (backup twin already completed)
+                self._execute(node, lane, oi)
+
+    def _execute(self, node: _Node, lane: _Lane, oi: OperationInstance) -> None:
+        duration = self._duration(node, lane, oi)
+        lane.busy = True
+        lane.busy_total += duration
+        node.inflight_ops += 1
+        self._post(
+            self.now + duration, lambda: self._finish_op(node, lane, oi)
+        )
+
+    def _duration(self, node: _Node, lane: _Lane, oi: OperationInstance) -> float:
+        cpu_s = self._cpu_seconds(oi) * node.slow
+        p = self._profile(oi.op.name)
+        if lane.kind == HOST_KIND:
+            active = sum(
+                1 for ln in node.lanes if ln.kind == HOST_KIND and ln.busy
+            ) + 1
+            t = cpu_s / self.cfg.node.cpu_core_efficiency(active)
+            # Input resident on some GPU => pay the download half.
+            if self.cfg.locality and self._inputs_on_accel(oi):
+                gpu_compute = cpu_s / max(p.gpu_speedup, 1e-9)
+                t += self._half_transfer(gpu_compute, p, 1.0)
+            return t
+        # Accelerator lane: upload / process / download phases (§IV-D).
+        compute = cpu_s / max(p.gpu_speedup, 1e-9)
+        up = down = self._half_transfer(compute, p, lane.transfer_penalty)
+        if self.cfg.locality:
+            if oi.deps and oi.deps & set(lane.resident):
+                up = 0.0  # inputs already resident (DL hit)
+            down = 0.0    # outputs stay resident; consumer pays if needed
+        if self.cfg.prefetch and lane.executed > 0:
+            # Async copy overlaps ongoing compute; only the pipeline
+            # fill/drain of this lane remains exposed.
+            up *= 0.1
+            down *= 0.1
+        return compute + up + down
+
+    @staticmethod
+    def _half_transfer(gpu_compute: float, p: cal.OpProfile, pen: float) -> float:
+        total_tx = gpu_compute / (1.0 - p.transfer_impact) - gpu_compute
+        return pen * total_tx / 2.0
+
+    def _inputs_on_accel(self, oi: OperationInstance) -> bool:
+        return any(
+            self.op_location.get(d, (0, HOST_KIND, 0))[1] == ACCEL_KIND
+            for d in oi.deps
+        )
+
+    # -- completion & bookkeeping ------------------------------------------------
+
+    def _finish_op(self, node: _Node, lane: _Lane, oi: OperationInstance) -> None:
+        lane.busy = False
+        lane.executed += 1
+        node.inflight_ops -= 1
+        if not node.alive:
+            return
+        if oi.uid in self.op_done or oi.uid in self.cancelled_ops:
+            self._dispatch_idle_lanes(node)
+            return
+        self.op_done.add(oi.uid)
+        self.completion_order.append(oi.uid)
+        self.op_location[oi.uid] = (node.node_id, lane.kind, lane.lane_id)
+        if lane.kind == ACCEL_KIND and self.cfg.locality:
+            lane.resident[oi.uid] = None
+            while len(lane.resident) > self.cfg.gpu_memory_slots:
+                lane.resident.pop(next(iter(lane.resident)))
+        # Release fine-grain dependents on this node.
+        si = oi.stage_instance
+        for dep_uid in sorted(oi.dependents):
+            d = self.cw.op_instances[dep_uid]
+            local = d.stage_instance.uid in node.leased or d.stage_instance is si
+            if (
+                local
+                and self._dep_satisfied(d.deps)
+                and dep_uid not in self.op_done
+                and dep_uid not in self.cancelled_ops
+            ):
+                self._prepare_op(d)
+                self._enqueue_op(node, d)
+        # Stage completion => notify the Manager (WCC callback).
+        if all(
+            o.uid in self.op_done or o.uid in self.cancelled_ops
+            for o in si.op_instances
+        ):
+            self._finish_stage(node, si)
+        self._dispatch_idle_lanes(node)
+
+    def _finish_stage(self, node: _Node, si: StageInstance) -> None:
+        if si.uid in self.stage_done:
+            return
+        self.stage_done.add(si.uid)
+        node.leased.discard(si.uid)
+        # A backup clone finishing completes the original, and vice versa.
+        orig_uid = self._clone_of.get(si.uid)
+        effective = self.cw.stage_instances.get(orig_uid, si) if orig_uid else si
+        if orig_uid is not None and orig_uid not in self.stage_done:
+            self.stage_done.add(orig_uid)
+            for n in self.nodes:
+                n.leased.discard(orig_uid)
+            self._cancel_ops(self.cw.stage_instances[orig_uid])
+        for twin_uid in self._clones.get(effective.uid, ()):  # cancel twins
+            if twin_uid not in self.stage_done and twin_uid != si.uid:
+                self.stage_done.add(twin_uid)
+                for n in self.nodes:
+                    n.leased.discard(twin_uid)
+                self._cancel_ops(self.cw.stage_instances[twin_uid])
+        # Unlock downstream stage instances.
+        leased_now = {u for n in self.nodes for u in n.leased}
+        pending_now = {p.uid for p in self.pending}
+        for dep_uid in sorted(effective.dependents):
+            dsi = self.cw.stage_instances[dep_uid]
+            if (
+                dsi.deps.issubset(self.stage_done)
+                and dep_uid not in self.stage_done
+                and dep_uid not in leased_now
+                and dep_uid not in pending_now
+            ):
+                self.pending.append(dsi)
+        self._fill_window(node)
+
+    def _cancel_ops(self, si: StageInstance) -> None:
+        for oi in si.op_instances:
+            if oi.uid not in self.op_done:
+                self.cancelled_ops.add(oi.uid)
+
+    # -- fault tolerance / stragglers ---------------------------------------------
+
+    def _kill_node(self, nid: int) -> None:
+        node = self.nodes[nid]
+        node.alive = False
+        lost = sorted(uid for uid in node.leased if uid not in self.stage_done)
+        node.leased.clear()
+
+        def release() -> None:  # heartbeat timeout, then re-lease
+            for uid in lost:
+                if uid in self.stage_done:
+                    continue
+                si = self.cw.stage_instances[uid]
+                # Work executed on the dead node is gone: reset its ops.
+                for oi in si.op_instances:
+                    if (
+                        oi.uid in self.op_done
+                        and self.op_location.get(oi.uid, (None,))[0] == nid
+                    ):
+                        self.op_done.discard(oi.uid)
+                self.recovered += 1
+                self.pending.append(si)
+            for other in self.nodes:
+                self._fill_window(other)
+
+        self._post(self.now + self.cfg.heartbeat_timeout, release)
+
+    def _maybe_backup_tasks(self) -> None:
+        """Tail-of-run straggler mitigation: when the global queue is
+        empty and a node idles, duplicate an outstanding lease from
+        another node (first completion wins, the twin is cancelled)."""
+        if not self.cfg.backup_tasks or self.pending:
+            return
+        idle = [
+            n
+            for n in self.nodes
+            if n.alive and not n.leased and not n.scheduler and n.inflight_ops == 0
+        ]
+        if not idle:
+            return
+        outstanding = [
+            self.cw.stage_instances[uid]
+            for n in self.nodes
+            for uid in n.leased
+            if uid not in self.stage_done
+            and uid not in self._dup_issued
+            and uid not in self._clone_of
+        ]
+        # Each idle node absorbs up to a window of backup clones — the
+        # whole straggler tail re-executes in parallel on healthy nodes.
+        it = iter(outstanding)
+        for node in idle:
+            for _ in range(self.cfg.window):
+                si = next(it, None)
+                if si is None:
+                    return
+                self._dup_issued.add(si.uid)
+                self.duplicated += 1
+                clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
+                self._clone_of[clone.uid] = si.uid
+                self._clones.setdefault(si.uid, []).append(clone.uid)
+                node.leased.add(clone.uid)
+                self.stage_node[clone.uid] = node.node_id
+                self._post(
+                    self.now + self.cfg.dispatch_latency,
+                    lambda node=node, clone=clone: self._start_stage(node, clone),
+                )
+
+
+def run_simulation(
+    n_tiles: int,
+    cfg: SimConfig,
+    workflow_builder: Callable[[], AbstractWorkflow] | None = None,
+) -> SimResult:
+    builder = workflow_builder or (
+        segmentation_feature_workflow if cfg.pipelined else monolithic_workflow
+    )
+    tiles = make_tiles(n_tiles, seed=cfg.seed)
+    cw = ConcreteWorkflow.replicate(builder(), tiles)
+    return ClusterSim(cw, cfg).run()

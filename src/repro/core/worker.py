@@ -1,0 +1,368 @@
+"""Threaded Worker runtime — the WRM of paper Fig 5, executing for real.
+
+A Worker is a multi-thread process.  One lane thread per compute device
+(CPU core / accelerator); every lane pulls ``(data chunk, operation)``
+tuples from the shared :class:`~repro.core.scheduling.ReadyScheduler`
+under the configured policy and executes the operation's *function
+variant* for its device kind.
+
+Accelerator lanes model the discrete-memory hierarchy of the paper:
+inputs are *uploaded* into a per-lane :class:`DeviceMemory` (LRU),
+outputs are *downloaded* back to host memory unless the data-locality
+scheduler keeps them resident for a dependent operation, and with
+``prefetch=True`` the upload of the next selected tuple overlaps the
+ongoing computation via a per-lane copy thread (§IV-D's
+upload/process/download pipeline).
+
+On a single-process deployment (this container) lanes are plain
+threads; on a hybrid cluster the same class drives host cores plus one
+control thread per accelerator — the WCC/Manager protocol is identical
+(``core/manager.py``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .scheduling import HOST_KIND, ReadyScheduler
+from .variants import VariantRegistry, registry as global_registry
+from .workflow import OperationInstance, StageInstance
+
+__all__ = ["DeviceMemory", "LaneSpec", "OpContext", "WorkerRuntime"]
+
+
+class DeviceMemory:
+    """LRU store emulating an accelerator's discrete memory."""
+
+    def __init__(self, slots: int = 64):
+        self.slots = slots
+        self._store: "OrderedDict[int, Any]" = OrderedDict()
+        self.uploads = 0
+        self.downloads = 0
+
+    def put(self, uid: int, value: Any) -> None:
+        self._store[uid] = value
+        self._store.move_to_end(uid)
+        while len(self._store) > self.slots:
+            self._store.popitem(last=False)
+
+    def get(self, uid: int) -> Any:
+        value = self._store[uid]
+        self._store.move_to_end(uid)
+        return value
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._store
+
+    def resident_uids(self) -> set[int]:
+        return set(self._store)
+
+
+@dataclass(frozen=True)
+class LaneSpec:
+    kind: str = HOST_KIND
+    index: int = 0
+    memory_slots: int = 64
+
+
+@dataclass
+class OpContext:
+    """What an operation implementation receives."""
+
+    chunk: Any                       # DataChunk (payload = tile, request, ...)
+    inputs: dict[str, Any]           # dep op name -> output value
+    lane_kind: str = HOST_KIND
+
+    def sole_input(self) -> Any:
+        if len(self.inputs) == 1:
+            return next(iter(self.inputs.values()))
+        if not self.inputs:
+            return self.chunk.payload
+        raise ValueError(f"expected one input, have {sorted(self.inputs)}")
+
+
+@dataclass
+class _LaneState:
+    spec: LaneSpec
+    thread: Optional[threading.Thread] = None
+    memory: Optional[DeviceMemory] = None
+    busy_seconds: float = 0.0
+    executed: int = 0
+    # Prefetch double-buffer: next tuple whose inputs are being uploaded.
+    staged: "queue.Queue[tuple[OperationInstance, threading.Event]]" = field(
+        default_factory=lambda: queue.Queue(maxsize=1)
+    )
+
+
+class WorkerRuntime:
+    """Executes stage instances over heterogeneous lanes."""
+
+    def __init__(
+        self,
+        worker_id: int = 0,
+        lanes: tuple[LaneSpec, ...] = (LaneSpec(HOST_KIND, 0),),
+        *,
+        policy: str = "fcfs",
+        locality: bool = False,
+        prefetch: bool = False,
+        speedups_known: bool = True,
+        variant_registry: VariantRegistry | None = None,
+        on_stage_complete: Callable[[StageInstance, dict[str, Any]], None] | None = None,
+        observe_runtimes: bool = True,
+        on_heartbeat=None,
+    ) -> None:
+        self.worker_id = worker_id
+        self.on_heartbeat = on_heartbeat
+        self.registry = variant_registry or global_registry
+        self.scheduler = ReadyScheduler(
+            policy=policy, locality=locality, speedups_known=speedups_known
+        )
+        self.prefetch = prefetch
+        self.locality = locality
+        self.observe_runtimes = observe_runtimes
+        self.on_stage_complete = on_stage_complete
+
+        self._lanes = [
+            _LaneState(
+                spec=s,
+                memory=DeviceMemory(s.memory_slots) if s.kind != HOST_KIND else None,
+            )
+            for s in lanes
+        ]
+        self._lock = threading.RLock()
+        self._work_ready = threading.Condition(self._lock)
+        self._stop = False
+        self._failed = False
+
+        # Execution state.
+        self._op_outputs: dict[int, Any] = {}      # uid -> host-resident output
+        self._op_done: set[int] = set()
+        self._cancelled: set[int] = set()
+        self._stages: dict[int, StageInstance] = {}
+        self.completion_order: list[int] = []
+        self.errors: list[tuple[int, BaseException]] = []
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        for lane in self._lanes:
+            t = threading.Thread(
+                target=self._lane_loop, args=(lane,), daemon=True,
+                name=f"worker{self.worker_id}-{lane.spec.kind}{lane.spec.index}",
+            )
+            lane.thread = t
+            t.start()
+
+    def stop(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._work_ready.notify_all()
+        for lane in self._lanes:
+            if lane.thread is not None:
+                lane.thread.join(timeout=5.0)
+
+    def kill(self) -> None:
+        """Simulate a node failure: lanes stop, state is lost."""
+        with self._lock:
+            self._failed = True
+            self._stop = True
+            self._work_ready.notify_all()
+
+    @property
+    def alive(self) -> bool:
+        return not self._failed
+
+    # -- submission -----------------------------------------------------------
+
+    def submit_stage(self, si: StageInstance) -> None:
+        """Lease received from the Manager: export fine-grain ops."""
+        with self._lock:
+            self._stages[si.uid] = si
+            for oi in si.op_instances:
+                self._maybe_estimate(oi)
+                if oi.deps.issubset(self._op_done) and oi.uid not in self._op_done:
+                    self.scheduler.push(oi)
+            self._work_ready.notify_all()
+
+    def provide_input(self, uid: int, value: Any) -> None:
+        """Host-side injection of upstream outputs (cross-worker flow)."""
+        with self._lock:
+            self._op_outputs[uid] = value
+            self._op_done.add(uid)
+
+    def cancel_stage(self, si_uid: int) -> None:
+        with self._lock:
+            si = self._stages.get(si_uid)
+            if si is None:
+                return
+            for oi in si.op_instances:
+                if oi.uid not in self._op_done:
+                    self._cancelled.add(oi.uid)
+
+    def _maybe_estimate(self, oi: OperationInstance) -> None:
+        try:
+            var = self.registry.get(oi.op.variant_name)
+        except KeyError:
+            return
+        accel_kinds = {l.spec.kind for l in self._lanes} - {HOST_KIND}
+        kind = next(iter(accel_kinds)) if accel_kinds else HOST_KIND
+        oi.speedup = var.estimate_speedup(kind, oi.chunk.meta)
+        oi.transfer_impact = var.transfer_impact
+
+    # -- idle / completion tracking -----------------------------------------
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Block until all submitted work completed (or timeout)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                pending = any(
+                    oi.uid not in self._op_done and oi.uid not in self._cancelled
+                    for si in self._stages.values()
+                    for oi in si.op_instances
+                )
+                if self.errors:
+                    return False
+                if not pending:
+                    return True
+            time.sleep(0.002)
+        return False
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "profile": self.scheduler.stats.profile(),
+            "reuse_hits": self.scheduler.stats.reuse_hits,
+            "reuse_misses": self.scheduler.stats.reuse_misses,
+            "lane_busy": {
+                f"{l.spec.kind}{l.spec.index}": l.busy_seconds for l in self._lanes
+            },
+            "executed": sum(l.executed for l in self._lanes),
+            "uploads": sum(
+                l.memory.uploads for l in self._lanes if l.memory is not None
+            ),
+            "downloads": sum(
+                l.memory.downloads for l in self._lanes if l.memory is not None
+            ),
+        }
+
+    def output_of(self, oi_uid: int) -> Any:
+        with self._lock:
+            return self._op_outputs.get(oi_uid)
+
+    # -- lane main loop -----------------------------------------------------------
+
+    def _lane_loop(self, lane: _LaneState) -> None:
+        while True:
+            with self._lock:
+                while not self._stop and not self.scheduler:
+                    self._work_ready.wait(timeout=0.25)
+                if self._stop:
+                    return
+                resident = (
+                    lane.memory.resident_uids()
+                    if lane.memory is not None and self.locality
+                    else None
+                )
+                oi = self.scheduler.pop(lane.spec.kind, resident)
+            if oi is None:
+                continue
+            if oi.uid in self._cancelled or oi.uid in self._op_done:
+                continue
+            try:
+                self._run_op(lane, oi)
+            except BaseException as exc:  # noqa: BLE001 - recorded, not raised
+                with self._lock:
+                    self.errors.append((oi.uid, exc))
+                    self._work_ready.notify_all()
+
+    def _run_op(self, lane: _LaneState, oi: OperationInstance) -> None:
+        t0 = time.perf_counter()
+        inputs = self._gather_inputs(lane, oi)
+        ctx = OpContext(chunk=oi.chunk, inputs=inputs, lane_kind=lane.spec.kind)
+        impl = self.registry.get(oi.op.variant_name).implementation(lane.spec.kind)
+        out = impl(ctx)
+        elapsed = time.perf_counter() - t0
+        lane.busy_seconds += elapsed
+        lane.executed += 1
+        if self.observe_runtimes:
+            self.registry.get(oi.op.variant_name).observe_runtime(
+                lane.spec.kind, elapsed
+            )
+        self._commit(lane, oi, out)
+
+    def _gather_inputs(self, lane: _LaneState, oi: OperationInstance) -> dict[str, Any]:
+        """Upload phase: pull dep outputs into this lane's memory."""
+        inputs: dict[str, Any] = {}
+        with self._lock:
+            dep_objs = [
+                (uid, self._op_outputs.get(uid)) for uid in sorted(oi.deps)
+            ]
+        for uid, value in dep_objs:
+            if value is None:
+                continue
+            name = self._dep_name(oi, uid)
+            if lane.memory is not None:
+                if uid not in lane.memory:
+                    lane.memory.uploads += 1
+                    lane.memory.put(uid, value)
+                inputs[name] = lane.memory.get(uid)
+            else:
+                inputs[name] = value
+        return inputs
+
+    def _dep_name(self, oi: OperationInstance, dep_uid: int) -> str:
+        si = oi.stage_instance
+        for other in si.op_instances:
+            if other.uid == dep_uid:
+                return other.op.name
+        # Cross-stage dep: find in any known stage.
+        for s in self._stages.values():
+            for other in s.op_instances:
+                if other.uid == dep_uid:
+                    return other.op.name
+        return f"dep_{dep_uid}"
+
+    def _commit(self, lane: _LaneState, oi: OperationInstance, out: Any) -> None:
+        with self._lock:
+            if lane.memory is not None:
+                lane.memory.put(oi.uid, out)
+                if not self.locality:
+                    lane.memory.downloads += 1  # basic mode: always download
+            self._op_outputs[oi.uid] = out  # host copy (download / write-back)
+            self._op_done.add(oi.uid)
+            self.completion_order.append(oi.uid)
+            if self.on_heartbeat is not None:
+                self.on_heartbeat(self.worker_id)
+            si = oi.stage_instance
+            for dep_uid in sorted(oi.dependents):
+                d = self._find_op(dep_uid)
+                if (
+                    d is not None
+                    and d.deps.issubset(self._op_done)
+                    and dep_uid not in self._op_done
+                    and dep_uid not in self._cancelled
+                ):
+                    self._maybe_estimate(d)
+                    self.scheduler.push(d)
+            stage_done = all(
+                o.uid in self._op_done or o.uid in self._cancelled
+                for o in si.op_instances
+            )
+            self._work_ready.notify_all()
+        if stage_done and self.on_stage_complete is not None:
+            outputs = {
+                o.op.name: self._op_outputs.get(o.uid) for o in si.op_instances
+            }
+            self.on_stage_complete(si, outputs)
+
+    def _find_op(self, uid: int) -> Optional[OperationInstance]:
+        for s in self._stages.values():
+            for oi in s.op_instances:
+                if oi.uid == uid:
+                    return oi
+        return None

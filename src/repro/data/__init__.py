@@ -1,0 +1,14 @@
+"""Data plane: demand-driven chunk leasing + double-buffered loading.
+
+This is the paper's bag-of-tasks Manager applied to the training data
+plane: the dataset is an addressable space of idempotent *chunks*
+(chunk = pure function of (seed, chunk_id)), a ledger leases chunk
+ranges to workers demand-driven with heartbeats and re-leasing, and a
+prefetching loader keeps the next batch device-resident while the
+current step runs (§IV-D's async copy, host->HBM edition).
+"""
+
+from .ledger import ChunkLedger, Lease
+from .loader import PrefetchLoader, TokenChunkSource
+
+__all__ = ["ChunkLedger", "Lease", "PrefetchLoader", "TokenChunkSource"]

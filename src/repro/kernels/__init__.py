@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the compute hot-spots (paper Table I + LM zoo).
+
+Each kernel module holds the ``pl.pallas_call`` + BlockSpec tiling;
+``ops.py`` exposes the jit'd wrappers and backend dispatch; ``ref.py``
+holds the pure-jnp oracles the kernels are validated against.
+"""
+
+from .ops import (
+    color_deconv,
+    decode_attention,
+    flash_attention,
+    mamba2_chunk_scan,
+    morph_recon,
+    on_tpu,
+    sobel_stats,
+)
+
+__all__ = [
+    "color_deconv",
+    "decode_attention",
+    "flash_attention",
+    "mamba2_chunk_scan",
+    "morph_recon",
+    "on_tpu",
+    "sobel_stats",
+]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: single-token decode attention over a KV cache.
+
+Decode attention is HBM-bandwidth bound: one query row streams the
+whole cache.  The kernel blocks over cache length (innermost,
+sequential) with online-softmax scratch, maps GQA query heads onto
+their kv head through the BlockSpec index map (no materialized
+``repeat``), and masks beyond the per-sequence valid length so a
+batch of ragged requests shares one compiled kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_NEG_INF = -1.0e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, bk):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+
+    @pl.when(ik * bk < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)        # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)     # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)     # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                               # (1, bk)
+        pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(pos < length, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_pallas(
+    q: jnp.ndarray,          # (B, Hq, D)
+    k: jnp.ndarray,          # (B, Hkv, S, D)
+    v: jnp.ndarray,          # (B, Hkv, S, D)
+    lengths: jnp.ndarray,    # (B,) int32 valid cache length
+    *,
+    block_k: int = 256,
+    interpret: bool = True,
+):
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bk = min(block_k, s)
+    if s % bk:
+        raise ValueError(f"cache length {s} not divisible by block {bk}")
+    grid = (b, hq, s // bk)
+    scale = 1.0 / np.sqrt(d)
+    lengths2 = lengths.astype(jnp.int32).reshape(b, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, k_: (b_, 0)),
+            pl.BlockSpec((1, 1, d), lambda b_, h_, k_: (b_, h_, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, k_: (b_, h_ // group, k_, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, k_: (b_, h_ // group, k_, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h_, k_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths2, q, k, v)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Mamba2 (SSD) inter-chunk state recurrence.
+
+The SSD formulation splits a length-L sequence into chunks: intra-chunk
+terms are dense matmuls (left to the MXU via XLA); what remains is the
+strictly sequential inter-chunk recurrence over states
+
+    s_{c+1} = decay_c * s_c + inc_c            s_c in R^{H x (P*N)}
+
+This kernel walks the chunk grid sequentially with the running state in
+VMEM scratch, emitting the state *entering* every chunk (needed by the
+intra-chunk output correction) and the final state (for streaming /
+decode).  The (P*N) state is kept flattened so the lane dimension is a
+multiple of 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba2_chunk_scan_pallas"]
+
+
+def _kernel(decay_ref, inc_ref, states_ref, final_ref, s_ref):
+    c = pl.program_id(0)
+    nc = pl.num_programs(0)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s = s_ref[...]
+    states_ref[0] = s.astype(states_ref.dtype)     # state entering chunk c
+    decay = decay_ref[0]                           # (H,)
+    inc = inc_ref[0]                               # (H, F)
+    s_new = decay[:, None] * s + inc.astype(jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(c == nc - 1)
+    def _final():
+        final_ref[...] = s_new.astype(final_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba2_chunk_scan_pallas(
+    decay: jnp.ndarray,   # (C, H) per-chunk state decay
+    inc: jnp.ndarray,     # (C, H, F) per-chunk state increment, F = P*N
+    *,
+    interpret: bool = True,
+):
+    c, h, f = inc.shape
+    states, final = pl.pallas_call(
+        _kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, f), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, h, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((c, h, f), inc.dtype),
+            jax.ShapeDtypeStruct((h, f), inc.dtype),
+        ),
+        scratch_shapes=[pltpu.VMEM((h, f), jnp.float32)],
+        interpret=interpret,
+    )(decay, inc)
+    return states, final

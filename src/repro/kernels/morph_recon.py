@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: morphological reconstruction (block-synchronous).
+
+The paper's GPU implementation uses hierarchical queues and wave
+propagation — data-dependent control flow that is hostile to the TPU's
+VPU.  TPU-native rethink: *block-synchronous iterated geodesic
+dilation*.  The image is cut into full-width row stripes; each stripe
+runs ``inner_iters`` local 8-connected max-propagation sweeps clamped
+by the mask entirely in VMEM, exchanging one halo row with its
+neighbours per outer sweep.  An SMEM-style change flag per stripe lets
+the host ``lax.while_loop`` stop at the global fixpoint, which equals
+Vincent's sequential reconstruction (the fixpoint is unique and
+propagation order only affects the iteration count).
+
+Stripes keep the lane dimension = image width (multiple of 128), so
+every vector op is fully populated.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["morph_recon_pallas", "morph_recon_step"]
+
+_NEG = -3.0e38  # effectively -inf for f32 image data
+
+
+def _dilate8_in_block(x: jnp.ndarray) -> jnp.ndarray:
+    """8-connected max over a (rows, W) tile; -inf beyond all edges."""
+    p = jnp.pad(x, ((1, 1), (1, 1)), constant_values=_NEG)
+    r, w = x.shape
+    out = x
+    for dy in range(3):
+        for dx in range(3):
+            out = jnp.maximum(out, jax.lax.dynamic_slice(p, (dy, dx), (r, w)))
+    return out
+
+
+def _kernel(up_ref, c_ref, dn_ref, mask_ref, out_ref, changed_ref, *, inner_iters):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    c = c_ref[...]
+    mask = mask_ref[...]
+    w = c.shape[1]
+    neg_row = jnp.full((1, w), _NEG, c.dtype)
+    up_row = jnp.where(i == 0, neg_row, up_ref[...][-1:, :])
+    dn_row = jnp.where(i == n - 1, neg_row, dn_ref[...][:1, :])
+
+    def sweep(_, ext):
+        d = _dilate8_in_block(ext)
+        # Only interior (center-stripe) rows are updated; halo rows stay
+        # fixed until the next outer exchange.
+        new_c = jnp.minimum(d[1:-1, :], mask)
+        return jnp.concatenate([ext[:1], new_c, ext[-1:]], axis=0)
+
+    ext0 = jnp.concatenate([up_row, c, dn_row], axis=0)
+    ext = jax.lax.fori_loop(0, inner_iters, sweep, ext0)
+    new_c = ext[1:-1, :]
+    out_ref[...] = new_c
+    changed_ref[0, 0] = jnp.any(new_c != c).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("stripe", "inner_iters", "interpret"))
+def morph_recon_step(
+    marker: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    stripe: int = 128,
+    inner_iters: int = 16,
+    interpret: bool = True,
+):
+    """One outer block-synchronous sweep. Returns (new_marker, changed)."""
+    h, w = marker.shape
+    bh = min(stripe, h)
+    if h % bh:
+        raise ValueError(f"height {h} not divisible by stripe {bh}")
+    n = h // bh
+    clamp = lambda i: jnp.clip(i, 0, n - 1)
+    new_marker, changed = pl.pallas_call(
+        functools.partial(_kernel, inner_iters=inner_iters),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((bh, w), lambda i: (clamp(i - 1), 0)),  # up stripe
+            pl.BlockSpec((bh, w), lambda i: (i, 0)),             # center
+            pl.BlockSpec((bh, w), lambda i: (clamp(i + 1), 0)),  # down stripe
+            pl.BlockSpec((bh, w), lambda i: (i, 0)),             # mask
+        ],
+        out_specs=(
+            pl.BlockSpec((bh, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), marker.dtype),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(marker, marker, marker, mask)
+    return new_marker, jnp.any(changed > 0)
+
+
+@functools.partial(jax.jit, static_argnames=("stripe", "inner_iters", "interpret"))
+def morph_recon_pallas(
+    marker: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    stripe: int = 128,
+    inner_iters: int = 16,
+    interpret: bool = True,
+):
+    """Run block-synchronous sweeps to the global fixpoint."""
+    marker = jnp.minimum(marker.astype(jnp.float32), mask.astype(jnp.float32))
+    mask = mask.astype(jnp.float32)
+
+    def cond(s):
+        _, changed = s
+        return changed
+
+    def body(s):
+        m, _ = s
+        return morph_recon_step(
+            m, mask, stripe=stripe, inner_iters=inner_iters, interpret=interpret
+        )
+
+    out, _ = jax.lax.while_loop(cond, body, (marker, jnp.array(True)))
+    return out

@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the kernels must match
+(asserted across shape/dtype sweeps in ``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "color_deconv_ref",
+    "morph_recon_ref",
+    "sobel_stats_ref",
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "mamba2_chunk_scan_ref",
+    "DECONV_MATRIX",
+]
+
+# Ruifrok & Johnston H&E(+residual); rows = stain OD vectors.
+_STAINS = np.array(
+    [
+        [0.650, 0.704, 0.286],
+        [0.072, 0.990, 0.105],
+        [0.268, 0.570, 0.776],
+    ],
+    dtype=np.float32,
+)
+DECONV_MATRIX = np.linalg.inv(_STAINS.T).astype(np.float32)
+
+
+def color_deconv_ref(r: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray):
+    """(H,W)x3 uint8/float planes -> 3 stain-density planes."""
+    od = lambda x: -jnp.log10((x.astype(jnp.float32) + 1.0) / 256.0)
+    odr, odg, odb = od(r), od(g), od(b)
+    m = DECONV_MATRIX
+    hema = m[0, 0] * odr + m[0, 1] * odg + m[0, 2] * odb
+    eosin = m[1, 0] * odr + m[1, 1] * odg + m[1, 2] * odb
+    resid = m[2, 0] * odr + m[2, 1] * odg + m[2, 2] * odb
+    return hema, eosin, resid
+
+
+def _dilate8(a: jnp.ndarray) -> jnp.ndarray:
+    init = (
+        jnp.array(-jnp.inf, a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else jnp.array(jnp.iinfo(a.dtype).min, a.dtype)
+    )
+    return jax.lax.reduce_window(a, init, jax.lax.max, (3, 3), (1, 1), "SAME")
+
+
+def morph_recon_ref(marker: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Grayscale morphological reconstruction (8-conn geodesic fixpoint)."""
+
+    def cond(s):
+        r, changed = s
+        return changed
+
+    def body(s):
+        r, _ = s
+        nxt = jnp.minimum(_dilate8(r), mask)
+        return nxt, jnp.any(nxt != r)
+
+    r0 = jnp.minimum(marker, mask)
+    r, _ = jax.lax.while_loop(cond, body, (r0, jnp.array(True)))
+    return r
+
+
+def sobel_stats_ref(gray: jnp.ndarray):
+    """Sobel |grad| (edge-replicated) + moment sums (sum, sumsq, max)."""
+    g = gray.astype(jnp.float32)
+    p = jnp.pad(g, 1, mode="edge")
+    sl = lambda dy, dx: jax.lax.dynamic_slice(p, (dy, dx), g.shape)
+    gx = (
+        -1 * sl(0, 0) + 1 * sl(0, 2)
+        - 2 * sl(1, 0) + 2 * sl(1, 2)
+        - 1 * sl(2, 0) + 1 * sl(2, 2)
+    )
+    gy = (
+        -1 * sl(0, 0) - 2 * sl(0, 1) - 1 * sl(0, 2)
+        + 1 * sl(2, 0) + 2 * sl(2, 1) + 1 * sl(2, 2)
+    )
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    stats = jnp.stack([mag.sum(), (mag * mag).sum(), mag.max()])
+    return mag, stats
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
+    """(B, H, S, D) attention with optional causal mask; fp32 softmax."""
+    b, h, s, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q: (B, Hq, D); k/v: (B, Hkv, S, D); lengths: (B,) valid cache len.
+    GQA: query head i reads kv head ``i // (Hq // Hkv)``.
+    """
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1)  # (B, Hq, S, D)
+    vq = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) * scale
+    s = k.shape[2]
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba2_chunk_scan_ref(decay: jnp.ndarray, inc: jnp.ndarray):
+    """Inter-chunk SSD state recurrence.
+
+    decay: (C, H) per-chunk state decay; inc: (C, H, F) per-chunk state
+    increment (F = P*N flattened).  Returns states *entering* each chunk
+    (C, H, F) and the final state (H, F):
+
+        s_0 = 0;  s_{c+1} = decay_c * s_c + inc_c
+    """
+
+    def step(s, x):
+        d, i = x
+        out = s  # state entering this chunk
+        s = d[:, None] * s + i
+        return s, out
+
+    c, h, f = inc.shape
+    s0 = jnp.zeros((h, f), inc.dtype)
+    final, outs = jax.lax.scan(step, s0, (decay, inc))
+    return outs, final

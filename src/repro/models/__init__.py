@@ -1,0 +1,16 @@
+"""LM model zoo: the 10 assigned architectures as selectable configs."""
+
+from .config import ArchConfig, reduced
+from .model import Model, build_model
+from .plan import AttentionPlan, ShardingPlan, make_plan, plan_attention
+
+__all__ = [
+    "ArchConfig",
+    "AttentionPlan",
+    "Model",
+    "ShardingPlan",
+    "build_model",
+    "make_plan",
+    "plan_attention",
+    "reduced",
+]

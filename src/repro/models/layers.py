@@ -1,0 +1,91 @@
+"""Shared model layers: norms, RoPE, embeddings, initializers."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Params",
+    "dense_init",
+    "rmsnorm",
+    "layernorm",
+    "init_norm",
+    "apply_norm",
+    "rope_freqs",
+    "apply_rope",
+    "embed_init",
+    "gelu",
+    "swish",
+]
+
+Params = dict[str, Any]
+
+_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(kind: str, d: int) -> Params:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"], eps)
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, head_dim); positions: (S,) or broadcastable (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swish(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)

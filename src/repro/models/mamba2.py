@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) block — chunked state-space duality formulation.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+quadratic (attention-like) term is dense matmul work for the MXU; the
+inter-chunk state recurrence is the sequential part (the Pallas kernel
+``kernels/mamba2_scan.py`` on TPU; here it is the carry of the same
+``lax.scan`` that walks the chunks, producing identical math).  Decode
+carries (conv window, SSD state) and costs O(1) per token — this is
+what makes ``long_500k`` tractable for the hybrid/SSM archs.
+
+Layout notes: heads H = d_inner / P with P = ``ssm_head_dim``; a single
+B/C group is shared across heads (n_groups = 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, rmsnorm, swish
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_train",
+    "mamba2_decode",
+    "init_mamba2_cache",
+    "mamba2_dims",
+]
+
+
+def mamba2_dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    n_state = cfg.ssm_state
+    conv_dim = d_inner + 2 * n_state
+    return d_inner, n_heads, n_state, conv_dim
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_inner, nh, n, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n + nh  # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj)),
+        "conv_w": dense_init(ks[1], (conv_dim, cfg.ssm_conv_width)) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d), fan_in=d_inner),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    d_inner, nh, n, _ = mamba2_dims(cfg)
+    z, xc, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1,
+    )
+    return z, xc, b, c, dt
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None):
+    """Depthwise causal conv.  seq: (B, L, C); w: (C, W)."""
+    bsz, l, c = seq.shape
+    width = w.shape[1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, width - 1, c), seq.dtype)
+    padded = jnp.concatenate([init_state, seq], axis=1)
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(width):
+        out = out + padded[:, i : i + l, :].astype(jnp.float32) * w[:, i]
+    out = out + b
+    new_state = padded[:, l:, :]  # last (W-1) inputs
+    return swish(out).astype(seq.dtype), new_state
+
+
+def _ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD.  x: (B,L,H,P); dt: (B,L,H); a_log = dt*A (B,L,H);
+    b, c: (B,L,N).  Returns y (B,L,H,P) and the final state (B,H,P,N)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0
+    nc = l // q
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    alc = a_log.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    tril = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    def chunk_step(state, inp):
+        xq, dtq, alq, bq, cq = inp  # (B,q,...)
+        cl = jnp.cumsum(alq, axis=1)                      # (B,q,H)
+        xdt = xq * dtq[..., None]                         # (B,q,H,P)
+        # Intra-chunk (attention-like) term.
+        lmat = jnp.exp(
+            jnp.clip(cl[:, :, None, :] - cl[:, None, :, :], -60.0, 0.0)
+        ) * tril[None, :, :, None]                        # (B,q,q,H)
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq)       # (B,q,q)
+        y_intra = jnp.einsum(
+            "bqk,bqkh,bkhp->bqhp", scores, lmat, xdt
+        )
+        # Contribution of the state entering this chunk.
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, state) * jnp.exp(
+            cl
+        )[..., None]
+        # State recurrence (the Pallas mamba2_scan on TPU).
+        rev = jnp.exp(cl[:, -1:, :] - cl)                 # (B,q,H)
+        inc = jnp.einsum("bqn,bqhp,bqh->bhpn", bq, xdt, rev)
+        state = jnp.exp(cl[:, -1])[:, :, None, None] * state + inc
+        return state, y_intra + y_inter
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = tuple(
+        arr.transpose(1, 0, *range(2, arr.ndim))
+        for arr in (xc, dtc, alc, bc, cc)
+    )
+    final, yb = jax.lax.scan(chunk_step, s0, xs)
+    y = yb.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, p)
+    return y, final
+
+
+def mamba2_train(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                 chunk: int = 128, return_state: bool = False):
+    """x: (B, L, D) -> (B, L, D)  [+ decode cache when return_state]."""
+    bsz, l, d = x.shape
+    d_inner, nh, n, conv_dim = mamba2_dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xc, b, c, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                       # (H,) negative
+    a_log = dt * a                                 # log decay per step
+    xh = xc.reshape(bsz, l, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    y, final = _ssd_chunked(xh, dt, a_log, b.astype(jnp.float32),
+                            c.astype(jnp.float32), chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rmsnorm(y * swish(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, {"conv": conv_state.astype(jnp.float32), "ssm": final}
+    return out
+
+
+def init_mamba2_cache(batch: int, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d_inner, nh, n, conv_dim = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, cache: Params, cfg: ArchConfig):
+    """One-token step.  x: (B, 1, D)."""
+    bsz, _, d = x.shape
+    d_inner, nh, n, conv_dim = mamba2_dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xc, b, c, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], cache["conv"].astype(conv_in.dtype)
+    )
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                   # (B,H)
+    xh = xc[:, 0].reshape(bsz, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                  # (B,H,P)
+    inc = jnp.einsum("bn,bhp->bhpn", b[:, 0].astype(jnp.float32), xdt)
+    state = decay[:, :, None, None] * cache["ssm"] + inc
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * swish(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": state}

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU / GeLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, gelu, swish
+
+__all__ = ["init_mlp", "apply_mlp"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "w_up": dense_init(ks[0], (d_model, d_ff)),
+        "w_down": dense_init(ks[1], (d_ff, d_model), fan_in=d_ff),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = x @ p["w_up"].astype(x.dtype)
+    if act == "swiglu":
+        gate = x @ p["w_gate"].astype(x.dtype)
+        h = swish(gate) * up
+    else:
+        h = gelu(up)
+    return h @ p["w_down"].astype(x.dtype)

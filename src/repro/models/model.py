@@ -1,0 +1,62 @@
+"""Model facade: config + sharding plan -> init/train/decode/prefill."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from .config import ArchConfig
+from .plan import ShardingPlan, make_plan
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    plan: ShardingPlan
+
+    def init(self, rng) -> Any:
+        return T.init_model_params(rng, self.cfg, self.plan)
+
+    def init_shapes(self, rng=None) -> Any:
+        """Parameter ShapeDtypeStructs without allocating (dry-run)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(
+            lambda r: T.init_model_params(r, self.cfg, self.plan), rng
+        )
+
+    def train_forward(self, params, inputs: dict, remat: bool = True):
+        return T.train_forward(params, inputs, self.cfg, remat)
+
+    def decode_step(self, params, caches, tokens, lengths):
+        return T.decode_step(params, caches, tokens, lengths, self.cfg)
+
+    def init_caches(self, batch: int, max_len: int):
+        return T.init_caches(self.cfg, batch, max_len, self.plan)
+
+    def prefill(self, params, inputs: dict, max_len: int):
+        return T.prefill(params, inputs, self.cfg, max_len, self.plan)
+
+    def loss_fn(self, params, inputs: dict, aux_weight: float = 0.01):
+        """Causal LM loss: inputs["tokens"] (B, S); predicts t+1."""
+        logits, aux = self.train_forward(params, inputs)
+        if "labels" in inputs:
+            labels = inputs["labels"]
+            logits_s = logits
+        else:
+            labels = inputs["tokens"][:, 1:]
+            logits_s = logits[:, :-1]
+        logp = jax.nn.log_softmax(logits_s, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+def build_model(cfg: ArchConfig, plan: ShardingPlan | None = None) -> Model:
+    return Model(cfg=cfg, plan=plan or make_plan(cfg))

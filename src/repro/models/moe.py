@@ -1,0 +1,95 @@
+"""Mixture-of-Experts with sort-free capacity dispatch (EP-shardable).
+
+Top-k routing with per-expert capacity.  Dispatch uses rank-in-expert
+computed from a cumulative one-hot sum — O(tokens x experts) int work —
+then a scatter into (E, C, D) expert buffers and batched expert
+matmuls, so expert compute is a dense (E, C, F) einsum that shards over
+the expert axis (expert parallelism = the ``model`` mesh axis).  Tokens
+over capacity are dropped (standard Switch-style), weighted-combined on
+the way back.
+
+Arctic's dense-MoE hybrid (``moe_dense_residual``) adds a parallel
+dense FFN to every MoE block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, swish, gelu
+
+__all__ = ["init_moe", "apply_moe", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "router": dense_init(ks[0], (d, e)),
+        "w_up": dense_init(ks[1], (e, d, f)),
+        "w_gate": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d), fan_in=f),
+    }
+    return p
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(n, cfg)
+    xt = x.reshape(n, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (n, e)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (n, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # Load-balancing auxiliary loss (Switch): e * sum(f_i * p_i).
+    onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(onehot_top1.mean(0) * probs.mean(0))
+
+    # Rank of each (token, slot) within its expert, in token order.
+    flat_ids = expert_ids.reshape(-1)                          # (n*k,)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)      # (n*k, e)
+    ranks = (jnp.cumsum(onehot, axis=0) - onehot)              # before me
+    rank_in_e = jnp.take_along_axis(
+        ranks, flat_ids[:, None], axis=1
+    )[:, 0]                                                    # (n*k,)
+    keep = rank_in_e < cap
+
+    # Scatter tokens into (E, C, D) buffers.
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0)                            # (n*k, d)
+    slot = jnp.where(keep, rank_in_e, cap - 1)
+    buf = buf.at[flat_ids, slot].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype)
+    )
+
+    # Expert computation: batched SwiGLU/GeLU over (E, C, ...).
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    if cfg.act == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+        h = swish(gate) * up
+    else:
+        h = gelu(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # Gather back and combine with gate weights.
+    gathered = out_buf[flat_ids, slot]                         # (n*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (
+        gathered.reshape(n, k, d)
+        * gate_vals[..., None].astype(x.dtype)
+    ).sum(axis=1)
+    return y.reshape(b, s, d), aux

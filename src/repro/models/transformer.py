@@ -1,0 +1,575 @@
+"""Block assembly and whole-model forward/decode for every family.
+
+Uniform stacks (dense/moe/vlm/audio) scan over layer-stacked params so
+the lowered HLO stays one-block-sized regardless of depth (critical for
+512-device dry-run compile times).  Hybrid patterns (zamba2's shared
+attention block, xlstm's mLSTM/sLSTM interleave) compose scans with
+explicitly-placed blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import xlstm as X
+from .attention import (
+    attention_decode,
+    attention_train,
+    cross_kv,
+    init_attention,
+    init_kv_cache,
+)
+from .config import ArchConfig
+from .layers import Params, apply_norm, dense_init, embed_init, init_norm
+from .mamba2 import (
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_decode,
+    mamba2_train,
+)
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .plan import AttentionPlan, ShardingPlan, plan_attention
+
+__all__ = ["init_model_params", "train_forward", "decode_step",
+           "init_caches", "prefill"]
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: ArchConfig, plan: AttentionPlan) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln1": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(k1, cfg, plan),
+        "ln2": init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.n_experts:
+        p["moe"] = init_moe(k2, cfg)
+        if cfg.moe_dense_residual:
+            p["mlp"] = init_mlp(jax.random.fold_in(k2, 1), cfg.d_model,
+                                cfg.d_ff, cfg.act)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _dense_block_train(p: Params, x, cfg: ArchConfig, *, causal=True):
+    h = apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    x = x + attention_train(p["attn"], h, cfg, causal=causal)
+    h = apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        y, aux = apply_moe(p["moe"], h, cfg)
+        if "mlp" in p:  # arctic dense residual
+            y = y + apply_mlp(p["mlp"], h, cfg.act)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, aux
+
+
+def _dense_block_decode(p: Params, x, cache, lengths, cfg: ArchConfig):
+    h = apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    a, cache = attention_decode(p["attn"], h, cache, lengths, cfg)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        y, _ = apply_moe(p["moe"], h, cfg)
+        if "mlp" in p:
+            y = y + apply_mlp(p["mlp"], h, cfg.act)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def _init_mamba_block(key, cfg: ArchConfig) -> Params:
+    return {
+        "ln": init_norm(cfg.norm, cfg.d_model),
+        "mamba": init_mamba2(key, cfg),
+    }
+
+
+def _mamba_block_train(p: Params, x, cfg: ArchConfig):
+    h = apply_norm(cfg.norm, p["ln"], x, cfg.norm_eps)
+    return x + mamba2_train(p["mamba"], h, cfg)
+
+
+def _mamba_block_decode(p: Params, x, cache, cfg: ArchConfig):
+    h = apply_norm(cfg.norm, p["ln"], x, cfg.norm_eps)
+    y, cache = mamba2_decode(p["mamba"], h, cache, cfg)
+    return x + y, cache
+
+
+# --------------------------------------------------------------------------
+# Stacking helpers + FSDP weight-gather context
+# --------------------------------------------------------------------------
+
+#: When set (see :func:`fsdp_gather`), layer parameters entering a scan
+#: body are constrained to their *gathered* sharding (data/FSDP axes
+#: dropped, TP axis kept).  GSPMD then all-gathers one layer's weights
+#: per scan step instead of all-reducing full activations on every
+#: matmul whose contraction dim is FSDP-sharded — the classic FSDP
+#: schedule.  Backward re-gathers inside the remat scope.
+_FSDP_GATHER: dict[str, Any] | None = None
+
+
+class fsdp_gather:
+    """Context manager: enable per-layer weight gathering during trace.
+
+    ``spec_map`` maps param-group name ("blocks", "enc_blocks",
+    "shared", "xl_blocks") to a PartitionSpec tree matching one layer's
+    (unstacked) params with FSDP axes removed.
+    """
+
+    def __init__(self, spec_map: dict[str, Any] | None):
+        self.spec_map = spec_map
+
+    def __enter__(self):
+        global _FSDP_GATHER
+        self._prev = _FSDP_GATHER
+        _FSDP_GATHER = self.spec_map
+        return self
+
+    def __exit__(self, *exc):
+        global _FSDP_GATHER
+        _FSDP_GATHER = self._prev
+        return False
+
+
+def _maybe_gather_xl(blk: Params, idx: int) -> Params:
+    if _FSDP_GATHER is None or "xl_blocks" not in _FSDP_GATHER:
+        return blk
+    return jax.tree.map(_gather_leaf, blk, _FSDP_GATHER["xl_blocks"][idx])
+
+
+def _gather_leaf(p, s):
+    # Cast matmul weights to bf16 *before* the gather so the all-gather
+    # moves half the bytes (the blocks consume them in bf16 anyway).
+    if p.dtype == jnp.float32 and p.ndim >= 2:
+        p = p.astype(jnp.bfloat16)
+    return jax.lax.with_sharding_constraint(p, s)
+
+
+def _maybe_gather(layer_params: Params, group: str) -> Params:
+    if _FSDP_GATHER is None or group not in _FSDP_GATHER:
+        return layer_params
+    specs = _FSDP_GATHER[group]
+    return jax.tree.map(_gather_leaf, layer_params, specs)
+
+
+def _maybe_constrain_act(x):
+    """Pin the residual stream to its batch sharding inside scans —
+    without this, GSPMD's fixpoint may resolve the scan carry to
+    *replicated* and then all-reduce full-batch activations on every
+    FSDP-sharded matmul (observed: 600+ GB/step on zamba2)."""
+    if _FSDP_GATHER is not None and "__act__" in _FSDP_GATHER:
+        return jax.lax.with_sharding_constraint(x, _FSDP_GATHER["__act__"])
+    return x
+
+
+def _stack_params(init_fn: Callable[[Any], Params], keys) -> Params:
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _scan_blocks(stacked: Params, x, body, remat: bool = True,
+                 group: str = "blocks"):
+    def gathered_body(layer_params, h):
+        h = _maybe_constrain_act(h)
+        return body(_maybe_gather(layer_params, group), h)
+
+    fn = jax.checkpoint(gathered_body) if remat else gathered_body
+
+    def step(carry, layer_params):
+        x, aux = carry
+        x, a = fn(layer_params, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def _scan_blocks_cached(stacked: Params, caches, x, body):
+    def step(x, pc):
+        layer_params, cache = pc
+        x, new_cache = body(layer_params, x, cache)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(step, x, (stacked, caches))
+    return x, new_caches
+
+
+# --------------------------------------------------------------------------
+# Model: parameters
+# --------------------------------------------------------------------------
+
+
+def _zamba_segments(cfg: ArchConfig) -> list[int]:
+    """Mamba-layer segment lengths between shared-attention applications."""
+    k = cfg.attn_every
+    segs, left = [], cfg.n_layers
+    while left > 0:
+        segs.append(min(k, left))
+        left -= k
+    return segs
+
+
+def init_model_params(rng, cfg: ArchConfig, plan: ShardingPlan | None = None) -> Params:
+    aplan = (plan.attention if plan and plan.attention
+             else plan_attention(cfg, 1))
+    keys = jax.random.split(rng, cfg.n_layers + 8)
+    d = cfg.d_model
+    p: Params = {}
+    # Token embedding table: used directly for text archs, and by the
+    # decoder of audio/vlm archs (their modality frontend is a stub).
+    p["embed"] = embed_init(keys[-1], cfg.vocab_size, d)
+    p["final_norm"] = init_norm(cfg.norm, d)
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(keys[-2], (d, cfg.vocab_size))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["blocks"] = _stack_params(
+            lambda k: _init_dense_block(k, cfg, aplan), keys[: cfg.n_layers]
+        )
+    elif fam == "hybrid":  # zamba2: mamba stack + one shared attn block
+        p["blocks"] = _stack_params(
+            lambda k: _init_mamba_block(k, cfg), keys[: cfg.n_layers]
+        )
+        p["shared"] = _init_dense_block(keys[-3], cfg, aplan)
+    elif fam == "ssm":  # xlstm: interleaved mLSTM/sLSTM, python loop
+        blocks = []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and i % cfg.slstm_every == 1:
+                blocks.append(
+                    {"kind_slstm": jnp.zeros(()),  # tag leaf (pytree-stable)
+                     "ln": init_norm(cfg.norm, d),
+                     "cell": X.init_slstm(keys[i], cfg)}
+                )
+            else:
+                blocks.append(
+                    {"ln": init_norm(cfg.norm, d),
+                     "cell": X.init_mlstm(keys[i], cfg)}
+                )
+        p["xl_blocks"] = blocks
+    elif fam == "audio":  # whisper enc-dec
+        enc_keys = jax.random.split(keys[-4], cfg.encoder_layers)
+        p["enc_blocks"] = _stack_params(
+            lambda k: _init_dense_block(k, cfg, aplan), enc_keys
+        )
+        p["enc_norm"] = init_norm(cfg.norm, d)
+        dec_keys = keys[: cfg.n_layers]
+
+        def init_dec(k):
+            k1, k2 = jax.random.split(k)
+            blk = _init_dense_block(k1, cfg, aplan)
+            blk["ln_x"] = init_norm(cfg.norm, d)
+            blk["xattn"] = init_attention(k2, cfg, aplan)
+            return blk
+
+        p["blocks"] = _stack_params(init_dec, dec_keys)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# --------------------------------------------------------------------------
+# Model: training forward
+# --------------------------------------------------------------------------
+
+
+def _embed_in(p: Params, cfg: ArchConfig, inputs: dict) -> jnp.ndarray:
+    if cfg.frontend == "none":
+        x = p["embed"][inputs["tokens"]]
+    else:
+        x = inputs["embeds"]  # precomputed patch/frame embeddings (stub)
+    return x.astype(jnp.bfloat16)
+
+
+def _lm_head(p: Params, cfg: ArchConfig, x) -> jnp.ndarray:
+    x = apply_norm(cfg.norm, p["final_norm"], x, cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def train_forward(p: Params, inputs: dict, cfg: ArchConfig,
+                  remat: bool = True):
+    """-> (logits (B,S,V) f32, aux scalar)."""
+    x = _embed_in(p, cfg, inputs)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        body = lambda lp, h: _dense_block_train(lp, h, cfg)
+        x, aux = _scan_blocks(p["blocks"], x, body, remat)
+    elif fam == "hybrid":
+        aux = jnp.zeros((), jnp.float32)
+        off = 0
+        segs = _zamba_segments(cfg)
+        for si, seg in enumerate(segs):
+            sub = jax.tree.map(lambda a: a[off : off + seg], p["blocks"])
+            body = lambda lp, h: (_mamba_block_train(lp, h, cfg),
+                                  jnp.zeros((), jnp.float32))
+            x, _ = _scan_blocks(sub, x, body, remat)
+            off += seg
+            if si < len(segs) - 1:
+                x, a = _dense_block_train(
+                    _maybe_gather(p["shared"], "shared"), x, cfg
+                )
+                aux = aux + a
+    elif fam == "ssm":
+        aux = jnp.zeros((), jnp.float32)
+        for i, blk in enumerate(p["xl_blocks"]):
+            blk = _maybe_gather_xl(blk, i)
+            x = _maybe_constrain_act(x)
+            h = apply_norm(cfg.norm, blk["ln"], x, cfg.norm_eps)
+            if "kind_slstm" in blk:
+                x = x + X.slstm_train(blk["cell"], h, cfg)
+            else:
+                x = x + X.mlstm_train(blk["cell"], h, cfg)
+    elif fam == "audio":
+        aux = jnp.zeros((), jnp.float32)
+        enc = inputs["embeds"].astype(jnp.bfloat16)  # (B, frames, D)
+        body = lambda lp, h: _dense_block_train(lp, h, cfg, causal=False)
+        enc, _ = _scan_blocks(p["enc_blocks"], enc, body, remat,
+                              group="enc_blocks")
+        enc = apply_norm(cfg.norm, p["enc_norm"], enc, cfg.norm_eps)
+        x = p["embed"][inputs["tokens"]].astype(jnp.bfloat16)
+
+        def dec_body(lp, h):
+            h, a = _dense_block_train(lp, h, cfg)
+            hx = apply_norm(cfg.norm, lp["ln_x"], h, cfg.norm_eps)
+            kv = cross_kv(lp["xattn"], enc)
+            h = h + attention_train(
+                lp["xattn"], hx, cfg, causal=False, kv_override=kv
+            )
+            return h, a
+
+        x, aux = _scan_blocks(p["blocks"], x, dec_body, remat)
+    else:
+        raise ValueError(fam)
+    return _lm_head(p, cfg, x), aux
+
+
+# --------------------------------------------------------------------------
+# Model: caches / decode / prefill
+# --------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                plan: ShardingPlan | None = None) -> Params:
+    aplan = (plan.attention if plan and plan.attention
+             else plan_attention(cfg, 1))
+    fam = cfg.family
+    stack = lambda one: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one
+    )
+    if fam in ("dense", "moe", "vlm"):
+        return {"kv": stack(init_kv_cache(batch, max_len, aplan))}
+    if fam == "hybrid":
+        n_shared = max(len(_zamba_segments(cfg)) - 1, 1)
+        return {
+            "mamba": stack(init_mamba2_cache(batch, cfg)),
+            "shared_kv": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_shared, *a.shape)),
+                init_kv_cache(batch, max_len, aplan),
+            ),
+        }
+    if fam == "ssm":
+        caches = []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and i % cfg.slstm_every == 1:
+                caches.append(X.init_slstm_cache(batch, cfg))
+            else:
+                caches.append(X.init_mlstm_cache(batch, cfg))
+        return {"xl": caches}
+    if fam == "audio":
+        return {
+            "kv": stack(init_kv_cache(batch, max_len, aplan)),
+            "enc": jnp.zeros(
+                (batch, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+            ),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(p: Params, caches: Params, tokens: jnp.ndarray,
+                lengths: jnp.ndarray, cfg: ArchConfig):
+    """One token for every sequence.  tokens: (B,) int32; lengths: (B,).
+
+    Returns (logits (B, V) f32, new caches).
+    """
+    if cfg.frontend == "none" or cfg.family == "audio":
+        x = p["embed"][tokens][:, None, :].astype(jnp.bfloat16)  # (B,1,D)
+    else:  # vlm decode consumes token ids too (image is in the cache)
+        x = p["embed"][tokens][:, None, :].astype(jnp.bfloat16)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        body = lambda lp, h, c: _dense_block_decode(lp, h, c, lengths, cfg)
+        x, new_kv = _scan_blocks_cached(p["blocks"], caches["kv"], x, body)
+        caches = {**caches, "kv": new_kv}
+    elif fam == "hybrid":
+        segs = _zamba_segments(cfg)
+        off = 0
+        new_m, new_s = [], []
+        for si, seg in enumerate(segs):
+            sub_p = jax.tree.map(lambda a: a[off : off + seg], p["blocks"])
+            sub_c = jax.tree.map(lambda a: a[off : off + seg], caches["mamba"])
+            body = lambda lp, h, c: _mamba_block_decode(lp, h, c, cfg)
+            x, nm = _scan_blocks_cached(sub_p, sub_c, x, body)
+            new_m.append(nm)
+            off += seg
+            if si < len(segs) - 1:
+                kv_i = jax.tree.map(lambda a: a[si], caches["shared_kv"])
+                x, nkv = _dense_block_decode(p["shared"], x, kv_i, lengths, cfg)
+                new_s.append(nkv)
+        caches = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_m),
+            "shared_kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_s),
+        }
+    elif fam == "ssm":
+        new_caches = []
+        for blk, c in zip(p["xl_blocks"], caches["xl"]):
+            h = apply_norm(cfg.norm, blk["ln"], x, cfg.norm_eps)
+            if "kind_slstm" in blk:
+                y, nc = X.slstm_decode(blk["cell"], h, c, cfg)
+            else:
+                y, nc = X.mlstm_decode(blk["cell"], h, c, cfg)
+            x = x + y
+            new_caches.append(nc)
+        caches = {"xl": new_caches}
+    elif fam == "audio":
+        enc = caches["enc"]
+
+        def body(lp, h, c):
+            h, nc = _dense_block_decode(lp, h, c, lengths, cfg)
+            hx = apply_norm(cfg.norm, lp["ln_x"], h, cfg.norm_eps)
+            kv = cross_kv(lp["xattn"], enc)
+            h = h + attention_train(
+                lp["xattn"], hx, cfg, causal=False, kv_override=kv
+            )
+            return h, nc
+
+        x, new_kv = _scan_blocks_cached(p["blocks"], caches["kv"], x, body)
+        caches = {**caches, "kv": new_kv}
+    else:
+        raise ValueError(fam)
+    logits = _lm_head(p, cfg, x)[:, 0, :]
+    return logits, caches
+
+
+def prefill(p: Params, inputs: dict, cfg: ArchConfig, max_len: int,
+            plan: ShardingPlan | None = None):
+    """Process a full prompt, returning (last logits, primed caches).
+
+    Implemented as train_forward plus cache extraction; attention K/V
+    are recomputed into the cache layout (the fused path on TPU writes
+    them during the flash pass — same math).
+    """
+    fam = cfg.family
+    batch = (inputs.get("tokens") if "tokens" in inputs
+             else inputs["embeds"]).shape[0]
+    seq = (inputs.get("tokens") if "tokens" in inputs
+           else inputs["embeds"]).shape[1]
+    caches = init_caches(cfg, batch, max_len, plan)
+    if fam in ("dense", "moe", "vlm", "audio"):
+        # Layer-by-layer forward capturing K/V (scan over stacked blocks).
+        x = _embed_in(p, cfg, inputs)
+        if fam == "audio":
+            body = lambda lp, h: _dense_block_train(lp, h, cfg, causal=False)
+            enc, _ = _scan_blocks(p["enc_blocks"], inputs["embeds"].astype(
+                jnp.bfloat16), body, True, group="enc_blocks")
+            enc = apply_norm(cfg.norm, p["enc_norm"], enc, cfg.norm_eps)
+            caches["enc"] = enc
+            x = p["embed"][inputs["tokens"]].astype(jnp.bfloat16)
+
+        def step(h, lp):
+            lp = _maybe_gather(lp, "blocks")
+            h = _maybe_constrain_act(h)
+            hn = apply_norm(cfg.norm, lp["ln1"], h, cfg.norm_eps)
+            from .attention import _project_qkv  # noqa: PLC0415
+
+            q, k, v = _project_qkv(
+                lp["attn"], hn, jnp.arange(seq), cfg.rope_theta
+            )
+            h, _ = _dense_block_train(lp, h, cfg)
+            if fam == "audio":
+                hx = apply_norm(cfg.norm, lp["ln_x"], h, cfg.norm_eps)
+                kv = cross_kv(lp["xattn"], caches["enc"])
+                h = h + attention_train(
+                    lp["xattn"], hx, cfg, causal=False, kv_override=kv
+                )
+            pad = max_len - seq
+            kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                jnp.bfloat16
+            )
+            vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                jnp.bfloat16
+            )
+            return h, {"k": kc, "v": vc}
+
+        x, kv = jax.lax.scan(step, x, p["blocks"])
+        caches["kv"] = kv
+        logits = _lm_head(p, cfg, x[:, -1:, :])[:, 0, :]  # head on last pos only
+        return logits, caches
+    # Recurrent families prefill chunk-parallel (train-mode forward with
+    # state extraction) — same math as token-by-token, MXU-friendly.
+    from .mamba2 import mamba2_train  # noqa: PLC0415
+
+    x = _embed_in(p, cfg, inputs)
+    if fam == "hybrid":
+        segs = _zamba_segments(cfg)
+        off = 0
+        seg_caches, shared_kvs = [], []
+        for si, seg in enumerate(segs):
+            sub = jax.tree.map(lambda a: a[off : off + seg], p["blocks"])
+
+            def body(h, lp):
+                lp = _maybe_gather(lp, "blocks")
+                h = _maybe_constrain_act(h)
+                hn = apply_norm(cfg.norm, lp["ln"], h, cfg.norm_eps)
+                y, cache = mamba2_train(lp["mamba"], hn, cfg, return_state=True)
+                return h + y, cache
+
+            x, sc = jax.lax.scan(body, x, sub)
+            seg_caches.append(sc)
+            off += seg
+            if si < len(segs) - 1:
+                # Shared attention block: capture K/V then apply.
+                shared = _maybe_gather(p["shared"], "shared")
+                hn = apply_norm(cfg.norm, shared["ln1"], x, cfg.norm_eps)
+                from .attention import _project_qkv  # noqa: PLC0415
+
+                _, k, v = _project_qkv(
+                    shared["attn"], hn, jnp.arange(seq), cfg.rope_theta
+                )
+                pad = max_len - seq
+                shared_kvs.append({
+                    "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+                    "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+                })
+                x, _ = _dense_block_train(shared, x, cfg)
+        caches = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *seg_caches),
+            "shared_kv": jax.tree.map(lambda *xs: jnp.stack(xs), *shared_kvs),
+        }
+        return _lm_head(p, cfg, x[:, -1:, :])[:, 0, :], caches
+    if fam == "ssm":
+        from . import xlstm as XL  # noqa: PLC0415
+
+        new_caches = []
+        for blk in p["xl_blocks"]:
+            h = apply_norm(cfg.norm, blk["ln"], x, cfg.norm_eps)
+            if "kind_slstm" in blk:
+                y, c = XL.slstm_train(blk["cell"], h, cfg, return_state=True)
+            else:
+                y, c = XL.mlstm_train(blk["cell"], h, cfg, return_state=True)
+            x = x + y
+            new_caches.append(c)
+        return _lm_head(p, cfg, x[:, -1:, :])[:, 0, :], {"xl": new_caches}
+    raise ValueError(fam)

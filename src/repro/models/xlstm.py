@@ -1,0 +1,268 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, sequential scan).
+
+mLSTM is a gated linear-attention cell: with input gate ``i_t = exp(ĩ)``
+and forget gate ``f_t = sigma(f̃)`` the parallel form is
+
+    h_t = o_t * (Sum_j exp(cl_t - cl_j + ĩ_j - m_t) (q_t.k_j) v_j) / n_t
+
+computed here in chunks with an inter-chunk (C, n, m) running state —
+the same scan-carry structure as the SSD kernel.  sLSTM keeps per-unit
+scalar cells with recurrent block-diagonal weights and *must* run
+sequentially; it lowers to a length-L ``lax.scan`` (cheap: d x d work
+per step, only a few layers use it).  Both decode in O(1) per token,
+which is why xlstm runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, gelu, rmsnorm, swish
+
+__all__ = [
+    "init_mlstm", "mlstm_train", "mlstm_decode", "init_mlstm_cache",
+    "init_slstm", "slstm_train", "slstm_decode", "init_slstm_cache",
+]
+
+_CHUNK = 128
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d)),       # [cell input u, gate z]
+        "wq": dense_init(ks[1], (d, h, dh)),
+        "wk": dense_init(ks[2], (d, h, dh)),
+        "wv": dense_init(ks[3], (d, h, dh)),
+        "w_if": dense_init(ks[4], (d, 2 * h)) * 0.1,  # input/forget pre-acts
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+        ).astype(jnp.float32),
+        "norm_w": jnp.ones((d,), jnp.float32),
+        "w_down": dense_init(ks[5], (d, d)),
+    }
+
+
+def _mlstm_gates(p: Params, u: jnp.ndarray):
+    """u: (B,L,D) -> log input gate ĩ, log forget gate (B,L,H)."""
+    pre = u.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) + p["b_if"]
+    h = pre.shape[-1] // 2
+    log_i = pre[..., :h]
+    log_f = jax.nn.log_sigmoid(pre[..., h:])
+    return log_i, log_f
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int = _CHUNK):
+    """q/k/v: (B,L,H,Dh); gates: (B,L,H).  Stabilized chunked mLSTM.
+
+    Returns h (B,L,H,Dh) and final (C, n, m) state.
+    """
+    bsz, l, h, dh = q.shape
+    qn = q / jnp.sqrt(dh)
+    qch = min(chunk, l)
+    nc = l // qch
+    resh = lambda a: a.reshape(bsz, nc, qch, *a.shape[2:])
+    qc, kc, vc = resh(qn), resh(k), resh(v)
+    lic, lfc = resh(log_i), resh(log_f)
+    tril = jnp.tril(jnp.ones((qch, qch), jnp.float32))
+
+    def step(state, inp):
+        c_st, n_st, m_st = state  # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qb, kb, vb, lib, lfb = inp
+        cl = jnp.cumsum(lfb, axis=1)                       # (B,q,H)
+        # log weights of intra-chunk source j at target t.
+        logw = cl[:, :, None, :] - cl[:, None, :, :] + lib[:, None, :, :]
+        logw = jnp.where(tril[None, :, :, None] > 0, logw, -jnp.inf)
+        # state contribution carries log decay cl_t (+ running m).
+        m_intra = jnp.max(logw, axis=2)                    # (B,q,H)
+        m_state = cl + m_st[:, None, :]
+        m_new = jnp.maximum(m_intra, m_state)              # (B,q,H)
+        w = jnp.exp(logw - m_new[:, :, None, :])           # (B,q,q,H)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32))
+        num_intra = jnp.einsum("bqkh,bqkh,bkhd->bqhd", scores, w,
+                               vb.astype(jnp.float32))
+        den_intra = jnp.einsum("bqkh,bqkh->bqh", scores, w)
+        s_scale = jnp.exp(cl + m_st[:, None, :] - m_new)   # (B,q,H)
+        num_state = jnp.einsum("bqhd,bhde->bqhe", qb.astype(jnp.float32),
+                               c_st) * s_scale[..., None]
+        den_state = jnp.einsum("bqhd,bhd->bqh", qb.astype(jnp.float32),
+                               n_st) * s_scale
+        num = num_intra + num_state
+        den = den_intra + den_state
+        hb = num / jnp.maximum(
+            jnp.abs(den)[..., None], jnp.exp(-m_new)[..., None]
+        )
+        # Update inter-chunk state.
+        rev = cl[:, -1:, :] - cl + lib                     # (B,q,H)
+        m_chunk = jnp.maximum(
+            m_st + cl[:, -1], jnp.max(rev, axis=1)
+        )                                                  # (B,H)
+        dec = jnp.exp(m_st + cl[:, -1] - m_chunk)
+        wsrc = jnp.exp(rev - m_chunk[:, None, :])          # (B,q,H)
+        c_new = dec[:, :, None, None] * c_st + jnp.einsum(
+            "bqhd,bqhe,bqh->bhde", kb.astype(jnp.float32),
+            vb.astype(jnp.float32), wsrc
+        )
+        n_new = dec[:, :, None] * n_st + jnp.einsum(
+            "bqhd,bqh->bhd", kb.astype(jnp.float32), wsrc
+        )
+        return (c_new, n_new, m_chunk), hb
+
+    c0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dh), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    xs = tuple(
+        a.transpose(1, 0, *range(2, a.ndim)) for a in (qc, kc, vc, lic, lfc)
+    )
+    state, hb = jax.lax.scan(step, (c0, n0, m0), xs)
+    hout = hb.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, dh)
+    return hout, state
+
+
+def mlstm_train(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                return_state: bool = False):
+    bsz, l, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    up = x @ p["w_up"].astype(x.dtype)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bld,dhe->blhe", u, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bld,dhe->blhe", u, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,dhe->blhe", u, p["wv"].astype(x.dtype))
+    log_i, log_f = _mlstm_gates(p, u)
+    hout, (c_f, n_f, m_f) = _mlstm_chunked(q, k, v, log_i, log_f)
+    y = hout.reshape(bsz, l, d).astype(x.dtype) * swish(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, {"C": c_f, "n": n_f, "m": m_f}
+    return out
+
+
+def init_mlstm_cache(batch: int, cfg: ArchConfig) -> Params:
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, cache: Params, cfg: ArchConfig):
+    bsz, _, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    up = x @ p["w_up"].astype(x.dtype)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bld,dhe->bhe", u[:, 0:1], p["wq"].astype(x.dtype))[..., :]
+    q = q.reshape(bsz, nh, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    k = jnp.einsum("bd,dhe->bhe", u[:, 0], p["wk"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    v = jnp.einsum("bd,dhe->bhe", u[:, 0], p["wv"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    log_i, log_f = _mlstm_gates(p, u)
+    li, lf = log_i[:, 0], log_f[:, 0]                  # (B,H)
+    m_new = jnp.maximum(cache["m"] + lf, li)
+    dec = jnp.exp(cache["m"] + lf - m_new)
+    src = jnp.exp(li - m_new)
+    c_new = dec[..., None, None] * cache["C"] + src[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = dec[..., None] * cache["n"] + src[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den)[..., None], jnp.exp(-m_new)[..., None])
+    y = h.reshape(bsz, 1, d).astype(x.dtype) * swish(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_down"].astype(x.dtype)
+    return out, {"C": c_new, "n": n_new, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        # pre-activations for (z, i, f, o) from input and recurrent h
+        "w_x": dense_init(ks[0], (d, 4 * d)),
+        "w_h": dense_init(ks[1], (d, 4 * d)) * 0.5,
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "norm_w": jnp.ones((d,), jnp.float32),
+        "w_down": dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_cell(p: Params, xt, state):
+    """xt: (B, D) one step; state = (c, n, m, h)."""
+    c, n, m, h = state
+    pre = (
+        xt.astype(jnp.float32) @ p["w_x"].astype(jnp.float32)
+        + h @ p["w_h"].astype(jnp.float32)
+        + p["b"]
+    )
+    d = xt.shape[-1]
+    zt = jnp.tanh(pre[:, :d])
+    li = pre[:, d : 2 * d]                       # log input gate
+    lf = jax.nn.log_sigmoid(pre[:, 2 * d : 3 * d])
+    ot = jax.nn.sigmoid(pre[:, 3 * d :])
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * zt
+    n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(li - m_new)
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def init_slstm_cache(batch: int, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((batch, d), -30.0), "h": z()}
+
+
+def slstm_train(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                return_state: bool = False):
+    bsz, l, d = x.shape
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state)
+        return new, new[3]
+
+    init = (
+        jnp.zeros((bsz, d), jnp.float32),
+        jnp.zeros((bsz, d), jnp.float32),
+        jnp.full((bsz, d), -30.0, jnp.float32),
+        jnp.zeros((bsz, d), jnp.float32),
+    )
+    fin, hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, {"c": fin[0], "n": fin[1], "m": fin[2], "h": fin[3]}
+    return out
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, cache: Params, cfg: ArchConfig):
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    new = _slstm_cell(p, x[:, 0], state)
+    y = new[3][:, None, :].astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_down"].astype(x.dtype)
+    return out, {"c": new[0], "n": new[1], "m": new[2], "h": new[3]}

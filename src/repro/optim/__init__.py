@@ -1,0 +1,16 @@
+"""Optimizer substrate: AdamW, clipping, schedules, grad compression."""
+
+from .adamw import AdamW, OptState, cosine_schedule, global_norm
+from .adamw8bit import AdamW8bit, Opt8State
+from .compress import compress_int8, decompress_int8
+
+__all__ = [
+    "AdamW",
+    "AdamW8bit",
+    "Opt8State",
+    "OptState",
+    "cosine_schedule",
+    "global_norm",
+    "compress_int8",
+    "decompress_int8",
+]

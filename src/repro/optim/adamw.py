@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay, global-norm clipping, schedules.
+
+Self-contained (no optax in this environment).  The optimizer state
+pytree mirrors the parameter tree, so GSPMD shards it with the same
+rules — ZeRO-style state sharding falls out of the sharding rules
+rather than bespoke code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "global_norm"]
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+    nu: Params
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1
+        )
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Params) -> OptState:
+        z = lambda p: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z(params), nu=z(params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(
+        self, grads: Params, state: OptState, params: Params
+    ) -> tuple[Params, OptState]:
+        step = state.step + 1
+        # Global-norm clip.
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        mu = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.nu, grads
+        )
+        t = step.astype(jnp.float32)
+        bc1 = 1 - self.b1**t
+        bc2 = 1 - self.b2**t
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=mu, nu=nu)

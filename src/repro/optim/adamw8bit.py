@@ -1,0 +1,124 @@
+"""AdamW with row-wise int8-quantized moment state.
+
+The f32 Adam moments are the largest training-state tensors (8 bytes /
+param).  Storing them as int8 with one f32 scale per leading-dim row
+cuts optimizer state ~4x (8 -> ~1.01 B/param) at negligible quality
+cost — and, concretely here, brings arctic-480b train_4k from
+30.2 GB/device (does not fit a 16 GB v5e) down to ~13.5 GB (fits); see
+EXPERIMENTS.md §Perf iteration 6.
+
+Row-wise (not flat-block) quantization is deliberate: the int8 codes
+keep the *parameter's exact shape*, so they shard with the parameter's
+own PartitionSpec and the optimizer update stays collective-free (a
+flat-block layout forced full-tensor reshards against the 2-D sharded
+params — measured at +158 s of collectives on arctic before this fix).
+Scales reduce over every non-leading dim; moments are smooth
+accumulators, so per-row dynamic range is sufficient (Dettmers et al.
+use 2048-wide blocks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import global_norm
+
+__all__ = ["AdamW8bit", "Opt8State", "quantize_blockwise",
+           "dequantize_blockwise"]
+
+def quantize_blockwise(x: jnp.ndarray):
+    """Row-wise symmetric int8: codes keep x's shape; one f32 scale per
+    leading-dim row (scalar/1-D leaves get a single scale)."""
+    x = x.astype(jnp.float32)
+    if x.ndim == 0:
+        scale = jnp.abs(x) / 127.0 + 1e-20
+    else:
+        axes = tuple(range(1, x.ndim))
+        scale = jnp.max(jnp.abs(x), axis=axes, keepdims=True) / 127.0 + 1e-20
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_blockwise(codes: jnp.ndarray, scale: jnp.ndarray,
+                         shape: tuple[int, ...]) -> jnp.ndarray:
+    del shape  # codes already carry the shape
+    return codes.astype(jnp.float32) * scale
+
+
+class Opt8State(NamedTuple):
+    step: jnp.ndarray
+    mu_q: Any      # pytree of int8 codes
+    mu_s: Any      # pytree of f32 block scales
+    nu_q: Any
+    nu_s: Any
+
+
+@dataclass(frozen=True)
+class AdamW8bit:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Any) -> Opt8State:
+        z = jax.tree.map(lambda p: quantize_blockwise(jnp.zeros_like(
+            p, dtype=jnp.float32)), params)
+        mu_q = jax.tree.map(lambda t: t[0], z,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        mu_s = jax.tree.map(lambda t: t[1], z,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return Opt8State(
+            step=jnp.zeros((), jnp.int32),
+            mu_q=mu_q, mu_s=mu_s,
+            nu_q=jax.tree.map(jnp.copy, mu_q),
+            nu_s=jax.tree.map(jnp.copy, mu_s),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: Any, state: Opt8State, params: Any):
+        step = state.step + 1
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+        t = step.astype(jnp.float32)
+        bc1 = 1 - self.b1**t
+        bc2 = 1 - self.b2**t
+        lr = self._lr(step)
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        muq_leaves = treedef.flatten_up_to(state.mu_q)
+        mus_leaves = treedef.flatten_up_to(state.mu_s)
+        nuq_leaves = treedef.flatten_up_to(state.nu_q)
+        nus_leaves = treedef.flatten_up_to(state.nu_s)
+
+        new_p, new_muq, new_mus, new_nuq, new_nus = [], [], [], [], []
+        for p, g, mq, ms, nq, ns in zip(
+            p_leaves, g_leaves, muq_leaves, mus_leaves, nuq_leaves, nus_leaves
+        ):
+            g = g.astype(jnp.float32) * scale
+            mu = dequantize_blockwise(mq, ms, p.shape)
+            nu = dequantize_blockwise(nq, ns, p.shape)
+            mu = self.b1 * mu + (1 - self.b1) * g
+            nu = self.b2 * nu + (1 - self.b2) * g * g
+            delta = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            q, s = quantize_blockwise(mu)
+            new_muq.append(q)
+            new_mus.append(s)
+            q, s = quantize_blockwise(nu)
+            new_nuq.append(q)
+            new_nus.append(s)
+        unf = lambda ls: jax.tree.unflatten(treedef, ls)
+        return unf(new_p), Opt8State(
+            step=step, mu_q=unf(new_muq), mu_s=unf(new_mus),
+            nu_q=unf(new_nuq), nu_s=unf(new_nus),
+        )

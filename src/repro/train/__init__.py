@@ -1,0 +1,5 @@
+"""Training substrate: jitted step builders with sharding + donation."""
+
+from .step import TrainState, make_serve_step, make_train_step, make_prefill_step
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step", "make_prefill_step"]

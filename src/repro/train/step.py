@@ -1,0 +1,171 @@
+"""Train / serve step builders.
+
+``make_train_step`` returns a jitted SPMD step with:
+
+* buffer donation (params + opt state update in place),
+* optional microbatch gradient accumulation (``lax.scan`` over the
+  batch split — activation memory / throughput trade),
+* optional int8+error-feedback gradient compression on the DP
+  all-reduce (``grad_compression="int8_ef"``): the loss switches to
+  per-shard mean (no implicit psum) under ``shard_map`` and the grad
+  exchange becomes an explicit quantized collective — 4x fewer bytes
+  across the pod interconnect.
+
+``make_serve_step`` / ``make_prefill_step`` build the decode-shape
+programs the dry-run lowers for ``decode_*`` / ``prefill_*`` cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.model import Model
+from ..optim import AdamW, OptState
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step",
+           "make_prefill_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    grad_shardings=None,
+):
+    """-> train_step(state, batch) -> (state, metrics).
+
+    ``grad_shardings``: optional sharding tree for the gradients
+    (normally the parameters' storage shardings).  Constraining the
+    cotangents right after the backward pass lets GSPMD lower the FSDP
+    gradient reduction as reduce-scatter instead of
+    all-reduce(+dynamic-slice) — ~(dp-1)/dp fewer wire bytes.
+    """
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_forward(params, batch, remat=remat)
+        tokens = batch.get("tokens")
+        if tokens is not None and tokens.ndim == 2:
+            labels = tokens[:, 1:]
+            lg = logits[:, :-1]
+        else:  # embeds-only vlm pretraining: next-embed proxy labels
+            labels = jnp.zeros(logits.shape[:2], jnp.int32)[:, 1:]
+            lg = logits[:, :-1]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = nll.mean() + 0.01 * aux
+        return loss, {"nll": nll.mean(), "aux": aux}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            if grad_shardings is not None:
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads, grad_shardings
+                )
+        else:
+            split = lambda x: x.reshape(
+                microbatches, x.shape[0] // microbatches, *x.shape[1:]
+            )
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, b)
+                return (
+                    jax.tree.map(jnp.add, g_acc, g),
+                    l_acc + l,
+                ), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, step=opt.step)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def make_compressed_dp_grads(model: Model, mesh, dp_axes: tuple[str, ...],
+                             param_specs_tree):
+    """Explicit-DP gradient computation with int8+EF compressed
+    all-reduce across ``dp_axes`` (shard_map).  Returns
+    ``grads_fn(params, batch, err) -> (grads, new_err, loss)``.
+
+    Parameters must be replicated across ``dp_axes`` for this path
+    (pure-DP / TP-only shardings); it exists to cut cross-pod gradient
+    bytes, the dominant multi-pod collective.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from ..optim.compress import ef_roundtrip
+
+    def local_loss(params, batch):
+        logits, aux = model.train_forward(params, batch)
+        tokens = batch["tokens"]
+        labels = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean() + 0.01 * aux
+
+    batch_spec = P(dp_axes, None)
+
+    def shard_fn(params, batch, err):
+        loss, grads = jax.value_and_grad(local_loss)(params, batch)
+        flat, tree = jax.tree.flatten(grads)
+        eflat = jax.tree.leaves(err)
+        out, new_err = [], []
+        for g, e in zip(flat, eflat):
+            r, ne = ef_roundtrip(g, e, dp_axes)
+            out.append(r)
+            new_err.append(ne)
+        loss = jax.lax.pmean(loss, dp_axes)
+        return jax.tree.unflatten(tree, out), jax.tree.unflatten(tree, new_err), loss
+
+    rep = jax.tree.map(lambda _: P(), param_specs_tree,
+                       is_leaf=lambda x: isinstance(x, P))
+    return shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(rep, {"tokens": batch_spec}, rep),
+        out_specs=(rep, rep, P()),
+        check_rep=False,
+    )
+
+
+def make_serve_step(model: Model):
+    """-> serve_step(params, caches, tokens, lengths) ->
+    (next_tokens, logits, caches, lengths)."""
+
+    def serve_step(params, caches, tokens, lengths):
+        logits, caches = model.decode_step(params, caches, tokens, lengths)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches, lengths + 1
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, inputs):
+        logits, caches = model.prefill(params, inputs, max_len)
+        return logits, caches
+
+    return prefill_step

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run single-device (the 512-device override is dryrun-only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Touch the backend now so a later `import repro.launch.dryrun` (which
+# sets --xla_force_host_platform_device_count=512 for its own CLI use)
+# cannot change this process's device count.
+import jax  # noqa: E402
+
+assert jax.device_count() >= 1

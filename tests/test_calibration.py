@@ -1,0 +1,44 @@
+"""The workload model must reproduce the paper's derived quantities."""
+
+from repro.core.calibration import (
+    KEENELAND_NODE,
+    OP_PROFILES,
+    validate_calibration,
+)
+
+
+def test_fractions_sum_to_one():
+    v = validate_calibration()
+    assert abs(v["cpu_fraction_sum"] - 1.0) < 1e-6
+
+
+def test_aggregate_gpu_speedup_matches_fig8():
+    v = validate_calibration()
+    # Paper: ~6.5x compute-only for 1 GPU vs 1 CPU core.
+    assert 6.2 < v["gpu_speedup_compute_only"] < 6.8
+
+
+def test_morph_open_share_matches_paper():
+    # Paper §V-C: Morph. Open is ~4% of CPU time but ~23% of the
+    # GPU-accelerated computation time.
+    v = validate_calibration()
+    assert abs(OP_PROFILES["morph_open"].cpu_fraction - 0.04) < 1e-9
+    assert 0.20 < v["morph_open_gpu_share"] < 0.26
+
+
+def test_transfer_impact_matches_section_vd():
+    # Paper §V-D: transfers ~13% of computation time.
+    v = validate_calibration()
+    assert 0.10 < v["transfer_impact_aggregate"] < 0.16
+
+
+def test_cpu_contention_gives_9x_at_12_cores():
+    # Paper Fig 9: 12-core speedup ~9.
+    eff = KEENELAND_NODE.cpu_core_efficiency(12)
+    assert abs(12 * eff - 9.0) < 0.25
+
+
+def test_feature_ops_accelerate_better_than_segmentation():
+    seg = [p.gpu_speedup for p in OP_PROFILES.values() if p.stage == "segmentation"]
+    feat = [p.gpu_speedup for p in OP_PROFILES.values() if p.stage == "features"]
+    assert min(feat) > sum(seg) / len(seg)  # paper §V-B

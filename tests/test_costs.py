@@ -1,0 +1,93 @@
+"""Analytic cost model vs XLA HLO cost analysis.
+
+With n_layers=1 and one attention chunk every loop trips once, so
+HloCostAnalysis' count-body-once behavior coincides with reality and
+the analytic model must land in the same ballpark.  (For deep stacks
+the HLO number is ~L x too small — the reason costs.py exists.)
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ShapeSpec, get_config
+from repro.launch.costs import cell_cost
+from repro.models import build_model
+from repro.models.config import reduced
+from repro.optim import AdamW
+from repro.train import TrainState, make_train_step
+
+
+def _tiny(arch="mistral_nemo_12b", **kw):
+    base = dict(n_layers=1, d_model=256, n_heads=4, n_kv_heads=2,
+                head_dim=64, d_ff=512, vocab_size=1024)
+    base.update(kw)
+    return reduced(get_config(arch), **base)
+
+
+@pytest.mark.parametrize("b,s", [(2, 256), (4, 512)])
+def test_train_flops_match_hlo_single_layer(b, s):
+    cfg = _tiny()
+    model = build_model(cfg)
+    opt = AdamW()
+    step = make_train_step(model, opt)
+    pshapes = model.init_shapes()
+    opt_shapes = jax.eval_shape(opt.init, pshapes)
+    state = TrainState(pshapes, opt_shapes)
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    compiled = jax.jit(step).lower(state, batch).compile()
+    hlo_flops = float(compiled.cost_analysis().get("flops", 0))
+
+    shape = ShapeSpec("t", s, b, "train")
+    analytic = cell_cost(cfg, shape, tp=1).flops
+    assert hlo_flops > 0
+    ratio = analytic / hlo_flops
+    assert 0.5 < ratio < 2.0, f"analytic/hlo = {ratio:.2f}"
+
+
+def test_deep_stack_hlo_undercounts():
+    """Sanity for the docstring claim: 4 layers != 4x HLO flops."""
+    cfg1, cfg4 = _tiny(), _tiny(n_layers=4)
+    b, s = 2, 128
+
+    def hlo_flops(cfg):
+        model = build_model(cfg)
+        opt = AdamW()
+        step = make_train_step(model, opt)
+        pshapes = model.init_shapes()
+        state = TrainState(pshapes, jax.eval_shape(opt.init, pshapes))
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        comp = jax.jit(step).lower(state, batch).compile()
+        return float(comp.cost_analysis().get("flops", 0))
+
+    f1, f4 = hlo_flops(cfg1), hlo_flops(cfg4)
+    # scan body counted once: the 4-layer program reports << 4x flops
+    assert f4 < 2.5 * f1
+    # while the analytic model scales linearly in L
+    a1 = cell_cost(cfg1, ShapeSpec("t", s, b, "train"), tp=1)
+    a4 = cell_cost(cfg4, ShapeSpec("t", s, b, "train"), tp=1)
+    layer_flops1 = a1.flops - a1.flops_by["head"] - a1.flops_by["optimizer"]
+    layer_flops4 = a4.flops - a4.flops_by["head"] - a4.flops_by["optimizer"]
+    assert 3.5 < layer_flops4 / layer_flops1 < 4.5
+
+
+def test_decode_cost_memory_dominated():
+    cfg = get_config("yi_34b")
+    c = cell_cost(cfg, ShapeSpec("d", 32768, 128, "decode"), tp=16)
+    # decode arithmetic intensity is tiny: bytes dominate
+    assert c.bytes > c.flops / 50
+    assert c.bytes_by["cache_rw"] > c.bytes_by["logits"]
+
+
+def test_moe_cost_counts_active_only():
+    arctic = get_config("arctic_480b")
+    dense_like = dataclasses.replace(
+        arctic, n_experts=0, top_k=0, moe_dense_residual=False
+    )
+    sh = ShapeSpec("t", 4096, 8, "train")
+    c_moe = cell_cost(arctic, sh, tp=16)
+    c_dense = cell_cost(dense_like, sh, tp=16)
+    # 128-expert top-2 (+dense residual) must cost far less than 128x.
+    assert c_moe.flops < 8 * c_dense.flops

@@ -1,0 +1,166 @@
+"""Data ledger properties + checkpoint roundtrip + optimizer sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import load_checkpoint, save_checkpoint
+from repro.ckpt.checkpoint import latest_step
+from repro.data import ChunkLedger, TokenChunkSource
+from repro.optim import AdamW, compress_int8, decompress_int8, global_norm
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_chunks=st.integers(1, 60),
+    n_workers=st.integers(1, 5),
+    fail_mask=st.lists(st.booleans(), min_size=5, max_size=5),
+    block=st.integers(1, 7),
+)
+def test_ledger_no_loss_no_dup(n_chunks, n_workers, fail_mask, block):
+    """Every chunk is completed exactly once despite failures."""
+    led = ChunkLedger(n_chunks, lease_timeout=1e9)
+    completed = []
+    alive = list(range(n_workers))
+    rounds = 0
+    while not led.done() and rounds < 10_000:
+        rounds += 1
+        for w in list(alive):
+            ids = led.lease(w, block)
+            if fail_mask[w % 5] and rounds == 2:
+                led.worker_lost(w)  # lease returns to the queue
+                continue
+            for cid in ids:
+                led.commit(w, cid)
+                completed.append(cid)
+    assert led.done()
+    assert sorted(set(completed)) == list(range(n_chunks))
+    # duplicates only possible for chunks in failed leases
+    dup = len(completed) - len(set(completed))
+    assert dup == 0  # commit happens only on surviving workers here
+
+
+def test_ledger_state_roundtrip():
+    led = ChunkLedger(10)
+    led.lease(0, 4)
+    led.commit(0, 0)
+    led.commit(0, 1)
+    state = led.state_dict()
+    led2 = ChunkLedger.from_state(state)
+    # Unfinished leased chunks (2, 3) must be re-issuable after restore.
+    ids = led2.lease(1, 10)
+    assert set(ids) == set(range(2, 10))
+
+
+def test_chunk_source_deterministic():
+    src = TokenChunkSource(vocab=100, seq_len=16, batch_per_chunk=2, seed=1)
+    a, b = src(42), src(42)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 17)
+    assert (src(43) != a).any()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "w": jnp.arange(12.0).reshape(3, 4),
+        "b": {"x": jnp.ones((5,), jnp.bfloat16)},
+    }
+    save_checkpoint(tmp_path, 7, tree, meta={"k": "v"})
+    assert latest_step(tmp_path) == 7
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    got, manifest = load_checkpoint(tmp_path, template)
+    assert manifest["step"] == 7 and manifest["meta"]["k"] == "v"
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+    assert got["b"]["x"].dtype == np.asarray(tree["b"]["x"]).dtype
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_checkpoint(tmp_path, {"w": jnp.ones((3, 3))})
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    for s in range(5):
+        save_checkpoint(tmp_path, s, {"w": jnp.ones(1)}, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic_loss():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    huge = {"w": jnp.asarray([1e9, 0.0, 0.0])}
+    new, _ = opt.update(huge, state, params)
+    assert float(jnp.abs(new["w"]).max()) < 20.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_compression_error_bound(vals):
+    g = jnp.asarray(np.array(vals, np.float32))
+    q, scale = compress_int8(g)
+    back = decompress_int8(q, scale)
+    # max error is one quantization step
+    assert float(jnp.abs(back - g).max()) <= float(scale) + 1e-6
+
+
+def test_adamw8bit_matches_adamw_trajectory():
+    """Row-wise int8 moments track full-precision AdamW closely."""
+    from repro.optim import AdamW8bit
+
+    opt_f = AdamW(lr=0.05, weight_decay=0.0)
+    opt_q = AdamW8bit(lr=0.05, weight_decay=0.0)
+    params_f = {"w": jnp.asarray([3.0, -2.0, 0.5, 4.0])}
+    params_q = jax.tree.map(jnp.copy, params_f)
+    sf, sq = opt_f.init(params_f), opt_q.init(params_q)
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    for _ in range(80):
+        params_f, sf = opt_f.update(jax.grad(loss)(params_f), sf, params_f)
+        params_q, sq = opt_q.update(jax.grad(loss)(params_q), sq, params_q)
+    assert float(loss(params_q)) < 1e-2
+    np.testing.assert_allclose(
+        np.asarray(params_q["w"]), np.asarray(params_f["w"]), atol=0.05
+    )
+
+
+def test_int8_row_quant_roundtrip():
+    from repro.optim.adamw8bit import dequantize_blockwise, quantize_blockwise
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, (8, 64)).astype(np.float32))
+    q, s = quantize_blockwise(x)
+    assert q.shape == x.shape and s.shape == (8, 1)
+    back = dequantize_blockwise(q, s, x.shape)
+    rowmax = np.abs(np.asarray(x)).max(axis=1, keepdims=True)
+    assert (np.abs(np.asarray(back - x)) <= rowmax / 127 + 1e-6).all()

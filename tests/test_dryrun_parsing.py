@@ -1,0 +1,50 @@
+"""Unit tests for the dry-run's HLO collective-bytes parser.
+
+(The dryrun module sets XLA_FLAGS at import; importing it here is safe
+because this test only touches pure parsing helpers — jax devices are
+already initialized single-device by conftest.)
+"""
+
+from repro.launch.dryrun import _group_size, _shape_bytes, collective_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,4") == 256
+    assert _shape_bytes("bf16", "8") == 16
+    assert _shape_bytes("s8", "3,3") == 9
+    assert _shape_bytes("pred", "") == 1  # scalar
+
+
+def test_group_size_iota_and_explicit():
+    assert _group_size("replica_groups=[16,32]<=[512]") == 32
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("no groups here") == 1
+
+
+def test_collective_bytes_kinds():
+    hlo = "\n".join([
+        # all-reduce of a (256,192) f32 tuple: 2 x 196608 bytes
+        "%ar = (f32[256,192]{1,0}, f32[256,192]{1,0}) all-reduce(%a, %b), "
+        "replica_groups=[16,16]<=[256]",
+        # all-gather result is the gathered tensor
+        "%ag = bf16[1024,64]{1,0} all-gather(%x), dimensions={0}",
+        # reduce-scatter result is operand/groupsize => scaled back up
+        "%rs = f32[64,64]{1,0} reduce-scatter(%y), "
+        "replica_groups=[8,4]<=[32], dimensions={0}",
+        # async start forms count once; -done forms are skipped
+        "%cp = f32[128]{0} collective-permute-start(%z), "
+        "source_target_pairs={{0,1}}",
+        "%cpd = f32[128]{0} collective-permute-done(%cp)",
+        # non-collective lines ignored
+        "%dot = f32[512,512]{1,0} dot(%p, %q)",
+    ])
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2 * 256 * 192 * 4
+    assert out["all-gather"] == 1024 * 64 * 2
+    assert out["reduce-scatter"] == 64 * 64 * 4 * 4  # x group size 4
+    assert out["collective-permute"] == 128 * 4
+    assert "all-to-all" not in out
+
+
+def test_collective_bytes_empty():
+    assert collective_bytes("%x = f32[4] add(%a, %b)") == {}

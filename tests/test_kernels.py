@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, on_tpu
+from repro.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("hw", [(128, 128), (256, 384), (128, 640)])
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+def test_color_deconv(hw, dtype):
+    h, w = hw
+    mk = lambda: jnp.asarray(
+        RNG.integers(0, 256, (h, w)).astype(dtype)
+        if dtype == np.uint8
+        else RNG.uniform(0, 255, (h, w)).astype(dtype)
+    )
+    r, g, b = mk(), mk(), mk()
+    got = ops.color_deconv(r, g, b, block=(128, 128), interpret=True)
+    want = ref.color_deconv_ref(r, g, b)
+    for gp, wp in zip(got, want):
+        np.testing.assert_allclose(gp, wp, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("hw,stripe", [((128, 128), 32), ((256, 256), 64),
+                                       ((192, 384), 48)])
+@pytest.mark.parametrize("inner", [4, 16])
+def test_morph_recon(hw, stripe, inner):
+    h, w = hw
+    mask = jnp.asarray(RNG.uniform(0, 255, (h, w)).astype(np.float32))
+    marker = jnp.maximum(mask - 55.0, 0.0) * jnp.asarray(
+        (RNG.uniform(0, 1, (h, w)) > 0.6).astype(np.float32)
+    )
+    got = ops.morph_recon(marker, mask, stripe=stripe, inner_iters=inner,
+                          interpret=True)
+    want = ref.morph_recon_ref(marker, mask)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("hw,stripe", [((128, 256), 32), ((256, 128), 64)])
+def test_sobel_stats(hw, stripe):
+    gray = jnp.asarray(RNG.uniform(0, 255, hw).astype(np.float32))
+    mag, st = ops.sobel_stats(gray, stripe=stripe, interpret=True)
+    wm, ws = ref.sobel_stats_ref(gray)
+    np.testing.assert_allclose(mag, wm, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(st, ws, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 4, 256, 64),
+                                   (1, 1, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(shape, causal, dtype):
+    b, h, s, d = shape
+    mk = lambda: jnp.asarray(RNG.normal(0, 1, shape), dtype)
+    q, k, v = mk(), mk(), mk()
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=128,
+                              block_k=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (4, 4), (16, 8)])
+@pytest.mark.parametrize("s,bk", [(256, 128), (512, 256)])
+def test_decode_attention(hq, hkv, s, bk):
+    b, d = 3, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)).astype(np.float32))
+    lengths = jnp.asarray([s, s // 3, 1], jnp.int32)
+    got = ops.decode_attention(q, k, v, lengths, block_k=bk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("c,h,f", [(4, 2, 128), (16, 8, 256), (32, 4, 512)])
+def test_mamba2_chunk_scan(c, h, f):
+    decay = jnp.asarray(RNG.uniform(0.3, 1.0, (c, h)).astype(np.float32))
+    inc = jnp.asarray(RNG.normal(0, 1, (c, h, f)).astype(np.float32))
+    gs, gf = ops.mamba2_chunk_scan(decay, inc, interpret=True)
+    ws, wf = ref.mamba2_chunk_scan_ref(decay, inc)
+    np.testing.assert_allclose(gs, ws, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gf, wf, rtol=1e-5, atol=1e-5)
+
+
+def test_backend_dispatch_is_cpu_interpret():
+    assert not on_tpu()  # this container runs the interpret path

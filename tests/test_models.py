@@ -1,0 +1,151 @@
+"""Per-arch smoke tests + attention plan properties + decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, valid_cells
+from repro.models import build_model, plan_attention
+from repro.models.config import reduced
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def _inputs(cfg):
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        return {
+            "tokens": toks,
+            "embeds": jax.random.normal(
+                RNG, (B, cfg.encoder_frames, cfg.d_model)
+            ),
+        }
+    if cfg.frontend == "vision_stub":
+        return {
+            "tokens": toks,
+            "embeds": jax.random.normal(RNG, (B, S, cfg.d_model)),
+        }
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    """Reduced config of the same family: shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    inputs = _inputs(cfg)
+    logits, aux = model.train_forward(params, inputs)
+    exp_s = S if cfg.frontend != "vision_stub" else S
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, _ = model.loss_fn(params, inputs)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: model.loss_fn(p, inputs)[0])(params)
+    gn = sum(jnp.sum(jnp.abs(x.astype(jnp.float32))) for x in jax.tree.leaves(g))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    caches = model.init_caches(B, 128)
+    toks = jnp.zeros((B,), jnp.int32)
+    if cfg.family == "audio":
+        caches["enc"] = jax.random.normal(
+            RNG, (B, cfg.encoder_frames, cfg.d_model)
+        ).astype(jnp.bfloat16)
+    logits, caches2 = model.decode_step(
+        params, caches, toks, jnp.zeros((B,), jnp.int32)
+    )
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "mistral-nemo-12b",
+                                  "zamba2-1.2b", "xlstm-125m"])
+def test_prefill_decode_matches_train_forward(arch):
+    """Prefill(prompt) ++ decode(t) logits == train_forward logits."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, 16), 0,
+                              cfg.vocab_size)
+    # Reference: full forward, logits at position -2 predict token -1.
+    full_logits, _ = model.train_forward(params, {"tokens": toks})
+    # Prefill on the first 15 tokens -> logits for position 15.
+    pre_logits, caches = model.prefill(
+        params, {"tokens": toks[:, :15]}, max_len=32
+    )
+    np.testing.assert_allclose(
+        np.asarray(pre_logits), np.asarray(full_logits[:, 14, :]),
+        rtol=2e-2, atol=2e-2,
+    )
+    # One decode step with token 15 must match position 15 logits.
+    dec_logits, _ = model.decode_step(
+        params, caches, toks[:, 15], jnp.full((B,), 15, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits[:, 15, :]),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_padded_attention_equals_exact_gqa():
+    """TP head padding must be numerically invisible."""
+    from repro.models.plan import make_plan
+
+    cfg = reduced(get_config("yi-34b"), n_heads=8, n_kv_heads=2, head_dim=32,
+                  d_model=256)
+    m_plain = build_model(cfg, make_plan(cfg, tp=1))
+    m_padded = build_model(cfg, make_plan(cfg, tp=4))  # rep=2, g_eff=2
+    k = jax.random.PRNGKey(3)
+    p1 = m_plain.init(k)
+    p2 = m_padded.init(k)
+    toks = jax.random.randint(k, (2, 32), 0, cfg.vocab_size)
+    l1, _ = m_plain.train_forward(p1, {"tokens": toks})
+    l2, _ = m_padded.train_forward(p2, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(l1), np.asarray(l2), rtol=3e-2, atol=3e-2
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    hkv=st.integers(1, 64),
+    group=st.integers(1, 8),
+    tp=st.sampled_from([1, 2, 4, 8, 16]),
+)
+def test_attention_plan_properties(hkv, group, tp):
+    cfg = get_config("yi-34b")
+    cfg = reduced(cfg, n_heads=hkv * group, n_kv_heads=hkv, head_dim=32,
+                  d_model=max(256, hkv * group * 32))
+    plan = plan_attention(cfg, tp)
+    # slots shard evenly over tp
+    assert plan.slots % tp == 0
+    # every real q head has a home and the mask has exactly Hq ones
+    assert plan.head_mask().sum() == cfg.n_heads
+    qm = plan.q_map()
+    assert len({(s, p) for s, p in qm}) == cfg.n_heads  # no collisions
+    assert (qm[:, 0] < plan.slots).all() and (qm[:, 1] < plan.g_eff).all()
+    # q heads in a slot all map to that slot's kv head
+    kvm = plan.kv_map()
+    g = cfg.n_heads // cfg.n_kv_heads
+    for i, (s, _) in enumerate(qm):
+        assert kvm[s] == i // g
+    # waste is bounded: at most 2x real heads, except when the TP
+    # degree itself forces a floor of one (padded) q head per slot.
+    assert plan.q_eff <= max(2 * cfg.n_heads, tp * plan.g_eff)
+
+
+def test_valid_cells_cover_assignment():
+    total = sum(len(valid_cells(a)) for a in ARCH_IDS)
+    assert total == 32  # 40 minus the 8 documented long_500k/enc-dec skips
+    assert "long_500k" in valid_cells("zamba2_1p2b")
+    assert "long_500k" in valid_cells("xlstm_125m")
+    assert "long_500k" not in valid_cells("yi_34b")

@@ -1,0 +1,115 @@
+"""Scheduler policy unit + property tests (FCFS / PATS / DL)."""
+
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduling import HOST_KIND, ReadyScheduler
+from repro.core.workflow import DataChunk, Operation, OperationInstance, StageInstance
+
+_uid = itertools.count(10_000)
+
+
+def mk_task(speedup, deps=(), ti=0.2, name="op"):
+    si = StageInstance(uid=next(_uid), chunk=DataChunk(0), stage=None)
+    oi = OperationInstance(
+        uid=next(_uid), chunk=DataChunk(0), op=Operation(name),
+        stage_instance=si,
+    )
+    oi.speedup = speedup
+    oi.transfer_impact = ti
+    oi.deps = set(deps)
+    return oi
+
+
+def test_fcfs_is_fifo():
+    s = ReadyScheduler("fcfs")
+    tasks = [mk_task(i) for i in (5, 1, 9)]
+    for t in tasks:
+        s.push(t)
+    assert [s.pop("gpu") for _ in range(3)] == tasks
+
+
+def test_pats_pop_extremes():
+    s = ReadyScheduler("pats")
+    tasks = [mk_task(x) for x in (4.0, 22.0, 1.1, 9.0)]
+    for t in tasks:
+        s.push(t)
+    assert s.pop("gpu").speedup == 22.0       # accelerator takes max
+    assert s.pop(HOST_KIND).speedup == 1.1    # host core takes min
+    assert s.pop("gpu").speedup == 9.0
+    assert s.pop(HOST_KIND).speedup == 4.0
+    assert s.pop("gpu") is None
+
+
+def test_dl_reuse_without_speedups():
+    s = ReadyScheduler("fcfs", locality=True, speedups_known=False)
+    producer_uid = 777
+    reuser = mk_task(1.5, deps=[producer_uid])
+    other = mk_task(30.0)
+    s.push(other)
+    s.push(reuser)
+    got = s.pop("gpu", resident_producers={producer_uid})
+    assert got is reuser  # reuse always wins without estimates
+    assert s.stats.reuse_hits == 1
+
+
+def test_dl_rule_with_speedups():
+    # S_d >= S_q * (1 - transferImpact) chooses the dependent...
+    s = ReadyScheduler("pats", locality=True)
+    dep = mk_task(8.0, deps=[1])
+    queue_op = mk_task(9.0, ti=0.2)
+    s.push(dep)
+    s.push(queue_op)
+    assert s.pop("gpu", resident_producers={1}) is dep  # 8 >= 9*0.8
+    # ...and the non-resident op when its speedup dominates.
+    s2 = ReadyScheduler("pats", locality=True)
+    dep2 = mk_task(5.0, deps=[1])
+    q2 = mk_task(9.0, ti=0.2)
+    s2.push(dep2)
+    s2.push(q2)
+    assert s2.pop("gpu", resident_producers={1}) is q2  # 5 < 7.2
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=40))
+def test_pats_invariant_gpu_descending_cpu_ascending(speedups):
+    s = ReadyScheduler("pats")
+    for x in speedups:
+        s.push(mk_task(x))
+    gpu_seq = []
+    while len(s) > len(speedups) // 2:
+        gpu_seq.append(s.pop("gpu").speedup)
+    cpu_seq = []
+    while s:
+        cpu_seq.append(s.pop(HOST_KIND).speedup)
+    assert gpu_seq == sorted(gpu_seq, reverse=True)
+    assert cpu_seq == sorted(cpu_seq)
+    # every GPU-popped speedup >= every CPU-popped one at pop time:
+    if gpu_seq and cpu_seq:
+        assert min(gpu_seq) >= max(cpu_seq) - 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(0.5, 50.0), min_size=2, max_size=20),
+    st.integers(0, 19),
+)
+def test_dl_never_loses_tasks(speedups, resident_idx):
+    """Every pushed task is popped exactly once under DL."""
+    s = ReadyScheduler("pats", locality=True)
+    tasks = [
+        mk_task(x, deps=[i] if i % 3 == 0 else ())
+        for i, x in enumerate(speedups)
+    ]
+    for t in tasks:
+        s.push(t)
+    resident = {resident_idx % len(speedups)}
+    popped = []
+    kinds = itertools.cycle(["gpu", HOST_KIND, "gpu"])
+    while s:
+        t = s.pop(next(kinds), resident_producers=resident)
+        assert t is not None
+        popped.append(t.uid)
+    assert sorted(popped) == sorted(t.uid for t in tasks)
+    assert len(set(popped)) == len(tasks)

@@ -1,0 +1,93 @@
+"""Workflow-graph unit + property tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workflow import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    Operation,
+    Stage,
+)
+
+
+def chain_workflow(n_stages=2, ops_per_stage=3):
+    stages = [
+        Stage.chain(
+            f"s{i}", [Operation(f"s{i}_op{j}") for j in range(ops_per_stage)]
+        )
+        for i in range(n_stages)
+    ]
+    return AbstractWorkflow.chain("wf", stages)
+
+
+def test_cycle_detection():
+    ops = (Operation("a"), Operation("b"))
+    with pytest.raises(ValueError, match="cycle"):
+        Stage("s", ops, edges=(("a", "b"), ("b", "a")))
+
+
+def test_unknown_edge_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        Stage("s", (Operation("a"),), edges=(("a", "zzz"),))
+
+
+def test_replicate_instantiation_counts():
+    wf = chain_workflow(2, 3)
+    chunks = [DataChunk(i) for i in range(5)]
+    cw = ConcreteWorkflow.replicate(wf, chunks)
+    assert len(cw.stage_instances) == 10        # 5 chunks x 2 stages
+    assert len(cw.op_instances) == 30           # x3 ops
+
+
+def test_cross_stage_fine_grain_deps():
+    wf = chain_workflow(2, 2)
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(0)])
+    stages = sorted(cw.stage_instances.values(), key=lambda s: s.uid)
+    seg, feat = stages
+    sink = [o for o in seg.op_instances if o.op.name == "s0_op1"][0]
+    src = [o for o in feat.op_instances if o.op.name == "s1_op0"][0]
+    assert sink.uid in src.deps
+
+
+def test_stage_parallel_fan_in():
+    a = Stage.single(Operation("a"))
+    b = Stage.single(Operation("b"))
+    wf = AbstractWorkflow("wf", (a, b), (("a", "b"),))
+    cw = ConcreteWorkflow.stage_parallel(
+        wf, {"a": [DataChunk(0), DataChunk(1)], "b": [DataChunk(2)]}
+    )
+    b_inst = [
+        s for s in cw.stage_instances.values() if s.stage.name == "b"
+    ][0]
+    assert len(b_inst.deps) == 2  # both copies of A feed B
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_chunks=st.integers(1, 6),
+    n_stages=st.integers(1, 3),
+    n_ops=st.integers(1, 4),
+)
+def test_ready_order_is_valid_schedule(n_chunks, n_stages, n_ops):
+    """Executing ops whenever ready is always dependency-consistent."""
+    wf = chain_workflow(n_stages, n_ops)
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(i) for i in range(n_chunks)])
+    done: set[int] = set()
+    order = []
+    remaining = dict(cw.op_instances)
+    while remaining:
+        ready = [
+            oi for oi in remaining.values() if oi.deps.issubset(done)
+        ]
+        assert ready, "deadlock: no ready ops but work remains"
+        nxt = min(ready, key=lambda o: o.uid)
+        done.add(nxt.uid)
+        order.append(nxt.uid)
+        del remaining[nxt.uid]
+    assert cw.validate_schedule(order)
+    # And a reversed schedule is rejected whenever any dependency exists.
+    has_deps = any(oi.deps for oi in cw.op_instances.values())
+    if has_deps:
+        assert not cw.validate_schedule(list(reversed(order)))
