@@ -32,7 +32,9 @@ def main() -> None:
     from benchmarks.paper_figs import ALL_BENCHES
 
     selected = (
-        args.only.split(",") if args.only else list(ALL_BENCHES) + ["roofline"]
+        args.only.split(",")
+        if args.only
+        else list(ALL_BENCHES) + ["staging", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -45,6 +47,10 @@ def main() -> None:
                     print(f"roofline/skipped,0,run repro.launch.dryrun --sweep")
                     continue
                 bench_rows = rows("16x16") + rows("2x16x16")
+            elif name == "staging":
+                from benchmarks.staging import bench_staging
+
+                bench_rows = bench_staging()
             elif name == "fig14":
                 bench_rows = ALL_BENCHES[name](full=args.full)
             elif name == "fig7":

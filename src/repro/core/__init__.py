@@ -8,6 +8,10 @@
 * :mod:`repro.core.simulator` — discrete-event cluster simulator
 * :mod:`repro.core.calibration` — paper-calibrated workload model
 * :mod:`repro.core.cost_model` — roofline PATS estimates (TPU plane)
+
+Cluster-level data locality (tiered region store, placement directory,
+staging agents) lives in the sibling package :mod:`repro.staging` and
+is wired through the Manager/Worker/simulator here.
 """
 
 from .calibration import OP_PROFILES, PIPELINE_ORDER

@@ -26,11 +26,14 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .workflow import ConcreteWorkflow, StageInstance
 from .worker import WorkerRuntime
+from ..staging import PlacementDirectory, PlacementPolicy, op_key, select_lease
+from ..staging.tiers import RegionKey, sizeof
 
 __all__ = ["Manager", "ManagerConfig"]
 
@@ -41,6 +44,12 @@ class ManagerConfig:
     heartbeat_timeout: float = 60.0  # seconds without progress => dead
     backup_tasks: bool = True       # duplicate tail leases
     poll_interval: float = 0.01
+    # Cluster-level locality-aware lease placement (repro.staging): lease
+    # a dependent stage instance to the worker already holding the
+    # largest fraction of its input bytes, demand-driven otherwise.
+    locality_aware: bool = False
+    placement: PlacementPolicy = field(default_factory=PlacementPolicy)
+    directory: Optional[PlacementDirectory] = None  # default: fresh one
 
 
 @dataclass
@@ -57,12 +66,17 @@ class Manager:
         self.cfg = cfg or ManagerConfig()
         self._lock = threading.RLock()
         self._workers: dict[int, _WorkerState] = {}
-        self._pending: list[StageInstance] = []
+        self._pending: deque[StageInstance] = deque()
         self._stage_done: set[int] = set()
         self._stage_outputs: dict[int, dict[str, Any]] = {}
         self._dup_issued: set[int] = set()
         self.recovered_leases = 0
         self.duplicated_leases = 0
+        # Cluster placement metadata + locality accounting.
+        self.directory = self.cfg.directory or PlacementDirectory()
+        self.placement_local = 0       # dependent leased where its data is
+        self.placement_remote = 0      # dependent leased elsewhere
+        self.staged_bytes_avoided = 0  # inputs not re-sent: already staged
         self._done_event = threading.Event()
         self._monitor: Optional[threading.Thread] = None
         self._stop_monitor = False
@@ -72,6 +86,10 @@ class Manager:
     def register_worker(self, runtime: WorkerRuntime) -> None:
         runtime.on_stage_complete = self._make_completion_cb(runtime.worker_id)
         runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
+        # Region pull path: the StagingAgent prefetches completed
+        # upstream outputs, and lanes re-pull inputs evicted under soft
+        # tier budgets (worker._gather_inputs fallback).
+        runtime.fetch_region = self._fetch_region
         with self._lock:
             self._workers[runtime.worker_id] = _WorkerState(runtime=runtime)
 
@@ -89,7 +107,9 @@ class Manager:
                 return
             for uid in st.leases:
                 if uid not in self._stage_done:
+                    self.recovered_leases += 1
                     self._pending.append(self.cw.stage_instances[uid])
+            self.directory.drop_worker(worker_id)
             self._dispatch_all_locked()
 
     # -- execution -----------------------------------------------------------
@@ -153,6 +173,20 @@ class Manager:
                         wst.runtime.cancel_stage(c_uid)
                         wst.leases.discard(c_uid)
             primary = self.cw.stage_instances[primary_uid]
+            # The completing worker now holds this stage's sink outputs:
+            # record placements so dispatch can route dependents to it.
+            sinks = set(primary.stage.sinks())
+            for oi in primary.op_instances:
+                if oi.op.name in sinks and outputs.get(oi.op.name) is not None:
+                    if si.uid != primary_uid and st is not None:
+                        # A backup twin finished: its store holds the
+                        # outputs under the clone's op uids.  Alias them
+                        # under the primary keys (same objects, no copy)
+                        # so the placement below is actually serviceable.
+                        st.runtime.provide_input(oi.uid, outputs[oi.op.name])
+                    self.directory.record(
+                        worker_id, op_key(oi.uid), sizeof(outputs[oi.op.name])
+                    )
             # Unlock downstream stage instances and forward their inputs.
             for dep_uid in primary.dependents:
                 dsi = self.cw.stage_instances[dep_uid]
@@ -166,19 +200,107 @@ class Manager:
             self._check_done_locked()
 
     def _dispatch_all_locked(self) -> None:
-        for st in self._workers.values():
-            if st.dead or not st.runtime.alive:
-                continue
-            while len(st.leases) < self.cfg.window and self._pending:
-                si = self._pending.pop(0)
-                st.leases.add(si.uid)
-                self._forward_upstream_outputs(st.runtime, si)
-                st.runtime.submit_stage(si)
+        live = {
+            wid: st
+            for wid, st in self._workers.items()
+            if not st.dead and st.runtime.alive
+        }
+        if self.cfg.locality_aware:
+            self._dispatch_locality_locked(live)
+        else:
+            for wid, st in live.items():
+                while len(st.leases) < self.cfg.window and self._pending:
+                    self._lease_locked(wid, st, self._pending.popleft())
         if self.cfg.backup_tasks and not self._pending:
             self._issue_backups_locked()
 
+    def _dispatch_locality_locked(
+        self, live: dict[int, _WorkerState]
+    ) -> None:
+        """Locality-aware lease placement over the pending deque.
+
+        First pass may *defer* a stage whose input bytes live on another
+        worker that still has window slack; the second pass is purely
+        work-conserving so nothing starves (demand-driven fallback).
+        """
+        for allow_defer in (True, False):
+            progress = True
+            while progress and self._pending:
+                progress = False
+                slack = {
+                    wid
+                    for wid, st in live.items()
+                    if len(st.leases) < self.cfg.window
+                }
+                if not slack:
+                    return
+                for wid, st in live.items():
+                    if len(st.leases) >= self.cfg.window or not self._pending:
+                        continue
+                    idx = select_lease(
+                        self._pending,
+                        wid,
+                        self.directory,
+                        self._input_keys,
+                        self.cfg.placement,
+                        workers_with_slack=slack,
+                        allow_defer=allow_defer,
+                    )
+                    if idx is None:
+                        continue
+                    si = self._pending[idx]
+                    del self._pending[idx]
+                    self._lease_locked(wid, st, si)
+                    progress = True
+
+    def _lease_locked(
+        self, wid: int, st: _WorkerState, si: StageInstance
+    ) -> None:
+        keys = self._input_keys(si)
+        if keys:
+            best = self.directory.best_worker(keys)
+            if best is not None and best[1] > 0.0:
+                if best[0] == wid:
+                    self.placement_local += 1
+                else:
+                    self.placement_remote += 1
+        st.leases.add(si.uid)
+        self._forward_upstream_outputs(st.runtime, si)
+        st.runtime.submit_stage(si)
+
+    def _input_keys(self, si: StageInstance) -> list[RegionKey]:
+        """Region keys of a stage instance's cross-stage inputs."""
+        local = {oi.uid for oi in si.op_instances}
+        return [
+            op_key(dep_uid)
+            for oi in si.op_instances
+            for dep_uid in oi.deps
+            if dep_uid not in local
+        ]
+
+    def _fetch_region(self, key: RegionKey) -> Any:
+        """StagingAgent pull: output of a completed upstream op, or None."""
+        if not (isinstance(key, tuple) and len(key) == 2 and key[0] == "op"):
+            return None
+        with self._lock:
+            oi = self.cw.op_instances.get(key[1])
+            if oi is None:
+                return None
+            outputs = self._stage_outputs.get(oi.stage_instance.uid)
+            if not outputs:
+                return None
+            return outputs.get(oi.op.name)
+
     def _forward_upstream_outputs(self, rt: WorkerRuntime, si: StageInstance) -> None:
-        """Provide cross-stage inputs (sink op outputs of upstream stages)."""
+        """Provide cross-stage inputs (sink op outputs of upstream stages).
+
+        Workers running a StagingAgent get the *pull* flavor: inputs not
+        already staged are left for the agent to prefetch asynchronously
+        (submit_stage enqueues the requests), overlapping the copy with
+        whatever the lanes are executing.  Agent-less workers get the
+        classic synchronous push.
+        """
+        lazy = getattr(rt, "agent", None) is not None
         for oi in si.op_instances:
             for dep_uid in oi.deps:
                 if dep_uid not in self.cw.op_instances:
@@ -189,7 +311,16 @@ class Manager:
                         dep_oi.stage_instance.uid, {}
                     )
                     if dep_oi.op.name in up_outputs:
-                        rt.provide_input(dep_uid, up_outputs[dep_oi.op.name])
+                        value = up_outputs[dep_oi.op.name]
+                        if rt.mark_staged_input(dep_uid):
+                            # Already staged on that worker (it ran the
+                            # upstream, or its agent prefetched it): skip
+                            # the copy and account the savings.
+                            self.staged_bytes_avoided += sizeof(value)
+                            continue
+                        if lazy:
+                            continue  # agent pulls via fetch_region
+                        rt.provide_input(dep_uid, value)
 
     def _issue_backups_locked(self) -> None:
         clones_of = getattr(self, "_clones_of", None)
@@ -215,6 +346,13 @@ class Manager:
             self._dup_issued.add(si.uid)
             self.duplicated_leases += 1
             clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
+            # Mirror the original's cross-stage input edges so the twin
+            # computes on the same upstream outputs (a bare re-instance
+            # would run its source ops on the raw chunk payload).
+            local = {o.uid for o in si.op_instances}
+            orig_by_name = {o.op.name: o for o in si.op_instances}
+            for c_oi in clone.op_instances:
+                c_oi.deps |= orig_by_name[c_oi.op.name].deps - local
             clones_of[clone.uid] = si.uid
             st.leases.add(clone.uid)
             self._forward_upstream_outputs(st.runtime, clone)
@@ -235,7 +373,7 @@ class Manager:
             time.sleep(self.cfg.poll_interval)
             now = time.monotonic()
             with self._lock:
-                for st in self._workers.values():
+                for wid, st in self._workers.items():
                     if st.dead:
                         continue
                     inflight = bool(st.leases)
@@ -244,6 +382,7 @@ class Manager:
                     )
                     if not st.runtime.alive or (inflight and expired):
                         st.dead = True
+                        self.directory.drop_worker(wid)
                         for uid in st.leases:
                             if uid not in self._stage_done:
                                 self.recovered_leases += 1

@@ -32,6 +32,7 @@ import numpy as np
 
 from . import calibration as cal
 from .scheduling import HOST_KIND, ReadyScheduler
+from ..staging import PlacementDirectory
 from .workflow import (
     AbstractWorkflow,
     ConcreteWorkflow,
@@ -129,6 +130,14 @@ class SimConfig:
     heartbeat_timeout: float = 5.0
     straggler_factor: dict[int, float] = field(default_factory=dict)
     backup_tasks: bool = False         # duplicate tail leases
+    # Hierarchical data staging (repro.staging): model inter-node tier
+    # copy costs; optionally consult the placement directory so leases
+    # go where the input bytes already live.  Off by default (the seed
+    # model treats cross-node staging as free).
+    staging: bool = False              # charge cross-node staging copies
+    staging_locality: bool = True      # directory-driven lease placement
+    stage_output_mb: float = 48.0      # inter-stage region per tile (MB)
+    interconnect_gb_s: float = 6.0     # node-to-node staging bandwidth
 
     @property
     def gpus(self) -> int:
@@ -156,6 +165,11 @@ class SimResult:
     completed_ok: bool
     recovered_leases: int = 0
     duplicated_leases: int = 0
+    # Staging accounting (cfg.staging): bytes of stage inputs served
+    # from node-local tiers vs copied across the interconnect.
+    staged_bytes_avoided: int = 0
+    cross_node_bytes: int = 0
+    transfer_wait: float = 0.0
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -205,6 +219,9 @@ class _Node:
     alive: bool = True
     # chunk_id -> io-ready time (tile read from the filesystem)
     io_ready: dict[int, float] = field(default_factory=dict)
+    # Inter-node staging link (NIC) busy-until time: copies into this
+    # node serialize on its ingress bandwidth (cfg.interconnect_gb_s).
+    net_free: float = 0.0
 
 
 class ClusterSim:
@@ -219,6 +236,16 @@ class ClusterSim:
         self._io_pipe_free = 0.0
         self.recovered = 0
         self.duplicated = 0
+        # Hierarchical staging state (cfg.staging).
+        self.staging_dir = PlacementDirectory()
+        self.staged_bytes_avoided = 0
+        self.cross_node_bytes = 0
+        self.transfer_wait = 0.0
+        self._stage_bytes = int(cfg.stage_output_mb * 2**20)
+        self._interconnect_bps = cfg.interconnect_gb_s * 2**30
+        # (node_id, stage uid) -> time its replica finishes landing; a
+        # replica recorded in the directory may still be in flight.
+        self._region_ready: dict[tuple[int, int], float] = {}
 
         self.nodes: list[_Node] = []
         for nid in range(cfg.n_nodes):
@@ -357,6 +384,9 @@ class ClusterSim:
             completed_ok=completed,
             recovered_leases=self.recovered,
             duplicated_leases=self.duplicated,
+            staged_bytes_avoided=self.staged_bytes_avoided,
+            cross_node_bytes=self.cross_node_bytes,
+            transfer_wait=self.transfer_wait,
         )
 
     # -- Manager: demand-driven assignment --------------------------------------
@@ -377,6 +407,20 @@ class ClusterSim:
     def _pick_for_node(self, node: _Node) -> StageInstance:
         """FIFO, with a locality preference: a stage whose upstream ran
         on this node keeps its data local (files / in-memory store)."""
+        if self.cfg.staging:
+            if not self.cfg.staging_locality:
+                return self.pending.pop(0)  # pure demand-driven baseline
+            # Directory-driven: lease the instance with the largest
+            # fraction of its input bytes already staged on this node.
+            best_i, best_f = 0, 0.0
+            for i, si in enumerate(self.pending):
+                if not si.deps:
+                    continue
+                keys = [("stage", d) for d in si.deps]
+                f = self.staging_dir.local_fraction(node.node_id, keys)
+                if f > best_f:
+                    best_i, best_f = i, f
+            return self.pending.pop(best_i)
         for i, si in enumerate(self.pending):
             if si.deps and all(
                 self.stage_node.get(d) == node.node_id for d in si.deps
@@ -392,6 +436,54 @@ class ClusterSim:
         )
 
     def _start_stage(self, node: _Node, si: StageInstance) -> None:
+        if not node.alive or si.uid in self.stage_done:
+            return
+        delay = self._staging_delay(node, si)
+        if delay > 0.0:
+            # Upstream regions must be copied into this node's tiers
+            # before the stage's source ops can run (async with respect
+            # to the node's lanes — only this stage waits).
+            self.transfer_wait += delay
+            self._post(
+                self.now + delay,
+                lambda node=node, si=si: self._start_stage_ops(node, si),
+            )
+            return
+        self._start_stage_ops(node, si)
+
+    def _staging_delay(self, node: _Node, si: StageInstance) -> float:
+        """Seconds until ``si``'s missing inputs are staged onto ``node``.
+
+        Copies serialize on the node's ingress link (its NIC is a shared
+        resource, like the Lustre pipe for tile reads), so a node that
+        keeps leasing remote-affine stages pays compounding delays —
+        which is exactly what locality-aware placement avoids.
+        """
+        if not self.cfg.staging or not si.deps:
+            return 0.0
+        ready = self.now
+        for d in si.deps:
+            key = ("stage", d)
+            n = self._stage_bytes
+            if self.staging_dir.holders(key).get(node.node_id):
+                self.staged_bytes_avoided += n
+                # The replica may still be landing from an earlier copy
+                # (or from local production: ready time 0 = resident).
+                ready = max(
+                    ready, self._region_ready.get((node.node_id, d), 0.0)
+                )
+            else:
+                self.cross_node_bytes += n
+                start = max(self.now, node.net_free)
+                node.net_free = start + n / self._interconnect_bps
+                ready = max(ready, node.net_free)
+                # The directory learns of the replica now; consumers
+                # scheduled before it lands gate on _region_ready.
+                self.staging_dir.record(node.node_id, key, n)
+                self._region_ready[(node.node_id, d)] = node.net_free
+        return ready - self.now
+
+    def _start_stage_ops(self, node: _Node, si: StageInstance) -> None:
         if not node.alive or si.uid in self.stage_done:
             return
         # Tile read from the shared filesystem gates the source ops.
@@ -535,6 +627,12 @@ class ClusterSim:
             return
         self.stage_done.add(si.uid)
         node.leased.discard(si.uid)
+        if self.cfg.staging:
+            # This node now holds the stage's output region (host tier).
+            primary_uid = self._clone_of.get(si.uid, si.uid)
+            self.staging_dir.record(
+                node.node_id, ("stage", primary_uid), self._stage_bytes
+            )
         # A backup clone finishing completes the original, and vice versa.
         orig_uid = self._clone_of.get(si.uid)
         effective = self.cw.stage_instances.get(orig_uid, si) if orig_uid else si
@@ -573,6 +671,7 @@ class ClusterSim:
     def _kill_node(self, nid: int) -> None:
         node = self.nodes[nid]
         node.alive = False
+        self.staging_dir.drop_worker(nid)  # its staged replicas are gone
         lost = sorted(uid for uid in node.leased if uid not in self.stage_done)
         node.leased.clear()
 

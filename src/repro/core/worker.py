@@ -32,6 +32,8 @@ from typing import Any, Callable, Optional
 from .scheduling import HOST_KIND, ReadyScheduler
 from .variants import VariantRegistry, registry as global_registry
 from .workflow import OperationInstance, StageInstance
+from ..staging import RegionStore, StagingAgent, StagingConfig, op_key
+from ..staging.tiers import HostTier
 
 __all__ = ["DeviceMemory", "LaneSpec", "OpContext", "WorkerRuntime"]
 
@@ -44,12 +46,14 @@ class DeviceMemory:
         self._store: "OrderedDict[int, Any]" = OrderedDict()
         self.uploads = 0
         self.downloads = 0
+        self.evictions = 0
 
     def put(self, uid: int, value: Any) -> None:
         self._store[uid] = value
         self._store.move_to_end(uid)
         while len(self._store) > self.slots:
             self._store.popitem(last=False)
+            self.evictions += 1
 
     def get(self, uid: int) -> Any:
         value = self._store[uid]
@@ -111,6 +115,7 @@ class WorkerRuntime:
         locality: bool = False,
         prefetch: bool = False,
         speedups_known: bool = True,
+        staging: StagingConfig | None = None,
         variant_registry: VariantRegistry | None = None,
         on_stage_complete: Callable[[StageInstance, dict[str, Any]], None] | None = None,
         observe_runtimes: bool = True,
@@ -139,8 +144,27 @@ class WorkerRuntime:
         self._stop = False
         self._failed = False
 
+        # Hierarchical region store: the host tier replaces the old
+        # ad-hoc output dict; disk/global tiers come from ``staging``.
+        self.staging = staging
+        self.store: RegionStore = (
+            staging.build_store()
+            if staging is not None
+            else RegionStore([HostTier()])
+        )
+        # Cross-worker pull hook, wired by the Manager when staging is on.
+        self.fetch_region: Callable[[Any], Any] | None = None
+        self.agent: StagingAgent | None = None
+        if staging is not None and staging.prefetch:
+            self.agent = StagingAgent(
+                self.store,
+                worker_id=worker_id,
+                fetch=self._fetch_region,
+                on_staged=self._input_staged,
+                watermark=staging.watermark,
+            )
+
         # Execution state.
-        self._op_outputs: dict[int, Any] = {}      # uid -> host-resident output
         self._op_done: set[int] = set()
         self._cancelled: set[int] = set()
         self._stages: dict[int, StageInstance] = {}
@@ -150,6 +174,8 @@ class WorkerRuntime:
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> None:
+        if self.agent is not None:
+            self.agent.start()
         for lane in self._lanes:
             t = threading.Thread(
                 target=self._lane_loop, args=(lane,), daemon=True,
@@ -165,6 +191,8 @@ class WorkerRuntime:
         for lane in self._lanes:
             if lane.thread is not None:
                 lane.thread.join(timeout=5.0)
+        if self.agent is not None:
+            self.agent.stop()
 
     def kill(self) -> None:
         """Simulate a node failure: lanes stop, state is lost."""
@@ -172,6 +200,10 @@ class WorkerRuntime:
             self._failed = True
             self._stop = True
             self._work_ready.notify_all()
+        if self.agent is not None:
+            # A dead node must not keep pulling regions or mutating
+            # execution state behind the Manager's back.
+            self.agent.stop()
 
     @property
     def alive(self) -> bool:
@@ -183,17 +215,73 @@ class WorkerRuntime:
         """Lease received from the Manager: export fine-grain ops."""
         with self._lock:
             self._stages[si.uid] = si
+            local = {o.uid for o in si.op_instances}
             for oi in si.op_instances:
                 self._maybe_estimate(oi)
                 if oi.deps.issubset(self._op_done) and oi.uid not in self._op_done:
                     self.scheduler.push(oi)
             self._work_ready.notify_all()
+            missing = [
+                op_key(dep)
+                for oi in si.op_instances
+                for dep in oi.deps
+                if dep not in self._op_done and dep not in local
+            ]
+        # Leased but not started: ask the staging agent to pull the
+        # cross-stage inputs into the host tier ahead of execution.
+        if self.agent is not None and missing:
+            self.agent.request_prefetch(missing)
 
     def provide_input(self, uid: int, value: Any) -> None:
         """Host-side injection of upstream outputs (cross-worker flow)."""
         with self._lock:
-            self._op_outputs[uid] = value
+            self.store.put(op_key(uid), value)
             self._op_done.add(uid)
+
+    def has_region(self, key: Any) -> bool:
+        """True when ``key`` is resident in any tier of this worker."""
+        return key in self.store
+
+    def mark_staged_input(self, uid: int) -> bool:
+        """Skip-copy path: if op ``uid``'s output is already resident in
+        a tier here, mark it available (and unlock waiting ops) so the
+        Manager need not re-send the bytes.  False => caller must
+        ``provide_input``."""
+        with self._lock:
+            if op_key(uid) not in self.store:
+                return False
+            if uid not in self._op_done:
+                self._op_done.add(uid)
+                self._release_dependents_locked(uid)
+            return True
+
+    def _fetch_region(self, key: Any) -> Any:
+        fetch = self.fetch_region
+        return fetch(key) if fetch is not None else None
+
+    def _input_staged(self, key: Any, nbytes: int = 0) -> None:
+        """StagingAgent landed/promoted a region: unlock waiting ops."""
+        if not (isinstance(key, tuple) and len(key) == 2 and key[0] == "op"):
+            return
+        uid = key[1]
+        with self._lock:
+            if uid in self._op_done:
+                return
+            self._op_done.add(uid)
+            self._release_dependents_locked(uid)
+
+    def _release_dependents_locked(self, produced_uid: int) -> None:
+        for s in self._stages.values():
+            for d in s.op_instances:
+                if (
+                    produced_uid in d.deps
+                    and d.deps.issubset(self._op_done)
+                    and d.uid not in self._op_done
+                    and d.uid not in self._cancelled
+                ):
+                    self._maybe_estimate(d)
+                    self.scheduler.push(d)
+        self._work_ready.notify_all()
 
     def cancel_stage(self, si_uid: int) -> None:
         with self._lock:
@@ -248,11 +336,16 @@ class WorkerRuntime:
             "downloads": sum(
                 l.memory.downloads for l in self._lanes if l.memory is not None
             ),
+            "device_evictions": sum(
+                l.memory.evictions for l in self._lanes if l.memory is not None
+            ),
+            "staging": self.store.stats(),
+            "prefetch": self.agent.stats() if self.agent is not None else {},
         }
 
     def output_of(self, oi_uid: int) -> Any:
         with self._lock:
-            return self._op_outputs.get(oi_uid)
+            return self.store.get(op_key(oi_uid))
 
     # -- lane main loop -----------------------------------------------------------
 
@@ -299,9 +392,21 @@ class WorkerRuntime:
         """Upload phase: pull dep outputs into this lane's memory."""
         inputs: dict[str, Any] = {}
         with self._lock:
+            # Host-side read through the region store (promotes from a
+            # slow tier if the StagingAgent has not gotten there yet).
             dep_objs = [
-                (uid, self._op_outputs.get(uid)) for uid in sorted(oi.deps)
+                (uid, self.store.get(op_key(uid), promote=True))
+                for uid in sorted(oi.deps)
             ]
+        # An input marked available but since evicted (soft tier budgets)
+        # is re-pulled from the Manager synchronously.  Deliberately
+        # outside self._lock: the fetch takes the Manager's lock, and the
+        # Manager calls into this worker while holding it (lock order is
+        # always manager -> worker).
+        dep_objs = [
+            (uid, v if v is not None else self._fetch_region(op_key(uid)))
+            for uid, v in dep_objs
+        ]
         for uid, value in dep_objs:
             if value is None:
                 continue
@@ -333,11 +438,13 @@ class WorkerRuntime:
                 lane.memory.put(oi.uid, out)
                 if not self.locality:
                     lane.memory.downloads += 1  # basic mode: always download
-            self._op_outputs[oi.uid] = out  # host copy (download / write-back)
+            self.store.put(op_key(oi.uid), out)  # host write-back (download)
+            # Keep the output resident until its consumers (and the
+            # stage-completion read below) ran: tier budgets are a soft
+            # cap for the live working set, never a correctness hazard.
+            self.store.pin(op_key(oi.uid))
             self._op_done.add(oi.uid)
             self.completion_order.append(oi.uid)
-            if self.on_heartbeat is not None:
-                self.on_heartbeat(self.worker_id)
             si = oi.stage_instance
             for dep_uid in sorted(oi.dependents):
                 d = self._find_op(dep_uid)
@@ -349,16 +456,42 @@ class WorkerRuntime:
                 ):
                     self._maybe_estimate(d)
                     self.scheduler.push(d)
+            # A producer whose local consumers all finished may be
+            # evicted again (cross-worker consumers are re-fed by the
+            # Manager from its own output copy if needed).
+            for dep_uid in oi.deps:
+                self._maybe_unpin_locked(dep_uid)
             stage_done = all(
                 o.uid in self._op_done or o.uid in self._cancelled
                 for o in si.op_instances
             )
             self._work_ready.notify_all()
+        # Callbacks into the Manager happen with the worker lock
+        # released: lock order is always manager -> worker, never the
+        # reverse (the Manager calls submit/provide/mark under its own
+        # lock, so calling it while holding ours would deadlock).
+        if self.on_heartbeat is not None:
+            self.on_heartbeat(self.worker_id)
         if stage_done and self.on_stage_complete is not None:
             outputs = {
-                o.op.name: self._op_outputs.get(o.uid) for o in si.op_instances
+                o.op.name: self.store.get(op_key(o.uid))
+                for o in si.op_instances
             }
+            with self._lock:
+                for o in si.op_instances:
+                    self._maybe_unpin_locked(o.uid)
             self.on_stage_complete(si, outputs)
+
+    def _maybe_unpin_locked(self, uid: int) -> None:
+        """Unpin ``uid``'s output once no locally-known op still needs it."""
+        oi = self._find_op(uid)
+        if oi is None:
+            return
+        if all(
+            u in self._op_done or u in self._cancelled or self._find_op(u) is None
+            for u in oi.dependents
+        ):
+            self.store.unpin(op_key(uid))
 
     def _find_op(self, uid: int) -> Optional[OperationInstance]:
         for s in self._stages.values():

@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from .ledger import ChunkLedger
+from ..staging import RegionStore, chunk_key
 
 __all__ = ["TokenChunkSource", "PrefetchLoader"]
 
@@ -41,7 +42,14 @@ class TokenChunkSource:
 
 class PrefetchLoader:
     """Leases chunks, materializes batches, keeps ``depth`` batches
-    device-ready ahead of the consumer (double buffering by default)."""
+    device-ready ahead of the consumer (double buffering by default).
+
+    With a ``store`` (hierarchical RegionStore), materialized batches
+    are also staged into the host tier under ``chunk_key(cid)``: a
+    re-leased chunk (worker failure, epoch replay) is served from the
+    tier hierarchy instead of re-materialized, and other components
+    (StagingAgent, checkpoint writer) can find the staged bytes.
+    """
 
     def __init__(
         self,
@@ -52,6 +60,7 @@ class PrefetchLoader:
         lease_block: int = 8,
         depth: int = 2,
         device_put: Optional[Callable[[Any], Any]] = None,
+        store: Optional[RegionStore] = None,
     ):
         self.ledger = ledger
         self.source = source
@@ -59,10 +68,26 @@ class PrefetchLoader:
         self.lease_block = lease_block
         self.depth = depth
         self.device_put = device_put or jax.device_put
+        self.store = store
+        self.store_hits = 0
+        self.staged_chunks = 0
         self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self.chunks_seen: list[int] = []
+
+    def _materialize(self, cid: int) -> Any:
+        if self.store is not None:
+            batch = self.store.get(chunk_key(cid), promote=True)
+            if batch is not None:
+                self.store_hits += 1
+                return batch
+        arr = self.source(cid)
+        batch = self.device_put({"tokens": arr})
+        if self.store is not None:
+            self.store.put(chunk_key(cid), batch)
+            self.staged_chunks += 1
+        return batch
 
     def _fill(self) -> None:
         while not self._stop:
@@ -73,8 +98,7 @@ class PrefetchLoader:
             for cid in ids:
                 if self._stop:
                     return
-                arr = self.source(cid)
-                batch = self.device_put({"tokens": arr})
+                batch = self._materialize(cid)
                 self._q.put((cid, batch))  # blocks when depth ahead
                 self.ledger.heartbeat(self.worker)
 

@@ -29,10 +29,19 @@ from ..configs import ShapeSpec
 from ..models.config import ArchConfig
 from ..models.plan import AttentionPlan, plan_attention
 
-__all__ = ["CellCost", "cell_cost"]
+__all__ = ["CellCost", "cell_cost", "hlo_cost_analysis"]
 
 BF16 = 2
 F32 = 4
+
+
+def hlo_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions
+    (older releases return a one-element list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 # Activation-traffic fudge: reads+writes of the residual stream per
 # block (norms, projections in/out, residual adds).

@@ -40,7 +40,7 @@ from ..optim import AdamW, AdamW8bit, OptState
 from ..train import TrainState, make_prefill_step, make_serve_step, make_train_step
 from ..models.attention import attention_options
 from ..models.transformer import fsdp_gather
-from .costs import cell_cost
+from .costs import cell_cost, hlo_cost_analysis
 from .mesh import axes_for, make_production_mesh
 from .sharding import (
     cache_specs,
@@ -239,7 +239,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo_cost_analysis(compiled)
         hlo = compiled.as_text()
 
     coll = collective_bytes(hlo)

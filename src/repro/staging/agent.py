@@ -1,0 +1,153 @@
+"""Per-worker staging agent: async promote/demote + input prefetch.
+
+The paper overlaps data movement with computation (§IV-D, upload /
+process / download pipeline).  The StagingAgent generalizes that from
+one accelerator lane to the whole storage hierarchy of a worker:
+
+* **prefetch** — the worker enqueues the input keys of stage instances
+  it has *leased but not started*; the agent pulls any that are missing
+  from the fetch source (global tier / remote worker) into the host
+  tier on a background thread, so lanes find them RAM-resident;
+* **promote** — a requested key sitting in a slow tier (disk) is moved
+  up ahead of use;
+* **demote** — when the host tier crosses its high-water mark, LRU
+  regions spill one level down off the critical path, so lane threads
+  rarely block on synchronous eviction.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+from .store import RegionStore
+from .tiers import RegionKey, sizeof
+
+__all__ = ["StagingAgent"]
+
+FetchFn = Callable[[RegionKey], Any]
+
+
+class StagingAgent:
+    def __init__(
+        self,
+        store: RegionStore,
+        *,
+        worker_id: int = 0,
+        fetch: Optional[FetchFn] = None,
+        on_staged: Optional[Callable[[RegionKey, int], None]] = None,
+        watermark: float = 0.9,
+        interval: float = 0.002,
+    ) -> None:
+        self.store = store
+        self.worker_id = worker_id
+        self.fetch = fetch
+        self.on_staged = on_staged  # e.g. PlacementDirectory.record
+        self.watermark = watermark
+        # Idle wake-up only matters when some tier can actually demote;
+        # with all tiers unbounded, poll rarely (requests still wake the
+        # thread immediately via the queue).
+        bounded = any(t.budget_bytes is not None for t in store.tiers)
+        self.interval = interval if bounded else max(interval, 0.25)
+        self._requests: "queue.Queue[Optional[RegionKey]]" = queue.Queue()
+        self._inflight: set[RegionKey] = set()
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        # Counters read by benchmarks / tests.
+        self.prefetched = 0
+        self.prefetched_bytes = 0
+        self.already_resident = 0
+        self.fetch_misses = 0
+        self.demote_moves = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True,
+            name=f"staging-agent-{self.worker_id}",
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop = True
+        self._requests.put(None)
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    # -- worker API --------------------------------------------------------
+
+    def request_prefetch(self, keys) -> None:
+        """Ask for ``keys`` to be host-resident soon (idempotent)."""
+        with self._lock:
+            for key in keys:
+                if key in self._inflight:
+                    continue
+                self._inflight.add(key)
+                self._requests.put(key)
+
+    def stage_now(self, key: RegionKey) -> bool:
+        """Synchronous fallback: a lane needs ``key`` immediately."""
+        return self._stage(key)
+
+    # -- internals ---------------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._stop:
+            try:
+                key = self._requests.get(timeout=self.interval)
+            except queue.Empty:
+                self.demote_moves += self.store.demote_excess(self.watermark)
+                continue
+            if key is None:
+                return
+            try:
+                self._stage(key)
+            finally:
+                with self._lock:
+                    self._inflight.discard(key)
+
+    def _stage(self, key: RegionKey) -> bool:
+        where = self.store.where(key)
+        if where is not None:
+            if where == self.store.tiers[0].name:
+                self.already_resident += 1
+            else:
+                # Promote from a slow tier ahead of use.
+                self.store.get(key, promote=True)
+                self.prefetched += 1
+            # on_staged fires on *every* success path: a region found in
+            # a lower tier (e.g. the shared global store) is just as
+            # newly-available to the consumer as a fetched one.
+            if self.on_staged is not None:
+                self.on_staged(key, 0)
+            return True
+        if self.fetch is None:
+            self.fetch_misses += 1
+            return False
+        value = self.fetch(key)
+        if value is None:
+            self.fetch_misses += 1
+            return False
+        nbytes = sizeof(value)
+        self.store.put(key, value, tier=self.store.tiers[0].name, nbytes=nbytes)
+        self.prefetched += 1
+        self.prefetched_bytes += nbytes
+        if self.on_staged is not None:
+            self.on_staged(key, nbytes)
+        return True
+
+    def stats(self) -> dict[str, int]:
+        return {
+            "prefetched": self.prefetched,
+            "prefetched_bytes": self.prefetched_bytes,
+            "already_resident": self.already_resident,
+            "fetch_misses": self.fetch_misses,
+            "demote_moves": self.demote_moves,
+        }

@@ -1,0 +1,39 @@
+"""Staging configuration shared by Worker, Manager, and benchmarks."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .policy import PlacementPolicy
+from .store import RegionStore
+from .tiers import DiskTier, GlobalTier, HostTier
+
+__all__ = ["StagingConfig"]
+
+
+@dataclass
+class StagingConfig:
+    """How one worker builds its storage hierarchy.
+
+    The host tier always exists (it replaces the worker's ad-hoc output
+    dict); disk and global tiers are optional.  One ``global_tier``
+    instance shared across StagingConfigs models the cluster's shared
+    store, letting StagingAgents prefetch remote outputs.
+    """
+
+    host_budget_bytes: Optional[int] = None   # None = unbounded RAM
+    disk_dir: Optional[str] = None            # spill directory; None = off
+    disk_budget_bytes: Optional[int] = None
+    global_tier: Optional[GlobalTier] = None  # shared cluster store
+    prefetch: bool = True                     # run the StagingAgent thread
+    watermark: float = 0.9                    # host-tier demotion trigger
+    policy: PlacementPolicy = field(default_factory=PlacementPolicy)
+
+    def build_store(self) -> RegionStore:
+        tiers = [HostTier(self.host_budget_bytes)]
+        if self.disk_dir is not None:
+            tiers.append(DiskTier(self.disk_dir, self.disk_budget_bytes))
+        if self.global_tier is not None:
+            tiers.append(self.global_tier)
+        return RegionStore(tiers)

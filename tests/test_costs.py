@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ShapeSpec, get_config
-from repro.launch.costs import cell_cost
+from repro.launch.costs import cell_cost, hlo_cost_analysis
 from repro.models import build_model
 from repro.models.config import reduced
 from repro.optim import AdamW
@@ -38,7 +38,7 @@ def test_train_flops_match_hlo_single_layer(b, s):
     state = TrainState(pshapes, opt_shapes)
     batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
     compiled = jax.jit(step).lower(state, batch).compile()
-    hlo_flops = float(compiled.cost_analysis().get("flops", 0))
+    hlo_flops = float(hlo_cost_analysis(compiled).get("flops", 0))
 
     shape = ShapeSpec("t", s, b, "train")
     analytic = cell_cost(cfg, shape, tp=1).flops
@@ -60,7 +60,7 @@ def test_deep_stack_hlo_undercounts():
         state = TrainState(pshapes, jax.eval_shape(opt.init, pshapes))
         batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
         comp = jax.jit(step).lower(state, batch).compile()
-        return float(comp.cost_analysis().get("flops", 0))
+        return float(hlo_cost_analysis(comp).get("flops", 0))
 
     f1, f4 = hlo_flops(cfg1), hlo_flops(cfg4)
     # scan body counted once: the 4-layer program reports << 4x flops

@@ -1,0 +1,167 @@
+"""Manager fault paths: backup-task twin cancellation and
+heartbeat-expiry reaping (re-lease exactly once)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    LaneSpec,
+    Manager,
+    ManagerConfig,
+    Operation,
+    Stage,
+    VariantRegistry,
+    WorkerRuntime,
+)
+
+
+def _make_registry(block_on_worker0: threading.Event) -> VariantRegistry:
+    """Op that stalls on worker 0's lane until the event is set (lane
+    threads are named ``worker<id>-...``, so behavior is per-worker)."""
+    reg = VariantRegistry()
+
+    def work(ctx):
+        if threading.current_thread().name.startswith("worker0-"):
+            assert block_on_worker0.wait(timeout=30.0)
+        else:
+            time.sleep(0.002)
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    return reg
+
+
+def _single_stage_cw(n_chunks: int) -> ConcreteWorkflow:
+    wf = AbstractWorkflow.chain("faults", [Stage.single(Operation("work"))])
+    return ConcreteWorkflow.replicate(wf, [DataChunk(i) for i in range(n_chunks)])
+
+
+def test_backup_clone_cancelled_on_primary_completion():
+    """Tail of run: the idle worker receives a backup twin; when the
+    primary completes first, the twin's lease is cancelled on the spot."""
+    release = threading.Event()
+    reg = _make_registry(release)
+    cw = _single_stage_cw(1)
+
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()  # w1's lanes intentionally never start: it only queues
+    mgr = Manager(cw, ManagerConfig(window=4, backup_tasks=True,
+                                    heartbeat_timeout=60.0))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    threading.Timer(0.2, release.set).start()
+    try:
+        assert mgr.run(timeout=60.0)
+        assert mgr.duplicated_leases == 1
+        done, total = mgr.progress()
+        assert done == total == 1
+        # The twin on w1 was cancelled, not executed.
+        assert len(w1._cancelled) == 1
+        assert w1.completion_order == []
+        # Exactly one primary execution happened, on w0.
+        assert len(w0.completion_order) == 1
+    finally:
+        release.set()
+        w0.stop()
+        w1.stop()
+
+
+def test_backup_clone_of_dependent_stage_mirrors_inputs():
+    """A twin of a dependent stage must compute on the same upstream
+    outputs as the original (regression: bare re-instantiation ran the
+    twin's source ops on the raw chunk payload)."""
+    import numpy as np
+
+    release = threading.Event()
+    reg = VariantRegistry()
+
+    def produce(ctx):
+        return np.full((8, 8), 7.0, dtype=np.float32)
+
+    def consume(ctx):
+        if threading.current_thread().name.startswith("worker0-"):
+            assert release.wait(timeout=30.0)
+        return float(np.asarray(ctx.sole_input()).sum())
+
+    reg.register("produce", "cpu", produce)
+    reg.register("consume", "cpu", consume)
+    wf = AbstractWorkflow.chain(
+        "dep-clone",
+        [Stage.single(Operation("produce")), Stage.single(Operation("consume"))],
+    )
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(0)])
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()
+    w1.start()
+    mgr = Manager(cw, ManagerConfig(window=4, backup_tasks=True,
+                                    heartbeat_timeout=60.0))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    try:
+        # w0 stalls in consume; the twin runs on w1 and must see the
+        # produce output (7 * 64), not the chunk payload (None).
+        assert mgr.run(timeout=60.0)
+        assert mgr.duplicated_leases >= 1
+        consume_si = next(
+            si for si in cw.stage_instances.values()
+            if si.stage.name == "consume" and si.uid not in mgr._clone_map()
+        )
+        assert mgr.stage_outputs(consume_si.uid)["consume"] == 7.0 * 64
+        assert not w1.errors
+    finally:
+        release.set()
+        w0.stop()
+        w1.stop()
+
+
+def test_heartbeat_expiry_releases_work_exactly_once():
+    """A stalled worker is declared dead after the heartbeat timeout;
+    each of its leases is recovered once and re-leased once."""
+    release = threading.Event()  # never set: worker 0 stays stuck
+    reg = _make_registry(release)
+    cw = _single_stage_cw(4)
+
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    submissions: dict[int, list[int]] = {}  # stage uid -> [worker ids]
+    for rt in (w0, w1):
+        orig = rt.submit_stage
+
+        def wrapped(si, rt=rt, orig=orig):
+            submissions.setdefault(si.uid, []).append(rt.worker_id)
+            orig(si)
+
+        rt.submit_stage = wrapped
+    w0.start()
+    w1.start()
+    mgr = Manager(cw, ManagerConfig(window=2, backup_tasks=False,
+                                    heartbeat_timeout=0.3, poll_interval=0.05))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    try:
+        assert mgr.run(timeout=60.0)
+        done, total = mgr.progress()
+        assert done == total == 4
+        # Worker 0 held `window` leases when it was declared dead.
+        assert mgr.recovered_leases == 2
+        # Every recovered lease was re-leased exactly once, to w1.
+        for uid, owners in submissions.items():
+            assert len(owners) <= 2, (uid, owners)
+            if len(owners) == 2:
+                assert owners == [0, 1], (uid, owners)
+        relesed = [u for u, o in submissions.items() if len(o) == 2]
+        assert len(relesed) == 2
+        # All four chunks completed on the surviving worker or w0 never
+        # finished its share: total executions add up with no double run.
+        assert len(w1.completion_order) == 4
+    finally:
+        release.set()
+        w0.stop()
+        w1.stop()
