@@ -6,7 +6,9 @@
 Emits one CSV row per measurement: ``name,value,derived``.  Paper
 benches run the calibrated simulator at the paper's configuration
 (100 tiles ~ one image, as §V-C..G; fig14 full scale behind --full);
-``roofline`` reads the dry-run sweep results.
+``roofline`` reads the dry-run sweep results.  The ``pr2`` bench
+additionally writes machine-readable ``BENCH_PR2.json`` (chaining /
+micro-batching perf trajectory) at the repo root.
 """
 
 from __future__ import annotations
@@ -27,6 +29,8 @@ def main() -> None:
                     help="full-scale fig14 (36,848 tiles; minutes)")
     ap.add_argument("--no-measure", action="store_true",
                     help="skip real variant timing in fig7")
+    ap.add_argument("--pr2-json", default=None,
+                    help="path for the pr2 bench JSON (default: BENCH_PR2.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -34,13 +38,17 @@ def main() -> None:
     selected = (
         args.only.split(",")
         if args.only
-        else list(ALL_BENCHES) + ["staging", "roofline"]
+        else list(ALL_BENCHES) + ["staging", "pr2", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
         t0 = time.time()
         try:
-            if name == "roofline":
+            if name == "pr2":
+                from benchmarks.pr2 import bench_pr2
+
+                bench_rows = bench_pr2(args.pr2_json)
+            elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 
                 if not OUT.exists():

@@ -3,6 +3,24 @@
 Builds the two-level abstract workflow of paper Fig 1/2 over the real
 operation implementations and registers the CPU/accelerator function
 variants with their calibrated PATS speedup estimates.
+
+Fused-variant substitution rule
+-------------------------------
+``color_deconv -> {pixel_stats, gradient_stats}`` all read the same
+tile, so when the whole feature fan-out lands on one accelerator the
+three separate HBM passes are waste.  ``build_workflow(fused=True)``
+substitutes the single ``feature_fused`` op for that group (remaining
+feature ops hang off it unchanged), and ``register_variants`` binds it
+to a composed CPU/accelerator implementation — plus, with
+``with_pallas=True``, to the one-pass Pallas megakernel
+(:mod:`repro.kernels.feature_fused`) as its ``tpu`` variant.  The
+substitution is only profitable when one lane executes the whole
+group: a fused op cannot be split across CPU and accelerator lanes, so
+deployments whose feature fan-out is routinely spread over lanes (few
+accelerators, many host cores) should keep ``fused=False`` and let
+device-resident chaining (``WorkerRuntime(chaining=True)``) eliminate
+the copies instead.  Its PATS profile is derived from the fused ops'
+(``calibration.fused_feature_profile``).
 """
 
 from __future__ import annotations
@@ -11,7 +29,12 @@ from typing import Any
 
 import numpy as np
 
-from ..core.calibration import OP_PROFILES, PARALLEL_FEATURE_OPS
+from ..core.calibration import (
+    FUSED_FEATURE_OPS,
+    OP_PROFILES,
+    PARALLEL_FEATURE_OPS,
+    fused_feature_profile,
+)
 from ..core.variants import VariantRegistry, registry as global_registry
 from ..core.workflow import AbstractWorkflow, Operation, Stage
 from ..core.worker import OpContext
@@ -50,12 +73,21 @@ _SEG_ORDER = (
 )
 
 
-def build_workflow() -> AbstractWorkflow:
+def build_workflow(fused: bool = False) -> AbstractWorkflow:
+    """The two-level workflow; ``fused=True`` applies the fused-variant
+    substitution rule (see module docstring)."""
     seg_ops = [Operation(n) for n in _SEG_ORDER]
-    feat_ops = [Operation("color_deconv")] + [
-        Operation(n) for n in PARALLEL_FEATURE_OPS
-    ]
-    feat_edges = tuple(("color_deconv", n) for n in PARALLEL_FEATURE_OPS)
+    if fused:
+        rest = tuple(
+            n for n in PARALLEL_FEATURE_OPS if n not in FUSED_FEATURE_OPS
+        )
+        feat_ops = [Operation("feature_fused")] + [Operation(n) for n in rest]
+        feat_edges = tuple(("feature_fused", n) for n in rest)
+    else:
+        feat_ops = [Operation("color_deconv")] + [
+            Operation(n) for n in PARALLEL_FEATURE_OPS
+        ]
+        feat_edges = tuple(("color_deconv", n) for n in PARALLEL_FEATURE_OPS)
     return AbstractWorkflow.chain(
         "wsi-analysis",
         [
@@ -65,25 +97,54 @@ def build_workflow() -> AbstractWorkflow:
     )
 
 
-def _wrap(fn):
+def _to_host(state: Any) -> Any:
+    """Download accelerator-produced state for a host-core consumer.
+
+    A CPU lane may receive a state dict whose arrays were produced by
+    an accelerator variant (jax arrays); NumPy implementations that
+    write in place (``out=``) reject those.  Converting is the
+    device->host transfer the runtime's cost model already charges for
+    mixed-lane hand-offs — and a no-copy pass-through for host arrays.
+    """
+    if not isinstance(state, dict):
+        return state
+    return {
+        k: np.asarray(v) if hasattr(v, "__array__") else v
+        for k, v in state.items()
+    }
+
+
+def _wrap(fn, to_host: bool = False):
     """Adapt a state-dict function to the OpContext calling convention.
 
     The first op receives the raw tile (chunk payload); downstream ops
     receive the upstream op's state dict.  Feature ops merge the
-    color_deconv state when both are present.
+    color_deconv state when both are present.  ``to_host=True`` (CPU
+    implementations) downloads accelerator-produced input arrays.
     """
 
     def impl(ctx: OpContext):
         if not ctx.inputs:
             return fn(ctx.chunk.payload)
         if len(ctx.inputs) == 1:
-            return fn(next(iter(ctx.inputs.values())))
+            state = next(iter(ctx.inputs.values()))
+            return fn(_to_host(state) if to_host else state)
         merged: dict[str, Any] = {}
         for v in ctx.inputs.values():
             merged.update(v)
-        return fn(merged)
+        return fn(_to_host(merged) if to_host else merged)
 
     return impl
+
+
+def _feature_fused_cpu(state: dict) -> dict:
+    return F.gradient_stats_cpu(F.pixel_stats_cpu(F.color_deconv_cpu(state)))
+
+
+def _feature_fused_accel(state: dict) -> dict:
+    return F.gradient_stats_accel(
+        F.pixel_stats_accel(F.color_deconv_accel(state))
+    )
 
 
 def register_variants(
@@ -93,14 +154,27 @@ def register_variants(
     reg = reg or global_registry
     for name, (cpu_fn, accel_fn) in OP_IMPLS.items():
         p = OP_PROFILES[name]
-        reg.register(name, "cpu", _wrap(cpu_fn), speedup=1.0)
+        reg.register(name, "cpu", _wrap(cpu_fn, to_host=True), speedup=1.0)
         reg.register(
             name,
             accel_kind,
             _wrap(accel_fn),
             speedup=p.gpu_speedup,
             transfer_impact=p.transfer_impact,
+            batchable=p.batchable,
         )
+    # Fused feature megakernel variant (substitution rule: docstring).
+    fp = fused_feature_profile()
+    reg.register("feature_fused", "cpu",
+                 _wrap(_feature_fused_cpu, to_host=True), speedup=1.0)
+    reg.register(
+        "feature_fused",
+        accel_kind,
+        _wrap(_feature_fused_accel),
+        speedup=fp.gpu_speedup,
+        transfer_impact=fp.transfer_impact,
+        batchable=fp.batchable,
+    )
     if with_pallas:
         _register_pallas_variants(reg)
     return reg
@@ -137,12 +211,36 @@ def _register_pallas_variants(reg: VariantRegistry) -> None:
         nuclei = ((inv - recon) > 25.0) & jnp.asarray(state["fg_open"])
         return {**state, "recon": recon, "nuclei": nuclei}
 
+    def feature_fused_pallas(ctx: OpContext):
+        # One VMEM pass: deconv planes + Sobel |grad| of the luminance
+        # in a single HBM read, then per-object segment reductions.
+        from .features import _obj_stats_j
+
+        state = dict(next(iter(ctx.inputs.values())))
+        rgb = np.asarray(state["rgb"], np.float32)
+        hema, eosin, mag, _ = K.feature_fused(
+            jnp.asarray(rgb[..., 0]), jnp.asarray(rgb[..., 1]),
+            jnp.asarray(rgb[..., 2]), stripe=128,
+        )
+        objects = jnp.asarray(state["objects"])
+        return {
+            **state,
+            "hema": hema,
+            "eosin": eosin,
+            "feat_pixel": _obj_stats_j(hema.astype(jnp.float32), objects),
+            "feat_gradient": _obj_stats_j(mag, objects),
+        }
+
     p = OP_PROFILES["color_deconv"]
     reg.register("color_deconv", "tpu", color_deconv_pallas,
                  speedup=p.gpu_speedup, transfer_impact=p.transfer_impact)
     p = OP_PROFILES["recon_to_nuclei"]
     reg.register("recon_to_nuclei", "tpu", recon_pallas,
                  speedup=p.gpu_speedup, transfer_impact=p.transfer_impact)
+    fp = fused_feature_profile()
+    reg.register("feature_fused", "tpu", feature_fused_pallas,
+                 speedup=fp.gpu_speedup, transfer_impact=fp.transfer_impact,
+                 batchable=fp.batchable)
 
 
 def run_tile(tile: np.ndarray, variant: str = "cpu") -> dict:

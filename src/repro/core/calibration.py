@@ -31,6 +31,8 @@ __all__ = [
     "OpProfile",
     "OP_PROFILES",
     "PIPELINE_ORDER",
+    "FUSED_FEATURE_OPS",
+    "fused_feature_profile",
     "NodeConfig",
     "KEENELAND_NODE",
     "TILE_CPU_SECONDS",
@@ -57,6 +59,11 @@ class OpProfile:
     gpu_speedup: float
     transfer_impact: float
     stage: str  # "segmentation" | "features"
+    # Micro-batched dispatch: regular, shape-stable ops whose kernels
+    # compile once per tile size may be executed as one vmapped call
+    # over several ready instances (launch-overhead amortization).
+    # Irregular segmentation ops (wave propagation, labelling) are not.
+    batchable: bool = False
 
 
 # Segmentation ops are irregular (wave propagation, labelling) => modest
@@ -64,23 +71,27 @@ class OpProfile:
 OP_PROFILES: dict[str, OpProfile] = {
     p.name: p
     for p in [
-        OpProfile("rbc_detection",   0.095, 6.70, 0.14, "segmentation"),
-        OpProfile("morph_open",      0.040, 1.13, 0.12, "segmentation"),
+        # Thresholding / fixed-structuring-element morphology are
+        # shape-stable (compile once per tile size) => batchable; the
+        # fixpoint-iteration ops (reconstruction, watershed, labelling,
+        # hole filling) have data-dependent trip counts => not.
+        OpProfile("rbc_detection",   0.095, 6.70, 0.14, "segmentation", batchable=True),
+        OpProfile("morph_open",      0.040, 1.13, 0.12, "segmentation", batchable=True),
         OpProfile("recon_to_nuclei", 0.175, 12.2, 0.10, "segmentation"),
-        OpProfile("area_threshold",  0.020, 1.95, 0.15, "segmentation"),
+        OpProfile("area_threshold",  0.020, 1.95, 0.15, "segmentation", batchable=True),
         OpProfile("fill_holes",      0.035, 2.60, 0.16, "segmentation"),
-        OpProfile("pre_watershed",   0.145, 10.6, 0.11, "segmentation"),
+        OpProfile("pre_watershed",   0.145, 10.6, 0.11, "segmentation", batchable=True),
         OpProfile("watershed",       0.120, 6.30, 0.13, "segmentation"),
         OpProfile("bwlabel",         0.030, 1.65, 0.15, "segmentation"),
         # Feature stage (§II): color deconvolution feeds feature ops that
         # are mutually independent ("most of the features can be computed
         # concurrently").  Regular + compute-dense => high speedups.
-        OpProfile("color_deconv",    0.050, 18.0, 0.08, "features"),
-        OpProfile("pixel_stats",     0.050, 20.0, 0.08, "features"),
-        OpProfile("gradient_stats",  0.060, 24.0, 0.08, "features"),
-        OpProfile("haralick",        0.100, 28.0, 0.08, "features"),
-        OpProfile("canny_edge",      0.050, 21.0, 0.08, "features"),
-        OpProfile("morphometry",     0.030, 15.0, 0.10, "features"),
+        OpProfile("color_deconv",    0.050, 18.0, 0.08, "features", batchable=True),
+        OpProfile("pixel_stats",     0.050, 20.0, 0.08, "features", batchable=True),
+        OpProfile("gradient_stats",  0.060, 24.0, 0.08, "features", batchable=True),
+        OpProfile("haralick",        0.100, 28.0, 0.08, "features", batchable=True),
+        OpProfile("canny_edge",      0.050, 21.0, 0.08, "features", batchable=True),
+        OpProfile("morphometry",     0.030, 15.0, 0.10, "features", batchable=True),
     ]
 }
 
@@ -111,6 +122,29 @@ PARALLEL_FEATURE_OPS: tuple[str, ...] = (
     "canny_edge",
     "morphometry",
 )
+
+#: Ops covered by the fused feature megakernel (kernels/feature_fused):
+#: one VMEM pass / single HBM read replaces three separate tile reads.
+FUSED_FEATURE_OPS: tuple[str, ...] = (
+    "color_deconv",
+    "pixel_stats",
+    "gradient_stats",
+)
+
+
+def fused_feature_profile() -> OpProfile:
+    """Derived profile of the fused color_deconv+pixel+gradient op.
+
+    CPU fraction is the sum of the fused ops'; GPU speedup is the
+    harmonic composition of theirs; transfer impact halves because the
+    tile is read from HBM once instead of three times.
+    """
+    parts = [OP_PROFILES[n] for n in FUSED_FEATURE_OPS]
+    frac = sum(p.cpu_fraction for p in parts)
+    speedup = frac / sum(p.cpu_fraction / p.gpu_speedup for p in parts)
+    impact = min(p.transfer_impact for p in parts) / 2.0
+    return OpProfile("feature_fused", frac, speedup, impact, "features",
+                     batchable=True)
 
 #: Single-core CPU seconds to process one 4Kx4K tile end-to-end.
 #: Chosen so 3 GPUs + 9 cores under PATS processes ~100 tiles in ~51s

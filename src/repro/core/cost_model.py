@@ -30,6 +30,9 @@ __all__ = [
     "predicted_runtime",
     "estimate_speedup",
     "roofline_terms",
+    "batched_runtime",
+    "batch_amortization",
+    "optimal_micro_batch",
 ]
 
 
@@ -93,6 +96,57 @@ def estimate_speedup(
     return predicted_runtime(cost, host) / max(
         predicted_runtime(cost, accel), 1e-15
     )
+
+
+def batched_runtime(
+    cost: OpCost,
+    lane: LaneModel,
+    batch: int,
+    launch_overhead: float,
+) -> float:
+    """Runtime of one batched launch over ``batch`` identical chunks.
+
+    The streaming terms (compute, memory, collectives) scale linearly
+    with the batch — a vmapped kernel reads ``batch`` tiles — while the
+    fixed dispatch cost (driver launch, JIT cache lookup, control
+    round-trip) is paid once.  This is the amortization curve the
+    micro-batched dispatcher trades against latency.
+    """
+    return launch_overhead + batch * predicted_runtime(cost, lane)
+
+
+def batch_amortization(
+    cost: OpCost,
+    lane: LaneModel,
+    batch: int,
+    launch_overhead: float,
+) -> float:
+    """Speedup of one batched launch vs ``batch`` sequential launches."""
+    sequential = batch * (launch_overhead + predicted_runtime(cost, lane))
+    return sequential / max(
+        batched_runtime(cost, lane, batch, launch_overhead), 1e-15
+    )
+
+
+def optimal_micro_batch(
+    cost: OpCost,
+    lane: LaneModel,
+    launch_overhead: float,
+    latency_budget: float,
+    max_batch: int = 64,
+) -> int:
+    """Largest batch whose single-launch latency fits the budget.
+
+    Amortization is monotone in the batch size, so the best batch is
+    the largest one the op's latency budget (e.g. the drain tail the
+    scheduler can tolerate) still admits.
+    """
+    best = 1
+    for b in range(2, max_batch + 1):
+        if batched_runtime(cost, lane, b, launch_overhead) > latency_budget:
+            break
+        best = b
+    return best
 
 
 def roofline_terms(

@@ -90,6 +90,27 @@ class Manager:
         # upstream outputs, and lanes re-pull inputs evicted under soft
         # tier budgets (worker._gather_inputs fallback).
         runtime.fetch_region = self._fetch_region
+        # Keep the directory honest: a region falling off the worker's
+        # bottom tier is no longer a replica there (lease placement and
+        # the eviction preference below both read this map).
+        wid = runtime.worker_id
+        runtime.store.on_drop = (
+            lambda key, _wid=wid: self.directory.evict(_wid, key)
+        )
+        # Replication-aware eviction: under budget pressure the worker's
+        # host tier sheds regions the directory shows replicated on
+        # another worker before sole copies (policy knob).
+        if self.cfg.placement.replication_aware_eviction:
+            try:
+                host = runtime.store.tier("host")
+            except KeyError:
+                host = None
+            if host is not None:
+                host.replicated = (
+                    lambda key, _wid=wid: self.directory.replicated_elsewhere(
+                        _wid, key
+                    )
+                )
         with self._lock:
             self._workers[runtime.worker_id] = _WorkerState(runtime=runtime)
 
@@ -98,6 +119,13 @@ class Manager:
             st = self._workers.get(worker_id)
             if st is not None:
                 st.last_heartbeat = time.monotonic()
+                if st.dead and st.runtime.alive:
+                    # A fresh heartbeat after a reap proves the "dead"
+                    # worker was merely slow (one op outlasted the
+                    # window): rejoin it.  Its leases were already
+                    # recovered; chunk processing is idempotent.
+                    st.dead = False
+                    self._dispatch_all_locked()
 
     def deregister_worker(self, worker_id: int) -> None:
         """Elastic scale-down: return the worker's leases to the queue."""
@@ -373,8 +401,25 @@ class Manager:
             time.sleep(self.cfg.poll_interval)
             now = time.monotonic()
             with self._lock:
+                any_live = any(
+                    not st.dead and st.runtime.alive
+                    for st in self._workers.values()
+                )
                 for wid, st in self._workers.items():
                     if st.dead:
+                        # Last-resort rejoin: every worker has been
+                        # reaped yet this one's runtime reports alive.
+                        # Without it a cluster whose every (healthy but
+                        # slow) worker was slandered wedges with work
+                        # pending and nobody to run it.  With other
+                        # live workers, exclusion stands — a genuinely
+                        # wedged worker must not be re-leased work; it
+                        # rejoins only via a fresh heartbeat
+                        # (_heartbeat), which proves progress.
+                        if not any_live and st.runtime.alive:
+                            st.dead = False
+                            st.last_heartbeat = now
+                            any_live = True
                         continue
                     inflight = bool(st.leases)
                     expired = (

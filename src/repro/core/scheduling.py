@@ -19,6 +19,18 @@ already resident in that accelerator's memory.  When speedups are
 known, the dependent wins only if ``S_d >= S_q * (1 - transferImpact)``
 where ``S_q`` is the best non-resident candidate and ``transferImpact``
 is the fraction of that candidate's execution time spent moving data.
+
+Two extensions for the device-resident fast path:
+
+* **chain affinity** — when the runtime chains operations on the
+  device (outputs stay resident, no host materialization), a resident
+  dependent additionally skips its *own* transfer fraction, so its
+  effective speedup is ``S_d / (1 - transferImpact_d)``.  Enabled via
+  ``chain_affinity`` in [0, 1] scaling that bonus.
+* **micro-batching** — :meth:`ReadyScheduler.pop_batch` pops up to
+  ``limit`` ready instances of the *same operation* in one decision so
+  an accelerator lane can execute them as a single batched kernel call
+  and amortize its launch overhead.
 """
 
 from __future__ import annotations
@@ -26,7 +38,7 @@ from __future__ import annotations
 import bisect
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from typing import Callable, Iterable, Optional
 
 from .workflow import OperationInstance
 
@@ -42,6 +54,10 @@ class SchedulerStats:
     assigned: dict[tuple[str, str], int] = field(default_factory=dict)
     reuse_hits: int = 0
     reuse_misses: int = 0
+    # Micro-batched dispatch: batched pops (>1 member) and the total
+    # number of op instances dispatched inside those batches.
+    batches: int = 0
+    batched_ops: int = 0
 
     def record(self, op_name: str, lane_kind: str) -> None:
         key = (op_name, lane_kind)
@@ -110,7 +126,7 @@ class ReadyScheduler:
     """Queue of ready ``(data chunk, operation)`` tuples + pop policy."""
 
     def __init__(self, policy: str = "fcfs", locality: bool = False,
-                 speedups_known: bool = True):
+                 speedups_known: bool = True, chain_affinity: float = 0.0):
         if policy not in ("fcfs", "pats"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
@@ -118,6 +134,9 @@ class ReadyScheduler:
         # DL degrades gracefully when estimates are unavailable: always
         # prefer reuse (paper §IV-C, first case).
         self.speedups_known = speedups_known
+        # Device-resident chaining recovers the dependent's own transfer
+        # fraction on top of the classic DL rule (0 = plain DL).
+        self.chain_affinity = chain_affinity
         self.stats = SchedulerStats()
         self._fifo: deque[OperationInstance] = deque()
         self._sorted = _SortedTasks()
@@ -165,6 +184,90 @@ class ReadyScheduler:
             self.stats.record(task.op.name, lane_kind)
         return task
 
+    def batch_limit(self, micro_batch: int, idle_lanes: int) -> int:
+        """Work-conserving batch depth for one idle accelerator lane.
+
+        Never batch deeper than the ready queue can still feed the
+        other idle lanes — amortization must not steal their
+        parallelism.  Shared by the threaded worker and the simulator
+        so measured batching behaviour is production behaviour.
+        """
+        return min(micro_batch, max(1, len(self) // max(idle_lanes, 1)))
+
+    def pop_batch(
+        self,
+        lane_kind: str,
+        resident_producers: Optional[set[int]] = None,
+        *,
+        limit: int = 1,
+        batchable: Optional[Callable[[OperationInstance], int]] = None,
+    ) -> list[OperationInstance]:
+        """Pop up to ``limit`` ready instances of the *same operation*.
+
+        The head is selected with the normal policy (PATS/FCFS + DL);
+        when it is batchable, further queued instances of the same op
+        join it regardless of queue position — they would execute with
+        identical kernels anyway, and one batched launch amortizes the
+        dispatch overhead (latency tradeoff measured in the simulator's
+        batched-runtime curves).
+
+        ``batchable(head)`` returns the head op's own batch cap (its
+        variant's ``max_batch``; <= 1 disables batching) — a batched
+        implementation must never receive more contexts than its
+        declared maximum.
+        """
+        first = self.pop(lane_kind, resident_producers)
+        if first is None:
+            return []
+        batch = [first]
+        if batchable is not None:
+            limit = min(limit, int(batchable(first)))
+        if limit <= 1:
+            return batch
+        pool = list(self._sorted) if self.policy == "pats" else list(self._fifo)
+        for task in pool:
+            if len(batch) >= limit:
+                break
+            if task.op.name != first.op.name:
+                continue
+            self._remove(task)
+            self.stats.record(task.op.name, lane_kind)
+            batch.append(task)
+        if len(batch) > 1:
+            self.stats.batches += 1
+            self.stats.batched_ops += len(batch)
+        return batch
+
+    def reestimate(
+        self, estimate: Callable[[OperationInstance], float]
+    ) -> None:
+        """Refresh queued tasks' speedup estimates and restore order.
+
+        Called when the online EMA estimator (``FunctionVariant.
+        observe_runtime``) shifts an estimate: PATS keeps the ready
+        queue sorted by speedup, so already-queued instances must be
+        re-keyed or the queue order goes stale against the estimates.
+        """
+        if self.policy != "pats":
+            for task in self._fifo:
+                task.speedup = estimate(task)
+            return
+        tasks = list(self._sorted)
+        for task in tasks:
+            task.speedup = estimate(task)
+        fresh = _SortedTasks()
+        for task in tasks:
+            fresh.add(task)
+        self._sorted = fresh
+
+    def _chained_speedup(self, task: OperationInstance) -> float:
+        """Effective speedup of a resident dependent under chaining:
+        its inputs need no upload and its output stays resident, so the
+        transfer fraction of its own runtime is recovered."""
+        return task.speedup / max(
+            1.0 - self.chain_affinity * task.transfer_impact, 1e-9
+        )
+
     def _pop_locality(
         self, lane_kind: str, resident: set[int]
     ) -> Optional[OperationInstance]:
@@ -180,14 +283,16 @@ class ReadyScheduler:
             self.stats.reuse_hits += 1
             return choice
         # PATS + DL: best dependent vs best non-resident candidate.
-        best_dep = max(reusing, key=lambda t: t.speedup)
+        best_dep = max(reusing, key=self._chained_speedup)
         non_reusing = [t for t in pool if not (t.deps & resident)]
         if not non_reusing:
             self._remove(best_dep)
             self.stats.reuse_hits += 1
             return best_dep
         best_q = max(non_reusing, key=lambda t: t.speedup)
-        if best_dep.speedup >= best_q.speedup * (1.0 - best_q.transfer_impact):
+        if self._chained_speedup(best_dep) >= best_q.speedup * (
+            1.0 - best_q.transfer_impact
+        ):
             self._remove(best_dep)
             self.stats.reuse_hits += 1
             return best_dep

@@ -61,22 +61,40 @@ ACCEL_KIND = "gpu"
 # --------------------------------------------------------------------------
 
 
-def segmentation_feature_workflow() -> AbstractWorkflow:
-    """Two-level hierarchical pipeline of Fig 1/2 (pipelined version)."""
+def segmentation_feature_workflow(fused: bool = False) -> AbstractWorkflow:
+    """Two-level hierarchical pipeline of Fig 1/2 (pipelined version).
+
+    With ``fused=True`` the feature fan-out substitutes the fused
+    megakernel op for color_deconv + pixel_stats + gradient_stats
+    (one HBM read; see ``kernels/feature_fused``), keeping the
+    remaining feature ops downstream of it.
+    """
     seg_ops = [
         Operation(name, inputs=("tile",), outputs=(name,))
         for name in cal.PIPELINE_ORDER
         if cal.OP_PROFILES[name].stage == "segmentation"
     ]
-    feat_ops = [
-        Operation("color_deconv", inputs=("mask",), outputs=("deconv",))
-    ] + [
-        Operation(name, inputs=("deconv",), outputs=(name,))
-        for name in cal.PARALLEL_FEATURE_OPS
-    ]
-    feat_edges = tuple(
-        ("color_deconv", name) for name in cal.PARALLEL_FEATURE_OPS
-    )
+    if fused:
+        rest = tuple(
+            n for n in cal.PARALLEL_FEATURE_OPS if n not in cal.FUSED_FEATURE_OPS
+        )
+        feat_ops = [
+            Operation("feature_fused", inputs=("mask",), outputs=("deconv",))
+        ] + [
+            Operation(name, inputs=("deconv",), outputs=(name,))
+            for name in rest
+        ]
+        feat_edges = tuple(("feature_fused", name) for name in rest)
+    else:
+        feat_ops = [
+            Operation("color_deconv", inputs=("mask",), outputs=("deconv",))
+        ] + [
+            Operation(name, inputs=("deconv",), outputs=(name,))
+            for name in cal.PARALLEL_FEATURE_OPS
+        ]
+        feat_edges = tuple(
+            ("color_deconv", name) for name in cal.PARALLEL_FEATURE_OPS
+        )
     return AbstractWorkflow.chain(
         "wsi-analysis",
         [
@@ -116,6 +134,18 @@ class SimConfig:
     policy: str = "pats"               # "fcfs" | "pats"
     locality: bool = False             # DL (§IV-C)
     prefetch: bool = False             # §IV-D
+    # Device-resident chaining: implies locality and gives resident
+    # dependents the chain-affinity bonus in the DL rule.
+    chaining: bool = False
+    # Micro-batched dispatch: an idle accelerator lane pops up to this
+    # many ready instances of the same batchable op per decision and
+    # executes them as one launch (cost_model.batched_runtime).
+    micro_batch: int = 1
+    # Fixed per-dispatch cost of an accelerator kernel launch (driver /
+    # JIT dispatch / MPI control round).  Paid once per (batched) call.
+    launch_overhead: float = 0.0
+    # Substitute the fused feature megakernel op for the fused group.
+    fused_features: bool = False
     placement: str = "closest"         # "closest" | "os" (§IV-A)
     window: int = 15                   # stage instances per worker (§V-F)
     pipelined: bool = True             # False => monolithic tasks
@@ -138,6 +168,11 @@ class SimConfig:
     staging_locality: bool = True      # directory-driven lease placement
     stage_output_mb: float = 48.0      # inter-stage region per tile (MB)
     interconnect_gb_s: float = 6.0     # node-to-node staging bandwidth
+
+    @property
+    def dl(self) -> bool:
+        """Effective data-locality flag (chaining implies DL)."""
+        return self.locality or self.chaining
 
     @property
     def gpus(self) -> int:
@@ -170,6 +205,9 @@ class SimResult:
     staged_bytes_avoided: int = 0
     cross_node_bytes: int = 0
     transfer_wait: float = 0.0
+    # Micro-batched dispatch accounting (cfg.micro_batch > 1).
+    batches: int = 0
+    batched_ops: int = 0
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -258,7 +296,8 @@ class ClusterSim:
                     lane.transfer_penalty = self._placement_penalty(lane.lane_id)
             sched = ReadyScheduler(
                 policy=cfg.policy,
-                locality=cfg.locality,
+                locality=cfg.dl,
+                chain_affinity=1.0 if cfg.chaining else 0.0,
                 speedups_known=cfg.speedups_known,
             )
             node = _Node(nid, lanes, sched)
@@ -285,20 +324,27 @@ class ClusterSim:
     # -- calibrated cost model -------------------------------------------------
 
     def _make_estimates(self) -> dict[str, float]:
-        est = {}
         e = self.cfg.speedup_error
         agg = cal.aggregate_gpu_speedup()
-        for name, p in cal.OP_PROFILES.items():
-            s = p.gpu_speedup
-            if e > 0:
-                if e >= 1.0:  # adversarial: invert the ordering entirely
-                    s = 0.0 if p.gpu_speedup > agg * 0.5 else 2.0 * s
-                elif p.gpu_speedup <= agg * 0.5:
-                    s = s * (1.0 + e)  # low-speedup ops inflated
-                else:
-                    s = s * (1.0 - e)  # high-speedup ops deflated
-            est[name] = s
+
+        def with_error(s: float) -> float:
+            if e <= 0:
+                return s
+            if e >= 1.0:  # adversarial: invert the ordering entirely
+                return 0.0 if s > agg * 0.5 else 2.0 * s
+            if s <= agg * 0.5:
+                return s * (1.0 + e)  # low-speedup ops inflated
+            return s * (1.0 - e)  # high-speedup ops deflated
+
+        est = {
+            name: with_error(p.gpu_speedup)
+            for name, p in cal.OP_PROFILES.items()
+        }
         est["monolithic"] = cal.aggregate_gpu_speedup(include_transfer=False)
+        # The fused op obeys the same §V-G error protocol as its parts.
+        est["feature_fused"] = with_error(
+            cal.fused_feature_profile().gpu_speedup
+        )
         return est
 
     def _profile(self, op_name: str) -> cal.OpProfile:
@@ -307,6 +353,8 @@ class ClusterSim:
                 "monolithic", 1.0,
                 cal.aggregate_gpu_speedup(), cal.TRANSFER_IMPACT, "all",
             )
+        if op_name == "feature_fused":
+            return cal.fused_feature_profile()
         return cal.OP_PROFILES[op_name]
 
     def _cpu_seconds(self, oi: OperationInstance) -> float:
@@ -359,7 +407,7 @@ class ClusterSim:
             }
         )
         profile: dict[str, dict[str, int]] = {}
-        hits = misses = 0
+        hits = misses = batches = batched_ops = 0
         lane_busy: dict[str, float] = {}
         for node in self.nodes:
             for (op, kind), n in node.scheduler.stats.assigned.items():
@@ -367,6 +415,8 @@ class ClusterSim:
                 profile[op][kind] += n
             hits += node.scheduler.stats.reuse_hits
             misses += node.scheduler.stats.reuse_misses
+            batches += node.scheduler.stats.batches
+            batched_ops += node.scheduler.stats.batched_ops
             for lane in node.lanes:
                 lane_busy[lane.kind] = (
                     lane_busy.get(lane.kind, 0.0) + lane.busy_total
@@ -387,6 +437,8 @@ class ClusterSim:
             staged_bytes_avoided=self.staged_bytes_avoided,
             cross_node_bytes=self.cross_node_bytes,
             transfer_wait=self.transfer_wait,
+            batches=batches,
+            batched_ops=batched_ops,
         )
 
     # -- Manager: demand-driven assignment --------------------------------------
@@ -529,21 +581,63 @@ class ClusterSim:
         for lane in node.lanes:
             while not lane.busy and node.scheduler:
                 resident = set(lane.resident) if lane.kind == ACCEL_KIND else None
-                oi = node.scheduler.pop(lane.kind, resident)
-                if oi is None:
+                if lane.kind == ACCEL_KIND and self.cfg.micro_batch > 1:
+                    idle = sum(
+                        1
+                        for ln in node.lanes
+                        if ln.kind == ACCEL_KIND and not ln.busy
+                    )
+                    limit = node.scheduler.batch_limit(
+                        self.cfg.micro_batch, idle
+                    )
+                    ois = node.scheduler.pop_batch(
+                        lane.kind,
+                        resident,
+                        limit=limit,
+                        batchable=self._op_batchable,
+                    )
+                else:
+                    oi = node.scheduler.pop(lane.kind, resident)
+                    ois = [oi] if oi is not None else []
+                if not ois:
                     break
-                if oi.uid in self.cancelled_ops or oi.uid in self.op_done:
+                live = [
+                    oi
+                    for oi in ois
+                    if oi.uid not in self.cancelled_ops
+                    and oi.uid not in self.op_done
+                ]
+                if not live:
                     continue  # stale (backup twin already completed)
-                self._execute(node, lane, oi)
+                self._execute(node, lane, live)
 
-    def _execute(self, node: _Node, lane: _Lane, oi: OperationInstance) -> None:
-        duration = self._duration(node, lane, oi)
+    def _op_batchable(self, oi: OperationInstance) -> int:
+        """pop_batch cap for the simulated op (profiles carry no
+        per-op maximum, so batchable ops use the config's)."""
+        return self.cfg.micro_batch if self._profile(oi.op.name).batchable else 1
+
+    def _execute(
+        self, node: _Node, lane: _Lane, ois: list[OperationInstance]
+    ) -> None:
+        """One dispatch decision: a single op or a micro-batch of
+        same-op instances.  The launch overhead is paid once per call —
+        the amortization curve of ``cost_model.batched_runtime``."""
+        duration = sum(self._duration(node, lane, oi) for oi in ois)
+        if lane.kind == ACCEL_KIND:
+            duration += self.cfg.launch_overhead
         lane.busy = True
         lane.busy_total += duration
-        node.inflight_ops += 1
-        self._post(
-            self.now + duration, lambda: self._finish_op(node, lane, oi)
-        )
+        node.inflight_ops += len(ois)
+
+        def finish() -> None:
+            # The lane is released only with the batch's last member, so
+            # a dependent dispatched from an earlier member's completion
+            # cannot double-book it.
+            for oi in ois[:-1]:
+                self._finish_op(node, lane, oi, release_lane=False)
+            self._finish_op(node, lane, ois[-1])
+
+        self._post(self.now + duration, finish)
 
     def _duration(self, node: _Node, lane: _Lane, oi: OperationInstance) -> float:
         cpu_s = self._cpu_seconds(oi) * node.slow
@@ -554,14 +648,14 @@ class ClusterSim:
             ) + 1
             t = cpu_s / self.cfg.node.cpu_core_efficiency(active)
             # Input resident on some GPU => pay the download half.
-            if self.cfg.locality and self._inputs_on_accel(oi):
+            if self.cfg.dl and self._inputs_on_accel(oi):
                 gpu_compute = cpu_s / max(p.gpu_speedup, 1e-9)
                 t += self._half_transfer(gpu_compute, p, 1.0)
             return t
         # Accelerator lane: upload / process / download phases (§IV-D).
         compute = cpu_s / max(p.gpu_speedup, 1e-9)
         up = down = self._half_transfer(compute, p, lane.transfer_penalty)
-        if self.cfg.locality:
+        if self.cfg.dl:
             if oi.deps and oi.deps & set(lane.resident):
                 up = 0.0  # inputs already resident (DL hit)
             down = 0.0    # outputs stay resident; consumer pays if needed
@@ -585,8 +679,15 @@ class ClusterSim:
 
     # -- completion & bookkeeping ------------------------------------------------
 
-    def _finish_op(self, node: _Node, lane: _Lane, oi: OperationInstance) -> None:
-        lane.busy = False
+    def _finish_op(
+        self,
+        node: _Node,
+        lane: _Lane,
+        oi: OperationInstance,
+        release_lane: bool = True,
+    ) -> None:
+        if release_lane:
+            lane.busy = False
         lane.executed += 1
         node.inflight_ops -= 1
         if not node.alive:
@@ -597,7 +698,7 @@ class ClusterSim:
         self.op_done.add(oi.uid)
         self.completion_order.append(oi.uid)
         self.op_location[oi.uid] = (node.node_id, lane.kind, lane.lane_id)
-        if lane.kind == ACCEL_KIND and self.cfg.locality:
+        if lane.kind == ACCEL_KIND and self.cfg.dl:
             lane.resident[oi.uid] = None
             while len(lane.resident) > self.cfg.gpu_memory_slots:
                 lane.resident.pop(next(iter(lane.resident)))
@@ -741,9 +842,12 @@ def run_simulation(
     cfg: SimConfig,
     workflow_builder: Callable[[], AbstractWorkflow] | None = None,
 ) -> SimResult:
-    builder = workflow_builder or (
-        segmentation_feature_workflow if cfg.pipelined else monolithic_workflow
-    )
+    if workflow_builder is not None:
+        builder = workflow_builder
+    elif not cfg.pipelined:
+        builder = monolithic_workflow
+    else:
+        builder = lambda: segmentation_feature_workflow(cfg.fused_features)  # noqa: E731
     tiles = make_tiles(n_tiles, seed=cfg.seed)
     cw = ConcreteWorkflow.replicate(builder(), tiles)
     return ClusterSim(cw, cfg).run()

@@ -14,6 +14,19 @@ scheduler keeps them resident for a dependent operation, and with
 ongoing computation via a per-lane copy thread (§IV-D's
 upload/process/download pipeline).
 
+Two device-resident fast paths extend the basic model:
+
+* ``chaining=True`` — when consecutive ops of one pipeline instance
+  land on the same accelerator lane (DL reuse), the intermediate state
+  stays in that lane's DeviceMemory and the host write-back is
+  *deferred*: a chained output only materializes to the host tier when
+  a host-side consumer (sibling lane, stage-completion read, Manager
+  pull) actually needs the bytes, or when the device LRU spills it.
+* ``micro_batch=B`` — an idle accelerator lane pops up to ``B`` ready
+  instances of the same *batchable* op (``FunctionVariant.batchable``)
+  and executes them as one batched call, amortizing per-op dispatch
+  and launch overheads over the batch.
+
 On a single-process deployment (this container) lanes are plain
 threads; on a hybrid cluster the same class drives host cores plus one
 control thread per accelerator — the WCC/Manager protocol is identical
@@ -39,7 +52,13 @@ __all__ = ["DeviceMemory", "LaneSpec", "OpContext", "WorkerRuntime"]
 
 
 class DeviceMemory:
-    """LRU store emulating an accelerator's discrete memory."""
+    """LRU store emulating an accelerator's discrete memory.
+
+    ``put`` returns the entries it evicted (oldest-first, never the
+    entry just inserted) so the owner can write device-only values back
+    to the host tier instead of losing them — slot budgets stay a soft
+    cap under device-resident chaining, never a correctness hazard.
+    """
 
     def __init__(self, slots: int = 64):
         self.slots = slots
@@ -48,12 +67,15 @@ class DeviceMemory:
         self.downloads = 0
         self.evictions = 0
 
-    def put(self, uid: int, value: Any) -> None:
+    def put(self, uid: int, value: Any) -> list[tuple[int, Any]]:
         self._store[uid] = value
         self._store.move_to_end(uid)
+        evicted: list[tuple[int, Any]] = []
         while len(self._store) > self.slots:
-            self._store.popitem(last=False)
+            victim = next(k for k in self._store if k != uid)
+            evicted.append((victim, self._store.pop(victim)))
             self.evictions += 1
+        return evicted
 
     def get(self, uid: int) -> Any:
         value = self._store[uid]
@@ -97,6 +119,7 @@ class _LaneState:
     memory: Optional[DeviceMemory] = None
     busy_seconds: float = 0.0
     executed: int = 0
+    busy: bool = False  # currently executing (work-conserving batching)
     # Prefetch double-buffer: next tuple whose inputs are being uploaded.
     staged: "queue.Queue[tuple[OperationInstance, threading.Event]]" = field(
         default_factory=lambda: queue.Queue(maxsize=1)
@@ -114,6 +137,8 @@ class WorkerRuntime:
         policy: str = "fcfs",
         locality: bool = False,
         prefetch: bool = False,
+        chaining: bool = False,
+        micro_batch: int = 1,
         speedups_known: bool = True,
         staging: StagingConfig | None = None,
         variant_registry: VariantRegistry | None = None,
@@ -124,11 +149,18 @@ class WorkerRuntime:
         self.worker_id = worker_id
         self.on_heartbeat = on_heartbeat
         self.registry = variant_registry or global_registry
+        # Device-resident chaining needs the DL pop (residency-aware) to
+        # actually route dependents onto the holding lane.
+        self.chaining = chaining
+        self.locality = locality or chaining
+        self.micro_batch = max(int(micro_batch), 1)
         self.scheduler = ReadyScheduler(
-            policy=policy, locality=locality, speedups_known=speedups_known
+            policy=policy,
+            locality=self.locality,
+            speedups_known=speedups_known,
+            chain_affinity=1.0 if chaining else 0.0,
         )
         self.prefetch = prefetch
-        self.locality = locality
         self.observe_runtimes = observe_runtimes
         self.on_stage_complete = on_stage_complete
 
@@ -170,6 +202,17 @@ class WorkerRuntime:
         self._stages: dict[int, StageInstance] = {}
         self.completion_order: list[int] = []
         self.errors: list[tuple[int, BaseException]] = []
+        # Device-resident chaining: op uid -> lane whose DeviceMemory
+        # holds the *only* copy of its output (host write-back deferred
+        # until a host-side consumer actually needs the bytes).
+        self._device_only: dict[int, _LaneState] = {}
+        self.chain_hits = 0        # inputs served device-resident
+        self.chain_deferred = 0    # outputs whose host copy was skipped
+        self.chain_writebacks = 0  # lazy downloads that became necessary
+        # Last speedup estimate a queue reorder was based on, per
+        # variant: reestimate (O(queue)) only runs when the online EMA
+        # actually moved an estimate, not on every completion.
+        self._reorder_est: dict[str, float] = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -212,14 +255,22 @@ class WorkerRuntime:
     # -- submission -----------------------------------------------------------
 
     def submit_stage(self, si: StageInstance) -> None:
-        """Lease received from the Manager: export fine-grain ops."""
+        """Lease received from the Manager: export fine-grain ops.
+
+        Idempotent per stage instance: a re-lease of a stage this
+        worker already holds (heartbeat-slander rejoin re-dispatches
+        recovered leases) must not push duplicate op instances next to
+        the queued/in-flight originals.
+        """
         with self._lock:
+            known = si.uid in self._stages
             self._stages[si.uid] = si
             local = {o.uid for o in si.op_instances}
-            for oi in si.op_instances:
-                self._maybe_estimate(oi)
-                if oi.deps.issubset(self._op_done) and oi.uid not in self._op_done:
-                    self.scheduler.push(oi)
+            if not known:
+                for oi in si.op_instances:
+                    self._maybe_estimate(oi)
+                    if oi.deps.issubset(self._op_done) and oi.uid not in self._op_done:
+                        self.scheduler.push(oi)
             self._work_ready.notify_all()
             missing = [
                 op_key(dep)
@@ -239,8 +290,14 @@ class WorkerRuntime:
             self._op_done.add(uid)
 
     def has_region(self, key: Any) -> bool:
-        """True when ``key`` is resident in any tier of this worker."""
-        return key in self.store
+        """True when ``key`` is resident in any tier of this worker
+        (including device-only chained outputs)."""
+        if key in self.store:
+            return True
+        if isinstance(key, tuple) and len(key) == 2 and key[0] == "op":
+            with self._lock:
+                return key[1] in self._device_only
+        return False
 
     def mark_staged_input(self, uid: int) -> bool:
         """Skip-copy path: if op ``uid``'s output is already resident in
@@ -248,7 +305,7 @@ class WorkerRuntime:
         Manager need not re-send the bytes.  False => caller must
         ``provide_input``."""
         with self._lock:
-            if op_key(uid) not in self.store:
+            if op_key(uid) not in self.store and uid not in self._device_only:
                 return False
             if uid not in self._op_done:
                 self._op_done.add(uid)
@@ -292,15 +349,25 @@ class WorkerRuntime:
                 if oi.uid not in self._op_done:
                     self._cancelled.add(oi.uid)
 
+    def _accel_kind(self) -> str:
+        accel_kinds = {l.spec.kind for l in self._lanes} - {HOST_KIND}
+        return next(iter(accel_kinds)) if accel_kinds else HOST_KIND
+
     def _maybe_estimate(self, oi: OperationInstance) -> None:
         try:
             var = self.registry.get(oi.op.variant_name)
         except KeyError:
             return
-        accel_kinds = {l.spec.kind for l in self._lanes} - {HOST_KIND}
-        kind = next(iter(accel_kinds)) if accel_kinds else HOST_KIND
-        oi.speedup = var.estimate_speedup(kind, oi.chunk.meta)
+        oi.speedup = var.estimate_speedup(self._accel_kind(), oi.chunk.meta)
         oi.transfer_impact = var.transfer_impact
+
+    def _estimate_of(self, oi: OperationInstance) -> float:
+        """Current speedup estimate (for ReadyScheduler.reestimate)."""
+        try:
+            var = self.registry.get(oi.op.variant_name)
+        except KeyError:
+            return oi.speedup
+        return var.estimate_speedup(self._accel_kind(), oi.chunk.meta)
 
     # -- idle / completion tracking -----------------------------------------
 
@@ -339,19 +406,28 @@ class WorkerRuntime:
             "device_evictions": sum(
                 l.memory.evictions for l in self._lanes if l.memory is not None
             ),
+            "chain_hits": self.chain_hits,
+            "chain_deferred": self.chain_deferred,
+            "chain_writebacks": self.chain_writebacks,
+            "batches": self.scheduler.stats.batches,
+            "batched_ops": self.scheduler.stats.batched_ops,
             "staging": self.store.stats(),
             "prefetch": self.agent.stats() if self.agent is not None else {},
         }
 
     def output_of(self, oi_uid: int) -> Any:
         with self._lock:
-            return self.store.get(op_key(oi_uid))
+            value = self.store.get(op_key(oi_uid))
+            if value is None:
+                value = self._materialize_locked(oi_uid)
+            return value
 
     # -- lane main loop -----------------------------------------------------------
 
     def _lane_loop(self, lane: _LaneState) -> None:
         while True:
             with self._lock:
+                lane.busy = False
                 while not self._stop and not self.scheduler:
                     self._work_ready.wait(timeout=0.25)
                 if self._stop:
@@ -361,64 +437,188 @@ class WorkerRuntime:
                     if lane.memory is not None and self.locality
                     else None
                 )
-                oi = self.scheduler.pop(lane.spec.kind, resident)
-            if oi is None:
-                continue
-            if oi.uid in self._cancelled or oi.uid in self._op_done:
+                if self.micro_batch > 1 and lane.memory is not None:
+                    idle = sum(
+                        1
+                        for l in self._lanes
+                        if l.memory is not None and not l.busy
+                    )
+                    limit = self.scheduler.batch_limit(self.micro_batch, idle)
+                    ois = self.scheduler.pop_batch(
+                        lane.spec.kind,
+                        resident,
+                        limit=limit,
+                        batchable=self._batch_limit,
+                    )
+                else:
+                    oi = self.scheduler.pop(lane.spec.kind, resident)
+                    ois = [oi] if oi is not None else []
+                if ois:
+                    lane.busy = True
+            ois = [
+                oi
+                for oi in ois
+                if oi is not None
+                and oi.uid not in self._cancelled
+                and oi.uid not in self._op_done
+            ]
+            if not ois:
                 continue
             try:
-                self._run_op(lane, oi)
+                self._run_batch(lane, ois)
             except BaseException as exc:  # noqa: BLE001 - recorded, not raised
                 with self._lock:
-                    self.errors.append((oi.uid, exc))
+                    for oi in ois:
+                        self.errors.append((oi.uid, exc))
                     self._work_ready.notify_all()
 
-    def _run_op(self, lane: _LaneState, oi: OperationInstance) -> None:
+    def _batch_limit(self, oi: OperationInstance) -> int:
+        """pop_batch cap: the variant's declared max batch (1 = scalar)."""
+        try:
+            var = self.registry.get(oi.op.variant_name)
+        except KeyError:
+            return 1
+        return var.max_batch if var.batchable else 1
+
+    def _run_batch(self, lane: _LaneState, ois: list[OperationInstance]) -> None:
+        """Execute one dispatch decision: a single op or a micro-batch
+        of same-op instances (one batched call, amortized launch)."""
+        var = self.registry.get(ois[0].op.variant_name)
         t0 = time.perf_counter()
-        inputs = self._gather_inputs(lane, oi)
-        ctx = OpContext(chunk=oi.chunk, inputs=inputs, lane_kind=lane.spec.kind)
-        impl = self.registry.get(oi.op.variant_name).implementation(lane.spec.kind)
-        out = impl(ctx)
+        ctxs = [
+            OpContext(
+                chunk=oi.chunk,
+                inputs=self._gather_inputs(lane, oi),
+                lane_kind=lane.spec.kind,
+            )
+            for oi in ois
+        ]
+        batch_fn = (
+            var.batch_implementation(lane.spec.kind) if len(ois) > 1 else None
+        )
+        failures: list[tuple[OperationInstance, BaseException]] = []
+        if batch_fn is not None:
+            outs = batch_fn(ctxs)
+            if len(outs) != len(ctxs):
+                raise RuntimeError(
+                    f"batch implementation of {var.name!r} returned "
+                    f"{len(outs)} outputs for {len(ctxs)} contexts"
+                )
+            pairs = list(zip(ois, outs))
+        else:
+            # Scalar loop: isolate failures to the failing chunk so one
+            # malformed tile cannot poison its batch-mates' results.
+            impl = var.implementation(lane.spec.kind)
+            pairs = []
+            for oi, ctx in zip(ois, ctxs):
+                try:
+                    pairs.append((oi, impl(ctx)))
+                except BaseException as exc:  # noqa: BLE001 - recorded
+                    failures.append((oi, exc))
         elapsed = time.perf_counter() - t0
         lane.busy_seconds += elapsed
-        lane.executed += 1
+        lane.executed += len(ois)
         if self.observe_runtimes:
-            self.registry.get(oi.op.variant_name).observe_runtime(
-                lane.spec.kind, elapsed
-            )
-        self._commit(lane, oi, out)
+            var.observe_runtime(lane.spec.kind, elapsed / len(ois))
+            if self.scheduler.policy == "pats":
+                # Keep the ready queue consistent with the shifted EMA —
+                # but only pay the O(queue) re-sort when the estimate
+                # materially moved (PATS only needs relative order).
+                est = var.estimate_speedup(
+                    self._accel_kind(), ois[0].chunk.meta
+                )
+                last = self._reorder_est.get(var.name)
+                if last is None or abs(est - last) > 0.1 * max(last, 1e-9):
+                    self._reorder_est[var.name] = est
+                    with self._lock:
+                        self.scheduler.reestimate(self._estimate_of)
+        for oi, out in pairs:
+            self._commit(lane, oi, out)
+        if failures:
+            with self._lock:
+                self.errors.extend((oi.uid, exc) for oi, exc in failures)
+                self._work_ready.notify_all()
 
     def _gather_inputs(self, lane: _LaneState, oi: OperationInstance) -> dict[str, Any]:
-        """Upload phase: pull dep outputs into this lane's memory."""
-        inputs: dict[str, Any] = {}
+        """Upload phase: pull dep outputs into this lane's memory.
+
+        Deps already resident in *this* lane's DeviceMemory take the
+        chained fast path: no host-tier read, no re-upload.  Deps held
+        device-only by a sibling lane are downloaded (materialized to
+        the host tier) first — the classic cross-device route.
+        """
+        fetch_uids: list[int] = []
         with self._lock:
-            # Host-side read through the region store (promotes from a
-            # slow tier if the StagingAgent has not gotten there yet).
-            dep_objs = [
-                (uid, self.store.get(op_key(uid), promote=True))
-                for uid in sorted(oi.deps)
-            ]
+            dep_objs: list[tuple[int, Any]] = []
+            for uid in sorted(oi.deps):
+                if lane.memory is not None and uid in lane.memory:
+                    # Device-resident fast path: skip host materialization.
+                    # (Counter gated on chaining: plain-DL residency
+                    # reuse must not contaminate the chaining stats.)
+                    if self.chaining:
+                        self.chain_hits += 1
+                    dep_objs.append((uid, lane.memory.get(uid)))
+                    continue
+                # Host-side read through the region store (promotes from
+                # a slow tier if the StagingAgent has not gotten there
+                # yet), falling back to a sibling lane's device memory.
+                value = self.store.get(op_key(uid), promote=True)
+                if value is None:
+                    value = self._materialize_locked(uid)
+                if value is None:
+                    fetch_uids.append(uid)
+                dep_objs.append((uid, value))
         # An input marked available but since evicted (soft tier budgets)
         # is re-pulled from the Manager synchronously.  Deliberately
         # outside self._lock: the fetch takes the Manager's lock, and the
         # Manager calls into this worker while holding it (lock order is
         # always manager -> worker).
-        dep_objs = [
-            (uid, v if v is not None else self._fetch_region(op_key(uid)))
-            for uid, v in dep_objs
-        ]
-        for uid, value in dep_objs:
-            if value is None:
-                continue
-            name = self._dep_name(oi, uid)
-            if lane.memory is not None:
-                if uid not in lane.memory:
-                    lane.memory.uploads += 1
-                    lane.memory.put(uid, value)
-                inputs[name] = lane.memory.get(uid)
-            else:
-                inputs[name] = value
+        if fetch_uids:
+            fetched = {uid: self._fetch_region(op_key(uid)) for uid in fetch_uids}
+            dep_objs = [
+                (uid, v if v is not None else fetched.get(uid))
+                for uid, v in dep_objs
+            ]
+        inputs: dict[str, Any] = {}
+        with self._lock:
+            for uid, value in dep_objs:
+                if value is None:
+                    continue
+                name = self._dep_name(oi, uid)
+                if lane.memory is not None:
+                    if uid not in lane.memory:
+                        lane.memory.uploads += 1
+                        self._device_put_locked(lane, uid, value)
+                    inputs[name] = lane.memory.get(uid)
+                else:
+                    inputs[name] = value
         return inputs
+
+    def _device_put_locked(self, lane: _LaneState, uid: int, value: Any) -> None:
+        """Insert into a lane's device memory, writing any evicted
+        device-only outputs back to the host tier (slot budgets are a
+        soft cap, never a correctness hazard)."""
+        for e_uid, e_val in lane.memory.put(uid, value):
+            if self._device_only.pop(e_uid, None) is not None:
+                lane.memory.downloads += 1
+                self.chain_writebacks += 1
+                self.store.put(op_key(e_uid), e_val)
+                # Same invariant as _commit/_materialize: keep the only
+                # host copy resident until its consumers ran.
+                self.store.pin(op_key(e_uid))
+
+    def _materialize_locked(self, uid: int) -> Any:
+        """Download a device-only chained output into the host tier."""
+        holder = self._device_only.get(uid)
+        if holder is None or holder.memory is None or uid not in holder.memory:
+            return None
+        value = holder.memory.get(uid)
+        del self._device_only[uid]
+        holder.memory.downloads += 1
+        self.chain_writebacks += 1
+        self.store.put(op_key(uid), value)
+        self.store.pin(op_key(uid))
+        return value
 
     def _dep_name(self, oi: OperationInstance, dep_uid: int) -> str:
         si = oi.stage_instance
@@ -432,17 +632,40 @@ class WorkerRuntime:
                     return other.op.name
         return f"dep_{dep_uid}"
 
+    def _chainable_locked(self, oi: OperationInstance) -> bool:
+        """Defer the host write-back?  Only when every consumer of this
+        output is known locally — a chained intermediate is then served
+        straight from device memory (or lazily downloaded on a sibling
+        lane / stage-completion read)."""
+        if not self.chaining or not oi.dependents:
+            return False
+        for dep_uid in oi.dependents:
+            if dep_uid in self._cancelled:
+                return False
+            if self._find_op(dep_uid) is None:
+                return False
+        return True
+
     def _commit(self, lane: _LaneState, oi: OperationInstance, out: Any) -> None:
         with self._lock:
+            chained = False
             if lane.memory is not None:
-                lane.memory.put(oi.uid, out)
-                if not self.locality:
+                self._device_put_locked(lane, oi.uid, out)
+                chained = self._chainable_locked(oi)
+                if not chained and not self.locality:
                     lane.memory.downloads += 1  # basic mode: always download
-            self.store.put(op_key(oi.uid), out)  # host write-back (download)
-            # Keep the output resident until its consumers (and the
-            # stage-completion read below) ran: tier budgets are a soft
-            # cap for the live working set, never a correctness hazard.
-            self.store.pin(op_key(oi.uid))
+            if chained:
+                # Resident fast path: the intermediate never touches the
+                # host tier unless a host-side consumer materializes it.
+                self._device_only[oi.uid] = lane
+                self.chain_deferred += 1
+            else:
+                self.store.put(op_key(oi.uid), out)  # host write-back (download)
+                # Keep the output resident until its consumers (and the
+                # stage-completion read below) ran: tier budgets are a
+                # soft cap for the live working set, never a correctness
+                # hazard.
+                self.store.pin(op_key(oi.uid))
             self._op_done.add(oi.uid)
             self.completion_order.append(oi.uid)
             si = oi.stage_instance
@@ -473,11 +696,31 @@ class WorkerRuntime:
         if self.on_heartbeat is not None:
             self.on_heartbeat(self.worker_id)
         if stage_done and self.on_stage_complete is not None:
-            outputs = {
-                o.op.name: self.store.get(op_key(o.uid))
-                for o in si.op_instances
-            }
             with self._lock:
+                # Only sink outputs cross the host boundary (the
+                # Manager forwards them to dependents / other workers):
+                # those are downloaded for real.  Chained intermediates
+                # never touch the host tier — the callback still
+                # carries the in-process reference (this runtime holds
+                # device values in host RAM anyway), but no download is
+                # modeled and tracking ends so the device LRU can age
+                # them out without a write-back.
+                sinks = set(si.stage.sinks())
+                outputs: dict[str, Any] = {}
+                for o in si.op_instances:
+                    holder = self._device_only.get(o.uid)
+                    if holder is None:
+                        outputs[o.op.name] = self.store.get(op_key(o.uid))
+                    elif o.op.name in sinks:
+                        outputs[o.op.name] = self._materialize_locked(o.uid)
+                    else:
+                        del self._device_only[o.uid]
+                        mem = holder.memory
+                        outputs[o.op.name] = (
+                            mem.get(o.uid)
+                            if mem is not None and o.uid in mem
+                            else None
+                        )
                 for o in si.op_instances:
                     self._maybe_unpin_locked(o.uid)
             self.on_stage_complete(si, outputs)

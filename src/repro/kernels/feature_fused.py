@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: fused feature megakernel (deconv + moments + Sobel).
+
+The feature fan-out of the WSI pipeline reads the same tile three
+times — color deconvolution, pixel statistics over the hematoxylin
+plane, and gradient statistics over the luminance.  When the whole
+fan-out lands on one accelerator, this kernel computes all three in a
+single VMEM pass: every (stripe, W) block is read from HBM once and
+yields the hema/eosin stain planes, the Sobel gradient magnitude of
+the luminance, and the per-stripe partial moments of hema and |grad|
+(sum, sum-of-squares, max), reduced on the host.  One HBM read instead
+of three is exactly the memory-roofline move that makes fine-grain
+chained ops competitive with a monolithic kernel.
+
+Layout follows ``sobel_stats``: row-stripe blocking with one
+edge-replicated halo row per side; channel planes are separate (H, W)
+arrays so every load is a contiguous lane-aligned tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DECONV_MATRIX, GRAY_WEIGHTS
+
+__all__ = ["feature_fused_pallas"]
+
+
+def _od(x):
+    return -jnp.log10((x.astype(jnp.float32) + 1.0) / 256.0)
+
+
+def _gray(r, g, b):
+    wr, wg, wb = GRAY_WEIGHTS
+    return (
+        wr * r.astype(jnp.float32)
+        + wg * g.astype(jnp.float32)
+        + wb * b.astype(jnp.float32)
+    )
+
+
+def _kernel(
+    r_up, r_c, r_dn,
+    g_up, g_c, g_dn,
+    b_up, b_c, b_dn,
+    hema_ref, eosin_ref, mag_ref, stats_ref,
+    *, m,
+):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    rc, gc, bc = r_c[...], g_c[...], b_c[...]
+    rows, w = rc.shape
+
+    # Stain separation on the center stripe (pure VPU elementwise).
+    odr, odg, odb = _od(rc), _od(gc), _od(bc)
+    hema = m[0][0] * odr + m[0][1] * odg + m[0][2] * odb
+    eosin = m[1][0] * odr + m[1][1] * odg + m[1][2] * odb
+    hema_ref[...] = hema
+    eosin_ref[...] = eosin
+
+    # Sobel of the luminance with edge-replicated halo rows: real
+    # neighbour rows inside the image, the stripe's own boundary row at
+    # the image border (matches jnp.pad mode="edge" in the oracle).
+    gray_c = _gray(rc, gc, bc)
+    up_row = jnp.where(
+        i == 0,
+        gray_c[:1, :],
+        _gray(r_up[...][-1:, :], g_up[...][-1:, :], b_up[...][-1:, :]),
+    )
+    dn_row = jnp.where(
+        i == n - 1,
+        gray_c[-1:, :],
+        _gray(r_dn[...][:1, :], g_dn[...][:1, :], b_dn[...][:1, :]),
+    )
+    ext = jnp.concatenate([up_row, gray_c, dn_row], axis=0)  # (rows+2, W)
+    ext = jnp.concatenate([ext[:, :1], ext, ext[:, -1:]], axis=1)
+    sl = lambda dy, dx: jax.lax.dynamic_slice(ext, (dy, dx), (rows, w))
+    gx = (
+        -1.0 * sl(0, 0) + 1.0 * sl(0, 2)
+        - 2.0 * sl(1, 0) + 2.0 * sl(1, 2)
+        - 1.0 * sl(2, 0) + 1.0 * sl(2, 2)
+    )
+    gy = (
+        -1.0 * sl(0, 0) - 2.0 * sl(0, 1) - 1.0 * sl(0, 2)
+        + 1.0 * sl(2, 0) + 2.0 * sl(2, 1) + 1.0 * sl(2, 2)
+    )
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    mag_ref[...] = mag
+
+    # Per-stripe partial moments, reduced on the host.
+    stats_ref[0, 0] = hema.sum()
+    stats_ref[0, 1] = (hema * hema).sum()
+    stats_ref[0, 2] = hema.max()
+    stats_ref[0, 3] = mag.sum()
+    stats_ref[0, 4] = (mag * mag).sum()
+    stats_ref[0, 5] = mag.max()
+
+
+@functools.partial(jax.jit, static_argnames=("stripe", "interpret"))
+def feature_fused_pallas(
+    r: jnp.ndarray,
+    g: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    stripe: int = 128,
+    interpret: bool = True,
+):
+    """Fused deconv + hema moments + Sobel-of-luminance moments.
+
+    Returns ``(hema, eosin, mag, stats)`` with ``stats`` the 6-vector
+    ``[h_sum, h_sumsq, h_max, g_sum, g_sumsq, g_max]`` — the contract
+    of :func:`repro.kernels.ref.feature_fused_ref`.
+    """
+    h, w = r.shape
+    bh = min(stripe, h)
+    if h % bh:
+        raise ValueError(f"height {h} not divisible by stripe {bh}")
+    n = h // bh
+    clamp = lambda i: jnp.clip(i, 0, n - 1)
+    spec_up = pl.BlockSpec((bh, w), lambda i: (clamp(i - 1), 0))
+    spec_c = pl.BlockSpec((bh, w), lambda i: (i, 0))
+    spec_dn = pl.BlockSpec((bh, w), lambda i: (clamp(i + 1), 0))
+    m = tuple(tuple(float(x) for x in row) for row in DECONV_MATRIX)
+    plane = jax.ShapeDtypeStruct((h, w), jnp.float32)
+    hema, eosin, mag, partial = pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        grid=(n,),
+        in_specs=[spec_up, spec_c, spec_dn] * 3,
+        out_specs=(
+            spec_c,
+            spec_c,
+            spec_c,
+            pl.BlockSpec((1, 6), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            plane,
+            plane,
+            plane,
+            jax.ShapeDtypeStruct((n, 6), jnp.float32),
+        ),
+        interpret=interpret,
+    )(r, r, r, g, g, g, b, b, b)
+    stats = jnp.stack(
+        [
+            partial[:, 0].sum(),
+            partial[:, 1].sum(),
+            partial[:, 2].max(),
+            partial[:, 3].sum(),
+            partial[:, 4].sum(),
+            partial[:, 5].max(),
+        ]
+    )
+    return hema, eosin, mag, stats

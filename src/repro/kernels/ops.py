@@ -13,12 +13,15 @@ corresponding logical operations, so the middleware's variant mechanism
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .color_deconv import color_deconv_pallas
 from .decode_attention import decode_attention_pallas
+from .feature_fused import feature_fused_pallas
 from .flash_attention import flash_attention_pallas
 from .mamba2_scan import mamba2_chunk_scan_pallas
 from .morph_recon import morph_recon_pallas
@@ -29,13 +32,17 @@ __all__ = [
     "color_deconv",
     "morph_recon",
     "sobel_stats",
+    "feature_fused",
     "flash_attention",
     "decode_attention",
     "mamba2_chunk_scan",
 ]
 
 
+@functools.lru_cache(maxsize=1)
 def on_tpu() -> bool:
+    # Called on every op dispatch; the backend cannot change
+    # mid-process, so one jax.default_backend() lookup suffices.
     return jax.default_backend() == "tpu"
 
 
@@ -58,6 +65,11 @@ def sobel_stats(gray, **kw):
     return sobel_stats_pallas(gray, **kw)
 
 
+def feature_fused(r, g, b, **kw):
+    kw.setdefault("interpret", _interpret())
+    return feature_fused_pallas(r, g, b, **kw)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, **kw):
     kw.setdefault("interpret", _interpret())
     return flash_attention_pallas(q, k, v, causal=causal, **kw)
@@ -78,6 +90,7 @@ oracles = {
     "color_deconv": ref.color_deconv_ref,
     "morph_recon": ref.morph_recon_ref,
     "sobel_stats": ref.sobel_stats_ref,
+    "feature_fused": ref.feature_fused_ref,
     "flash_attention": ref.flash_attention_ref,
     "decode_attention": ref.decode_attention_ref,
     "mamba2_chunk_scan": ref.mamba2_chunk_scan_ref,

@@ -14,11 +14,16 @@ __all__ = [
     "color_deconv_ref",
     "morph_recon_ref",
     "sobel_stats_ref",
+    "feature_fused_ref",
     "flash_attention_ref",
     "decode_attention_ref",
     "mamba2_chunk_scan_ref",
     "DECONV_MATRIX",
+    "GRAY_WEIGHTS",
 ]
+
+#: ITU-R BT.601 luminance weights (matches app.segmentation.to_gray).
+GRAY_WEIGHTS = (0.299, 0.587, 0.114)
 
 # Ruifrok & Johnston H&E(+residual); rows = stain OD vectors.
 _STAINS = np.array(
@@ -86,6 +91,27 @@ def sobel_stats_ref(gray: jnp.ndarray):
     mag = jnp.sqrt(gx * gx + gy * gy)
     stats = jnp.stack([mag.sum(), (mag * mag).sum(), mag.max()])
     return mag, stats
+
+
+def feature_fused_ref(r: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray):
+    """Composed oracle of the fused feature megakernel.
+
+    One logical pass over an RGB tile producing what the three feature
+    ops would read it thrice for: the hematoxylin/eosin stain planes
+    (color deconvolution), the Sobel gradient magnitude of the
+    luminance, and the tile moments of hema and |grad| —
+    ``stats = [h_sum, h_sumsq, h_max, g_sum, g_sumsq, g_max]``.
+    """
+    hema, eosin, _ = color_deconv_ref(r, g, b)
+    wr, wg, wb = GRAY_WEIGHTS
+    gray = (
+        wr * r.astype(jnp.float32)
+        + wg * g.astype(jnp.float32)
+        + wb * b.astype(jnp.float32)
+    )
+    mag, gstats = sobel_stats_ref(gray)
+    hstats = jnp.stack([hema.sum(), (hema * hema).sum(), hema.max()])
+    return hema, eosin, mag, jnp.concatenate([hstats, gstats])
 
 
 def flash_attention_ref(

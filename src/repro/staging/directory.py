@@ -61,6 +61,15 @@ class PlacementDirectory:
         with self._lock:
             return dict(self._placement.get(key, {}))
 
+    def replicated_elsewhere(self, worker_id: int, key: RegionKey) -> bool:
+        """True when another worker also holds ``key`` — dropping the
+        local replica then loses no data (replication-aware eviction)."""
+        with self._lock:
+            holders = self._placement.get(key)
+            if not holders:
+                return False
+            return any(w != worker_id for w in holders)
+
     def bytes_on(self, worker_id: int, keys: Iterable[RegionKey]) -> int:
         """Bytes of ``keys`` already resident on ``worker_id``."""
         with self._lock:

@@ -35,6 +35,11 @@ class PlacementPolicy:
     defer_remote: bool = True
     # Cap on how many pending instances to score per dispatch decision.
     scan_limit: int = 64
+    # Replication-aware host-tier eviction: under budget pressure a
+    # worker sheds regions the PlacementDirectory shows replicated on
+    # another worker before any sole copy (the Manager wires each
+    # worker's host tier to ``directory.replicated_elsewhere``).
+    replication_aware_eviction: bool = True
 
 
 def select_lease(

@@ -21,7 +21,7 @@ from __future__ import annotations
 import hashlib
 import pickle
 import threading
-from typing import Any, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 from .tiers import RegionKey, Tier, sizeof
 
@@ -67,6 +67,11 @@ class RegionStore:
         # no deeper backstop — nonzero means tier budgets are too tight
         # for the unpinned working set (diagnostic, see stats()).
         self.dropped = 0
+        # Fired when a region leaves this store entirely (fell off the
+        # bottom tier).  The Manager wires it to PlacementDirectory.
+        # evict so the directory's replica map — which feeds lease
+        # placement and replication-aware eviction — never goes stale.
+        self.on_drop: Optional[Callable[[RegionKey], None]] = None
 
     # -- tier lookup -------------------------------------------------------
 
@@ -112,7 +117,15 @@ class RegionStore:
             return
         nxt = i + 1
         if nxt >= len(self.tiers):
-            self.dropped += sum(1 for _, v, _ in evicted if v is not None)
+            for k, v, _ in evicted:
+                if v is None:
+                    continue
+                self.dropped += 1
+                if self.on_drop is not None:
+                    try:
+                        self.on_drop(k)
+                    except Exception:  # noqa: BLE001 - directory gone
+                        pass
             return
         for k, v, n in evicted:
             if v is None:
@@ -213,7 +226,11 @@ class RegionStore:
         return moved
 
     def stats(self) -> dict[str, dict[str, int]]:
-        out = {t.name: t.stats.as_dict() for t in self.tiers}
+        out = {}
+        for t in self.tiers:
+            d = t.stats.as_dict()
+            d["replicated_evictions"] = t.replicated_evictions
+            out[t.name] = d
         out["store"] = {
             "promotions": self.promotions,
             "demotions": self.demotions,

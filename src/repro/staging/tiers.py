@@ -19,7 +19,7 @@ import sys
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Hashable, Iterable, Optional
+from typing import Any, Callable, Hashable, Iterable, Optional
 
 __all__ = [
     "TierStats",
@@ -96,6 +96,13 @@ class Tier:
         # Pinned keys are never evicted (live working set): the byte
         # budget is a soft cap while consumers are outstanding.
         self._pinned: set[RegionKey] = set()
+        # Replication-aware eviction (PlacementPolicy knob): when set
+        # (the Manager wires it to PlacementDirectory.replicated_
+        # elsewhere), keys whose bytes exist on another worker — or are
+        # re-creatable from the global tier — are evicted before sole
+        # copies, so budget pressure sheds redundancy first.
+        self.replicated: Optional[Callable[[RegionKey], bool]] = None
+        self.replicated_evictions = 0
 
     # -- capacity ----------------------------------------------------------
 
@@ -127,20 +134,52 @@ class Tier:
             self._bytes += nbytes
             self.stats.puts += 1
             self.stats.bytes_in += nbytes
-            if self.budget_bytes is not None:
-                # Oldest-first, skipping the new entry and pinned keys.
-                for k in list(self._entries):
+            if self.budget_bytes is not None and self._bytes > self.budget_bytes:
+                # LRU order with replicated-elsewhere keys first,
+                # skipping the new entry and pinned keys.  The victim
+                # scan (one ``replicated`` directory probe per entry)
+                # only runs once actually over budget.
+                for k, repl in self._victim_order(key):
                     if self._bytes <= self.budget_bytes:
                         break
-                    if k == key or k in self._pinned:
-                        continue
                     v, n = self._entries.pop(k)
                     self._bytes -= n
                     self._erase(k)
                     self.stats.evictions += 1
                     self.stats.bytes_out += n
+                    if repl:
+                        self.replicated_evictions += 1
                     evicted.append((k, v, n))
         return evicted
+
+    def _victim_order(self, protect: RegionKey):
+        """Eviction candidates, oldest-first; with a ``replicated``
+        predicate wired, redundant replicas go before sole copies.
+
+        Lazy generator over a snapshot: when freeing the oldest one or
+        two replicated entries suffices, only that many directory
+        probes are paid (the full scan only happens when eviction must
+        fall back to sole copies).
+        """
+        candidates = [
+            k for k in self._entries if k != protect and k not in self._pinned
+        ]
+        if self.replicated is None:
+            for k in candidates:
+                yield k, False
+            return
+        sole: list[RegionKey] = []
+        for k in candidates:
+            try:
+                repl = bool(self.replicated(k))
+            except Exception:  # noqa: BLE001 - directory gone: plain LRU
+                repl = False
+            if repl:
+                yield k, True
+            else:
+                sole.append(k)
+        for k in sole:
+            yield k, False
 
     def pin(self, key: RegionKey) -> None:
         with self._lock:

@@ -50,6 +50,36 @@ def test_sobel_stats(hw, stripe):
     np.testing.assert_allclose(st, ws, rtol=1e-4)
 
 
+@pytest.mark.parametrize("hw,stripe", [((128, 128), 32), ((256, 384), 64),
+                                       ((128, 640), 128)])
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+def test_feature_fused(hw, stripe, dtype):
+    """Fused megakernel == composed deconv + moments + Sobel oracles."""
+    h, w = hw
+    mk = lambda: jnp.asarray(
+        RNG.integers(0, 256, (h, w)).astype(dtype)
+        if dtype == np.uint8
+        else RNG.uniform(0, 255, (h, w)).astype(dtype)
+    )
+    r, g, b = mk(), mk(), mk()
+    got = ops.feature_fused(r, g, b, stripe=stripe, interpret=True)
+    want = ref.feature_fused_ref(r, g, b)
+    names = ("hema", "eosin", "mag", "stats")
+    for name, gp, wp in zip(names, got, want):
+        rtol = 1e-4 if name == "stats" else 3e-5
+        np.testing.assert_allclose(
+            np.asarray(gp), np.asarray(wp), rtol=rtol, atol=1e-4,
+            err_msg=name,
+        )
+
+
+def test_on_tpu_is_cached():
+    """Satellite: the backend lookup runs once per process (it is on
+    the per-op dispatch path and the backend cannot change)."""
+    assert ops.on_tpu() is ops.on_tpu()
+    assert ops.on_tpu.cache_info().hits >= 1
+
+
 @pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 4, 256, 64),
                                    (1, 1, 512, 128)])
 @pytest.mark.parametrize("causal", [True, False])

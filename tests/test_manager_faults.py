@@ -165,3 +165,33 @@ def test_heartbeat_expiry_releases_work_exactly_once():
         release.set()
         w0.stop()
         w1.stop()
+
+
+def test_slandered_worker_rejoins_and_run_completes():
+    """Regression: a *healthy* worker whose single op outlasts the
+    heartbeat window is reaped as dead; with no other live worker the
+    run used to wedge with work pending forever.  The monitor must
+    rejoin a provably-alive worker (its leases were already recovered;
+    chunk processing is idempotent)."""
+    reg = VariantRegistry()
+
+    def slow_then_fast(ctx):
+        # First chunk outlasts the heartbeat window; the rest are quick.
+        time.sleep(0.6 if ctx.chunk.chunk_id == 0 else 0.002)
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", slow_then_fast)
+    cw = _single_stage_cw(4)
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()
+    mgr = Manager(cw, ManagerConfig(window=1, backup_tasks=False,
+                                    heartbeat_timeout=0.2, poll_interval=0.02))
+    mgr.register_worker(w0)
+    try:
+        assert mgr.run(timeout=60.0)  # wedged forever before the fix
+        done, total = mgr.progress()
+        assert done == total == 4
+        assert mgr.recovered_leases >= 1  # it *was* reaped mid-op...
+        assert not mgr._workers[0].dead   # ...and rejoined
+    finally:
+        w0.stop()
