@@ -31,6 +31,8 @@ def main() -> None:
                     help="skip real variant timing in fig7")
     ap.add_argument("--pr2-json", default=None,
                     help="path for the pr2 bench JSON (default: BENCH_PR2.json)")
+    ap.add_argument("--pr3-json", default=None,
+                    help="path for the pr3 bench JSON (default: BENCH_PR3.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -38,7 +40,7 @@ def main() -> None:
     selected = (
         args.only.split(",")
         if args.only
-        else list(ALL_BENCHES) + ["staging", "pr2", "roofline"]
+        else list(ALL_BENCHES) + ["staging", "pr2", "pr3", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -48,6 +50,10 @@ def main() -> None:
                 from benchmarks.pr2 import bench_pr2
 
                 bench_rows = bench_pr2(args.pr2_json)
+            elif name == "pr3":
+                from benchmarks.transport import bench_pr3
+
+                bench_rows = bench_pr3(args.pr3_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

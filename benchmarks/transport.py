@@ -1,0 +1,250 @@
+"""PR3 bench: cluster transport layer — control-plane costs measured.
+
+Four planes, emitted as CSV rows and machine-readable ``BENCH_PR3.json``:
+
+* **round_trip** — one request/reply over InprocBus vs SocketBus
+  (µs/call): the cost the seed's direct-call control plane never paid.
+* **prefetch** — StagingAgent pulls with and without batched fetches:
+  transport round-trips per key (acceptance: batching cuts them ≥2x).
+* **e2e** — the demo Manager/2-Worker pipeline end-to-end, inproc bus
+  (threads) vs SocketBus (separate OS processes), tiles/sec each.
+* **sim** — calibrated simulator with the control-plane cost model on
+  (``rpc_latency_us``), batched vs per-key staging pulls.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only pr3``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+Row = tuple[str, float, str]
+
+_RTT_CALLS = 400
+_PREFETCH_KEYS = 24
+_E2E_CHUNKS = 24
+
+
+def _bench_round_trip() -> dict[str, float]:
+    import repro.transport as T
+
+    def measure(server_bus, client_bus) -> float:
+        address = server_bus.serve({"echo": lambda peer, p: p})
+        peer = client_bus.connect(address)
+        payload = {"k": ("op", 7), "v": 1.5}
+        peer.call("echo", payload)  # warm the path
+        t0 = time.perf_counter()
+        for _ in range(_RTT_CALLS):
+            peer.call("echo", payload)
+        per_call = (time.perf_counter() - t0) / _RTT_CALLS
+        peer.close()
+        server_bus.close()
+        client_bus.close()
+        return per_call * 1e6
+
+    inproc = T.InprocBus()
+    inproc_us = measure(inproc, inproc)
+    socket_us = measure(T.SocketBus(), T.SocketBus())
+    return {"inproc_us": inproc_us, "socket_us": socket_us}
+
+
+def _bench_prefetch() -> dict[str, float]:
+    from repro.staging.agent import StagingAgent
+    from repro.staging.store import RegionStore, op_key
+    from repro.staging.tiers import HostTier
+
+    region = np.ones((64, 64), np.float32)
+
+    def run(batched: bool) -> int:
+        store = RegionStore([HostTier()])
+        landed: list = []
+        agent = StagingAgent(
+            store,
+            fetch=lambda key: region,
+            fetch_batch=(lambda keys: [region for _ in keys]) if batched else None,
+            max_batch=16,
+            on_staged=lambda key, n: landed.append(key),
+        )
+        agent.request_prefetch([op_key(i) for i in range(_PREFETCH_KEYS)])
+        agent.start()
+        deadline = time.monotonic() + 30.0
+        while len(landed) < _PREFETCH_KEYS and time.monotonic() < deadline:
+            time.sleep(0.005)
+        agent.stop()
+        assert len(landed) == _PREFETCH_KEYS
+        return agent.fetch_calls
+
+    batched_calls = run(batched=True)
+    unbatched_calls = run(batched=False)
+    return {
+        "keys": _PREFETCH_KEYS,
+        "batched_fetch_calls": batched_calls,
+        "unbatched_fetch_calls": unbatched_calls,
+        "round_trips_per_key_batched": batched_calls / _PREFETCH_KEYS,
+        "round_trips_per_key_unbatched": unbatched_calls / _PREFETCH_KEYS,
+        "reduction_x": unbatched_calls / max(batched_calls, 1),
+    }
+
+
+def _bench_e2e() -> dict[str, float]:
+    import repro.transport as T
+    from repro.core import LaneSpec, Manager, ManagerConfig, WorkerRuntime
+    from repro.staging import StagingConfig
+    from repro.transport.demo import demo_concrete, demo_registry, expected_consume
+
+    expected = sorted(expected_consume(i) for i in range(_E2E_CHUNKS))
+
+    def outputs_of(mgr, cw) -> list[float]:
+        clones = mgr._clone_map()  # noqa: SLF001
+        return sorted(
+            mgr.stage_outputs(si.uid).get("consume")
+            for si in cw.stage_instances.values()
+            if si.stage.name == "consume" and si.uid not in clones
+        )
+
+    def run_inproc() -> float:
+        cw = demo_concrete(_E2E_CHUNKS)
+        mgr = Manager(cw, ManagerConfig(window=4, locality_aware=True))
+        endpoint = T.ManagerEndpoint(mgr, T.InprocBus())
+        workers = []
+        for wid in range(2):
+            rt = WorkerRuntime(
+                wid, lanes=(LaneSpec("cpu", 0),),
+                variant_registry=demo_registry(), staging=StagingConfig(),
+            )
+            rt.start()
+            workers.append(rt)
+            T.WorkerClient(rt, T.InprocBus(), endpoint.address)
+        t0 = time.perf_counter()
+        ok = mgr.run(timeout=120.0)
+        wall = time.perf_counter() - t0
+        assert ok and outputs_of(mgr, cw) == expected
+        for rt in workers:
+            rt.stop()
+        return _E2E_CHUNKS / wall
+
+    def run_socket() -> float:
+        cw = demo_concrete(_E2E_CHUNKS)
+        mgr = Manager(cw, ManagerConfig(window=4, locality_aware=True,
+                                        backup_tasks=False,
+                                        heartbeat_timeout=120.0))
+        endpoint = T.ManagerEndpoint(mgr, T.SocketBus())
+        procs = [
+            T.spawn_worker(
+                endpoint.address,
+                T.WorkerSpec(
+                    worker_id=wid,
+                    registry="repro.transport.demo:demo_registry",
+                ),
+            )
+            for wid in range(2)
+        ]
+        assert endpoint.wait_workers(2, timeout=120.0)
+        t0 = time.perf_counter()
+        ok = mgr.run(timeout=120.0)
+        wall = time.perf_counter() - t0
+        assert ok and outputs_of(mgr, cw) == expected
+        endpoint.close()
+        for p in procs:
+            p.join(timeout=15.0)
+        return _E2E_CHUNKS / wall
+
+    return {
+        "inproc_tiles_per_s": run_inproc(),
+        "socket_tiles_per_s": run_socket(),
+    }
+
+
+def _bench_sim() -> dict[str, float]:
+    from repro.core.simulator import SimConfig, run_simulation
+    from repro.core.workflow import AbstractWorkflow, Operation, Stage
+
+    def fanin():
+        return AbstractWorkflow(
+            "fanin",
+            (
+                Stage.single(Operation("rbc_detection")),
+                Stage.single(Operation("morph_open")),
+                Stage.single(Operation("haralick")),
+            ),
+            (("rbc_detection", "haralick"), ("morph_open", "haralick")),
+        )
+
+    # Locality off: every fan-in stage actually pulls remote regions,
+    # so the batched-vs-per-key amortization is visible in the model
+    # (with locality on, remote pulls mostly vanish — which is its own
+    # row in benchmarks/staging.py).
+    base = dict(
+        n_nodes=4, staging=True, staging_locality=False, window=8,
+        rpc_latency_us=500.0,
+    )
+    zero = run_simulation(
+        80, SimConfig(**{**base, "rpc_latency_us": 0.0}),
+        workflow_builder=fanin,
+    )
+    batched = run_simulation(
+        80, SimConfig(**base, batch_prefetch=True), workflow_builder=fanin
+    )
+    unbatched = run_simulation(
+        80, SimConfig(**base, batch_prefetch=False), workflow_builder=fanin
+    )
+    assert zero.completed_ok and batched.completed_ok and unbatched.completed_ok
+    return {
+        "makespan_rpc0_s": zero.makespan,
+        "makespan_batched_s": batched.makespan,
+        "makespan_unbatched_s": unbatched.makespan,
+        "control_messages_batched": batched.control_messages,
+        "control_messages_unbatched": unbatched.control_messages,
+        "rpc_wait_batched_s": batched.rpc_wait,
+        "rpc_wait_unbatched_s": unbatched.rpc_wait,
+    }
+
+
+def bench_pr3(json_path: str | None = None) -> list[Row]:
+    rtt = _bench_round_trip()
+    prefetch = _bench_prefetch()
+    e2e = _bench_e2e()
+    sim = _bench_sim()
+    report = {
+        "round_trip": rtt,
+        "prefetch": prefetch,
+        "e2e": e2e,
+        "sim": sim,
+        "acceptance": {
+            "prefetch_reduction_x": prefetch["reduction_x"],
+            "prefetch_reduction_ok": prefetch["reduction_x"] >= 2.0,
+        },
+    }
+    out = Path(json_path) if json_path else (
+        Path(__file__).resolve().parents[1] / "BENCH_PR3.json"
+    )
+    out.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows: list[Row] = [
+        ("pr3/round_trip/inproc_us", rtt["inproc_us"],
+         f"{_RTT_CALLS} echo calls"),
+        ("pr3/round_trip/socket_us", rtt["socket_us"],
+         "TCP loopback, framed codec"),
+        ("pr3/prefetch/round_trips_per_key_batched",
+         prefetch["round_trips_per_key_batched"],
+         f"{_PREFETCH_KEYS} keys coalesced"),
+        ("pr3/prefetch/round_trips_per_key_unbatched",
+         prefetch["round_trips_per_key_unbatched"], "one pull per key"),
+        ("pr3/prefetch/reduction_x", prefetch["reduction_x"],
+         "acceptance: >= 2x"),
+        ("pr3/e2e/inproc_tiles_per_s", e2e["inproc_tiles_per_s"],
+         f"{_E2E_CHUNKS} chunks, 2 workers, threads"),
+        ("pr3/e2e/socket_tiles_per_s", e2e["socket_tiles_per_s"],
+         f"{_E2E_CHUNKS} chunks, 2 worker processes"),
+        ("pr3/sim/makespan_rpc0_s", sim["makespan_rpc0_s"],
+         "coordination structurally free (seed model)"),
+        ("pr3/sim/makespan_batched_s", sim["makespan_batched_s"],
+         "rpc=500us, batched pulls"),
+        ("pr3/sim/makespan_unbatched_s", sim["makespan_unbatched_s"],
+         "rpc=500us, per-key pulls"),
+    ]
+    return rows

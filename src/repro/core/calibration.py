@@ -175,6 +175,11 @@ class NodeConfig:
     # saturation, Fig 9).  Modeled as per-core efficiency when k cores
     # compute concurrently: eff(k) = 1 / (1 + alpha*(k-1)).
     cpu_bw_alpha: float = 0.0303
+    # Storage-hierarchy capacity (Keeneland KIDS: 24 GB RAM per node,
+    # local scratch disk).  StagingConfig.from_calibration derives
+    # host/disk tier budgets from these instead of hand-set constants.
+    host_ram_gb: float = 24.0
+    scratch_disk_gb: float = 250.0
 
     def cpu_core_efficiency(self, active_cores: int) -> float:
         return 1.0 / (1.0 + self.cpu_bw_alpha * max(active_cores - 1, 0))

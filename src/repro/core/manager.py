@@ -17,9 +17,13 @@ thousand-node deployments:
 * **elastic membership** — Workers may register/deregister mid-run;
   the lease queue simply redistributes.
 
-In a single process the Worker objects are invoked directly; on a
-cluster the same protocol runs over MPI/gRPC — the Manager class is
-transport-agnostic (``transport`` hooks).
+The Manager is transport-agnostic: in a single process Worker objects
+are registered directly; on a cluster the same protocol runs over a
+:mod:`repro.transport` MessageBus — a ``ManagerEndpoint`` serves the
+lease/complete/heartbeat/region-pull RPCs and each remote worker
+appears here as a ``WorkerProxy``.  With ``ManagerConfig.journal_path``
+set, placement and lease state are write-ahead journaled so a restarted
+Manager rehydrates instead of restarting the workflow.
 """
 
 from __future__ import annotations
@@ -32,7 +36,13 @@ from typing import Any, Callable, Optional
 
 from .workflow import ConcreteWorkflow, StageInstance
 from .worker import WorkerRuntime
-from ..staging import PlacementDirectory, PlacementPolicy, op_key, select_lease
+from ..staging import (
+    DirectoryService,
+    PlacementDirectory,
+    PlacementPolicy,
+    op_key,
+    select_lease,
+)
 from ..staging.tiers import RegionKey, sizeof
 
 __all__ = ["Manager", "ManagerConfig"]
@@ -50,6 +60,13 @@ class ManagerConfig:
     locality_aware: bool = False
     placement: PlacementPolicy = field(default_factory=PlacementPolicy)
     directory: Optional[PlacementDirectory] = None  # default: fresh one
+    # Failover-surviving placement state: when set, the directory is
+    # wrapped in a journaled DirectoryService at this path.  A Manager
+    # constructed over a path that already holds a journal *rehydrates*:
+    # holder maps, completed stages, and the pending-lease queue are
+    # replayed so a restarted coordinator resumes instead of restarting.
+    journal_path: Optional[str] = None
+    snapshot_every: int = 512        # journal appends between checkpoints
 
 
 @dataclass
@@ -72,8 +89,21 @@ class Manager:
         self._dup_issued: set[int] = set()
         self.recovered_leases = 0
         self.duplicated_leases = 0
-        # Cluster placement metadata + locality accounting.
-        self.directory = self.cfg.directory or PlacementDirectory()
+        # Cluster placement metadata + locality accounting.  With a
+        # journal path the directory becomes a DirectoryService whose
+        # mutations are write-ahead logged; opening an existing journal
+        # rehydrates holder maps and the lease ledger (failover).
+        if self.cfg.journal_path is not None:
+            self.directory: PlacementDirectory = DirectoryService(
+                self.cfg.journal_path,
+                self.cfg.directory,
+                snapshot_every=self.cfg.snapshot_every,
+            )
+            for uid in self.directory.completed:
+                if uid in self.cw.stage_instances:
+                    self._stage_done.add(uid)
+        else:
+            self.directory = self.cfg.directory or PlacementDirectory()
         self.placement_local = 0       # dependent leased where its data is
         self.placement_remote = 0      # dependent leased elsewhere
         self.staged_bytes_avoided = 0  # inputs not re-sent: already staged
@@ -88,8 +118,10 @@ class Manager:
         runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
         # Region pull path: the StagingAgent prefetches completed
         # upstream outputs, and lanes re-pull inputs evicted under soft
-        # tier budgets (worker._gather_inputs fallback).
+        # tier budgets (worker._gather_inputs fallback).  fetch_regions
+        # is the batched flavor: one round-trip per coalesced key batch.
         runtime.fetch_region = self._fetch_region
+        runtime.fetch_regions = self._fetch_regions
         # Keep the directory honest: a region falling off the worker's
         # bottom tier is no longer a replica there (lease placement and
         # the eviction preference below both read this map).
@@ -112,7 +144,19 @@ class Manager:
                     )
                 )
         with self._lock:
-            self._workers[runtime.worker_id] = _WorkerState(runtime=runtime)
+            # A relaunched worker re-registering its id must not orphan
+            # the old incarnation's in-flight leases: recover them first
+            # (chunk processing is idempotent), and drop the dead
+            # incarnation's replicas from the directory.
+            old = self._workers.get(wid)
+            if old is not None:
+                for uid in old.leases:
+                    if uid not in self._stage_done:
+                        self.recovered_leases += 1
+                        self._push_pending_locked(self.cw.stage_instances[uid])
+                self.directory.drop_worker(wid)
+            self._workers[wid] = _WorkerState(runtime=runtime)
+            self._dispatch_all_locked()
 
     def _heartbeat(self, worker_id: int) -> None:
         with self._lock:
@@ -136,16 +180,31 @@ class Manager:
             for uid in st.leases:
                 if uid not in self._stage_done:
                     self.recovered_leases += 1
-                    self._pending.append(self.cw.stage_instances[uid])
+                    self._push_pending_locked(self.cw.stage_instances[uid])
             self.directory.drop_worker(worker_id)
             self._dispatch_all_locked()
+
+    def _push_pending_locked(self, si: StageInstance) -> None:
+        self._pending.append(si)
+        svc = self._journal_svc()
+        if svc is not None:
+            svc.note_pending(si.uid)
 
     # -- execution -----------------------------------------------------------
 
     def run(self, timeout: float = 120.0) -> bool:
         """Lease everything and block until the workflow completes."""
         with self._lock:
-            self._pending.extend(self.cw.ready_stage_instances(self._stage_done))
+            # One membership set up front: at fig14 scale (~37k ready
+            # instances) rebuilding it per stage would be O(P^2).
+            queued = {p.uid for p in self._pending}
+            queued.update(
+                uid for w in self._workers.values() for uid in w.leases
+            )
+            for si in self.cw.ready_stage_instances(self._stage_done):
+                if si.uid not in queued:
+                    queued.add(si.uid)
+                    self._push_pending_locked(si)
             self._dispatch_all_locked()
         self._stop_monitor = False
         self._monitor = threading.Thread(target=self._monitor_loop, daemon=True)
@@ -215,6 +274,13 @@ class Manager:
                     self.directory.record(
                         worker_id, op_key(oi.uid), sizeof(outputs[oi.op.name])
                     )
+            # Journal the completion only AFTER the sink placements: a
+            # crash in between must rehydrate the stage as *incomplete*
+            # (idempotent re-run) rather than as done-with-no-holders,
+            # which would wedge push-mode dependents.
+            svc = self._journal_svc()
+            if svc is not None:
+                svc.note_complete(primary_uid)
             # Unlock downstream stage instances and forward their inputs.
             for dep_uid in primary.dependents:
                 dsi = self.cw.stage_instances[dep_uid]
@@ -223,7 +289,7 @@ class Manager:
                         dep_uid in w.leases for w in self._workers.values()
                     ) or any(p.uid == dep_uid for p in self._pending)
                     if not already:
-                        self._pending.append(dsi)
+                        self._push_pending_locked(dsi)
             self._dispatch_all_locked()
             self._check_done_locked()
 
@@ -293,8 +359,15 @@ class Manager:
                 else:
                     self.placement_remote += 1
         st.leases.add(si.uid)
+        svc = self._journal_svc()
+        if svc is not None:
+            svc.note_lease(si.uid, wid)
         self._forward_upstream_outputs(st.runtime, si)
         st.runtime.submit_stage(si)
+
+    def _journal_svc(self) -> Optional[DirectoryService]:
+        d = self.directory
+        return d if isinstance(d, DirectoryService) else None
 
     def _input_keys(self, si: StageInstance) -> list[RegionKey]:
         """Region keys of a stage instance's cross-stage inputs."""
@@ -307,7 +380,15 @@ class Manager:
         ]
 
     def _fetch_region(self, key: RegionKey) -> Any:
-        """StagingAgent pull: output of a completed upstream op, or None."""
+        """Region pull: output of a completed upstream op, or None.
+
+        The Manager's own output copy is tried first; after a failover
+        rehydration that copy is gone, so the pull falls back to a
+        worker the placement directory records as a holder (region-pull
+        RPC via the worker handle).  The holder RPCs run *outside* the
+        Manager lock: a slow or hung holder must not stall heartbeats
+        and dispatch for every other worker.
+        """
         if not (isinstance(key, tuple) and len(key) == 2 and key[0] == "op"):
             return None
         with self._lock:
@@ -315,9 +396,47 @@ class Manager:
             if oi is None:
                 return None
             outputs = self._stage_outputs.get(oi.stage_instance.uid)
-            if not outputs:
-                return None
-            return outputs.get(oi.op.name)
+            if outputs and oi.op.name in outputs:
+                return outputs.get(oi.op.name)
+            holders = self._holder_runtimes_locked(key)
+        for rt in holders:
+            value = rt.pull_region(key)
+            if value is not None:
+                return value
+        return None
+
+    def _fetch_regions(self, keys: list) -> list:
+        """Batched region pull: one round-trip serves a whole key batch
+        (StagingAgent coalescing / SocketBus ``fetch_regions`` RPC)."""
+        return [self._fetch_region(key) for key in keys]
+
+    def _holder_runtimes_locked(
+        self, key: RegionKey, exclude: Optional[int] = None
+    ) -> list:
+        """Live worker handles the directory names as holders of ``key``."""
+        out = []
+        for wid in self.directory.holders(key):
+            if wid == exclude:
+                continue
+            st = self._workers.get(wid)
+            if st is not None and not st.dead and st.runtime.alive:
+                out.append(st.runtime)
+        return out
+
+    def _pull_from_holder_locked(
+        self, key: RegionKey, exclude: Optional[int] = None
+    ) -> Any:
+        """Synchronous holder pull for the (rare) rehydration push path.
+
+        Runs under the Manager lock — only reached when forwarding to an
+        agent-less worker after a failover; proxies cap the RPC timeout
+        so a hung holder bounds, not wedges, the control plane.
+        """
+        for rt in self._holder_runtimes_locked(key, exclude=exclude):
+            value = rt.pull_region(key)
+            if value is not None:
+                return value
+        return None
 
     def _forward_upstream_outputs(self, rt: WorkerRuntime, si: StageInstance) -> None:
         """Provide cross-stage inputs (sink op outputs of upstream stages).
@@ -327,28 +446,58 @@ class Manager:
         (submit_stage enqueues the requests), overlapping the copy with
         whatever the lanes are executing.  Agent-less workers get the
         classic synchronous push.
+
+        Delivery is one batched ``forward_inputs`` round-trip per lease:
+        the worker marks inputs already staged there (skip-copy; the
+        savings are accounted here) and ingests the pushed values —
+        on a SocketBus that is a single frame instead of a per-
+        dependency mark/provide conversation.
         """
         lazy = getattr(rt, "agent", None) is not None
+        items: list[tuple[int, Any, bool]] = []
+        sizes: dict[int, int] = {}
         for oi in si.op_instances:
             for dep_uid in oi.deps:
                 if dep_uid not in self.cw.op_instances:
                     continue
                 dep_oi = self.cw.op_instances[dep_uid]
-                if dep_oi.stage_instance.uid != si.uid:
-                    up_outputs = self._stage_outputs.get(
-                        dep_oi.stage_instance.uid, {}
+                if dep_oi.stage_instance.uid == si.uid:
+                    continue
+                up_uid = dep_oi.stage_instance.uid
+                up_outputs = self._stage_outputs.get(up_uid, {})
+                if dep_oi.op.name in up_outputs:
+                    value = up_outputs[dep_oi.op.name]
+                elif up_uid in self._stage_done:
+                    # Rehydrated Manager: the output payload died with
+                    # the old coordinator.  Lazy workers pull it through
+                    # fetch_region (which consults directory holders);
+                    # push-mode workers need it refetched right now.
+                    key = op_key(dep_uid)
+                    value = (
+                        None
+                        if lazy
+                        else self._pull_from_holder_locked(
+                            key, exclude=rt.worker_id
+                        )
                     )
-                    if dep_oi.op.name in up_outputs:
-                        value = up_outputs[dep_oi.op.name]
-                        if rt.mark_staged_input(dep_uid):
-                            # Already staged on that worker (it ran the
-                            # upstream, or its agent prefetched it): skip
-                            # the copy and account the savings.
-                            self.staged_bytes_avoided += sizeof(value)
-                            continue
-                        if lazy:
-                            continue  # agent pulls via fetch_region
-                        rt.provide_input(dep_uid, value)
+                else:
+                    continue  # upstream genuinely not finished yet
+                sizes[dep_uid] = (
+                    sizeof(value)
+                    if value is not None
+                    else max(
+                        self.directory.holders(op_key(dep_uid)).values(),
+                        default=0,
+                    )
+                )
+                push = not lazy and value is not None
+                items.append((dep_uid, value if push else None, push))
+        if not items:
+            return
+        for uid in rt.forward_inputs(items):
+            # Already staged on that worker (it ran the upstream, or its
+            # agent prefetched it): the copy was skipped — account it.
+            self.staged_bytes_avoided += sizes.get(uid, 0)
 
     def _issue_backups_locked(self) -> None:
         clones_of = getattr(self, "_clones_of", None)
@@ -431,7 +580,7 @@ class Manager:
                         for uid in st.leases:
                             if uid not in self._stage_done:
                                 self.recovered_leases += 1
-                                self._pending.append(
+                                self._push_pending_locked(
                                     self.cw.stage_instances[uid]
                                 )
                         st.leases.clear()

@@ -168,6 +168,17 @@ class SimConfig:
     staging_locality: bool = True      # directory-driven lease placement
     stage_output_mb: float = 48.0      # inter-stage region per tile (MB)
     interconnect_gb_s: float = 6.0     # node-to-node staging bandwidth
+    # Control-plane cost model (repro.transport): every Manager/Worker
+    # message — lease dispatch, completion notify, staging pull request
+    # — pays one bus round-trip of this latency.  0 (default) keeps the
+    # seed behavior where coordination is structurally free; set it to
+    # a measured SocketBus round-trip to re-read locality/chaining
+    # results with non-zero coordination cost.
+    rpc_latency_us: float = 0.0
+    # Batched staging fetches: a stage's missing inputs are pulled as
+    # one coalesced request (one rpc latency per batch) instead of one
+    # request per key — the transport-level analog of micro-batching.
+    batch_prefetch: bool = True
 
     @property
     def dl(self) -> bool:
@@ -208,6 +219,10 @@ class SimResult:
     # Micro-batched dispatch accounting (cfg.micro_batch > 1).
     batches: int = 0
     batched_ops: int = 0
+    # Control-plane accounting (cfg.rpc_latency_us): messages that
+    # crossed the Manager/Worker bus and the latency they exposed.
+    control_messages: int = 0
+    rpc_wait: float = 0.0
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -279,6 +294,10 @@ class ClusterSim:
         self.staged_bytes_avoided = 0
         self.cross_node_bytes = 0
         self.transfer_wait = 0.0
+        # Control-plane cost model (repro.transport).
+        self.control_messages = 0
+        self.rpc_wait = 0.0
+        self._rpc_s = cfg.rpc_latency_us * 1e-6
         self._stage_bytes = int(cfg.stage_output_mb * 2**20)
         self._interconnect_bps = cfg.interconnect_gb_s * 2**30
         # (node_id, stage uid) -> time its replica finishes landing; a
@@ -439,6 +458,8 @@ class ClusterSim:
             transfer_wait=self.transfer_wait,
             batches=batches,
             batched_ops=batched_ops,
+            control_messages=self.control_messages,
+            rpc_wait=self.rpc_wait,
         )
 
     # -- Manager: demand-driven assignment --------------------------------------
@@ -450,8 +471,12 @@ class ClusterSim:
             si = self._pick_for_node(node)
             node.leased.add(si.uid)
             self.stage_node[si.uid] = node.node_id
+            # A lease is one Manager->Worker message: the dispatch pays
+            # the bus round-trip on top of the protocol latency.
+            self.control_messages += 1
+            self.rpc_wait += self._rpc_s
             self._post(
-                self.now + self.cfg.dispatch_latency,
+                self.now + self.cfg.dispatch_latency + self._rpc_s,
                 lambda si=si, node=node: self._start_stage(node, si),
             )
         self._maybe_backup_tasks()
@@ -514,19 +539,35 @@ class ClusterSim:
         if not self.cfg.staging or not si.deps:
             return 0.0
         ready = self.now
+        local: list[int] = []
+        remote: list[int] = []
         for d in si.deps:
-            key = ("stage", d)
-            n = self._stage_bytes
-            if self.staging_dir.holders(key).get(node.node_id):
-                self.staged_bytes_avoided += n
-                # The replica may still be landing from an earlier copy
-                # (or from local production: ready time 0 = resident).
-                ready = max(
-                    ready, self._region_ready.get((node.node_id, d), 0.0)
-                )
+            if self.staging_dir.holders(("stage", d)).get(node.node_id):
+                local.append(d)
             else:
+                remote.append(d)
+        for d in local:
+            self.staged_bytes_avoided += self._stage_bytes
+            # The replica may still be landing from an earlier copy
+            # (or from local production: ready time 0 = resident).
+            ready = max(
+                ready, self._region_ready.get((node.node_id, d), 0.0)
+            )
+        if remote:
+            # Each pull request is a control-plane round-trip; with
+            # batch_prefetch the missing keys coalesce into ONE request
+            # (one rpc latency per batch — transport-level batching),
+            # otherwise every key pays its own round-trip before its
+            # copy can start.
+            n_msgs = 1 if self.cfg.batch_prefetch else len(remote)
+            self.control_messages += n_msgs
+            self.rpc_wait += n_msgs * self._rpc_s
+            copies_start = self.now + n_msgs * self._rpc_s
+            for d in remote:
+                key = ("stage", d)
+                n = self._stage_bytes
                 self.cross_node_bytes += n
-                start = max(self.now, node.net_free)
+                start = max(copies_start, node.net_free)
                 node.net_free = start + n / self._interconnect_bps
                 ready = max(ready, node.net_free)
                 # The directory learns of the replica now; consumers
@@ -728,6 +769,10 @@ class ClusterSim:
             return
         self.stage_done.add(si.uid)
         node.leased.discard(si.uid)
+        # Completion notification: one Worker->Manager message (its
+        # latency overlaps the next lease's dispatch round-trip, so it
+        # is counted but not serialized onto the critical path).
+        self.control_messages += 1
         if self.cfg.staging:
             # This node now holds the stage's output region (host tier).
             primary_uid = self._clone_of.get(si.uid, si.uid)

@@ -22,6 +22,9 @@ Two device-resident fast paths extend the basic model:
   *deferred*: a chained output only materializes to the host tier when
   a host-side consumer (sibling lane, stage-completion read, Manager
   pull) actually needs the bytes, or when the device LRU spills it.
+  Host lanes get the same dependent-affinity: a CPU-resident chain's
+  intermediates skip the region-store round-trip and are served by
+  reference until stage completion (``host_chain_*`` stats).
 * ``micro_batch=B`` — an idle accelerator lane pops up to ``B`` ready
   instances of the same *batchable* op (``FunctionVariant.batchable``)
   and executes them as one batched call, amortizing per-op dispatch
@@ -30,7 +33,9 @@ Two device-resident fast paths extend the basic model:
 On a single-process deployment (this container) lanes are plain
 threads; on a hybrid cluster the same class drives host cores plus one
 control thread per accelerator — the WCC/Manager protocol is identical
-(``core/manager.py``).
+(``core/manager.py``) and crosses process boundaries through a
+:mod:`repro.transport` ``WorkerClient`` (``submit/forward/pull`` RPCs
+in, ``complete/heartbeat/drop`` notifies out).
 """
 
 from __future__ import annotations
@@ -184,14 +189,19 @@ class WorkerRuntime:
             if staging is not None
             else RegionStore([HostTier()])
         )
-        # Cross-worker pull hook, wired by the Manager when staging is on.
+        # Cross-worker pull hooks, wired by the Manager (direct mode) or
+        # a transport WorkerClient (bus mode).  ``fetch_regions`` is the
+        # batched flavor: ordered keys in, same-length values out, one
+        # round-trip for the lot.
         self.fetch_region: Callable[[Any], Any] | None = None
+        self.fetch_regions: Callable[[list], list] | None = None
         self.agent: StagingAgent | None = None
         if staging is not None and staging.prefetch:
             self.agent = StagingAgent(
                 self.store,
                 worker_id=worker_id,
                 fetch=self._fetch_region,
+                fetch_batch=self._fetch_regions,
                 on_staged=self._input_staged,
                 watermark=staging.watermark,
             )
@@ -209,6 +219,13 @@ class WorkerRuntime:
         self.chain_hits = 0        # inputs served device-resident
         self.chain_deferred = 0    # outputs whose host copy was skipped
         self.chain_writebacks = 0  # lazy downloads that became necessary
+        # Host-lane chaining: a CPU-produced intermediate whose consumers
+        # are all known locally skips the region-store round-trip (lock +
+        # tier accounting + pin/unpin churn) and is served by reference.
+        self._host_chained: dict[int, Any] = {}
+        self.host_chain_hits = 0       # inputs served from the chain dict
+        self.host_chain_deferred = 0   # outputs that skipped the store
+        self.host_chain_writebacks = 0 # store puts that became necessary
         # Last speedup estimate a queue reorder was based on, per
         # variant: reestimate (O(queue)) only runs when the online EMA
         # actually moved an estimate, not on every completion.
@@ -289,15 +306,44 @@ class WorkerRuntime:
             self.store.put(op_key(uid), value)
             self._op_done.add(uid)
 
+    def forward_inputs(
+        self, items: list[tuple[int, Any, bool]]
+    ) -> list[int]:
+        """Batched input delivery: one control-plane round-trip for a
+        whole lease's cross-stage inputs.
+
+        Each item is ``(uid, value, push)``: inputs already staged here
+        are marked available (returned, so the Manager can account the
+        bytes it did not re-send); the rest are injected when ``push``
+        is set, or left for the StagingAgent to pull when not.
+        """
+        staged: list[int] = []
+        for uid, value, push in items:
+            if self.mark_staged_input(uid):
+                staged.append(uid)
+            elif push:
+                self.provide_input(uid, value)
+        return staged
+
     def has_region(self, key: Any) -> bool:
         """True when ``key`` is resident in any tier of this worker
-        (including device-only chained outputs)."""
+        (including device-only / host-chained outputs)."""
         if key in self.store:
             return True
         if isinstance(key, tuple) and len(key) == 2 and key[0] == "op":
             with self._lock:
-                return key[1] in self._device_only
+                return key[1] in self._device_only or key[1] in self._host_chained
         return False
+
+    def pull_region(self, key: Any) -> Any:
+        """Serve a region to a remote peer (Manager failover refetch /
+        directory-routed pull), materializing chained outputs."""
+        with self._lock:
+            value = self.store.get(key)
+            if value is None and isinstance(key, tuple) and len(key) == 2 \
+                    and key[0] == "op":
+                value = self._materialize_locked(key[1])
+            return value
 
     def mark_staged_input(self, uid: int) -> bool:
         """Skip-copy path: if op ``uid``'s output is already resident in
@@ -305,7 +351,11 @@ class WorkerRuntime:
         Manager need not re-send the bytes.  False => caller must
         ``provide_input``."""
         with self._lock:
-            if op_key(uid) not in self.store and uid not in self._device_only:
+            if (
+                op_key(uid) not in self.store
+                and uid not in self._device_only
+                and uid not in self._host_chained
+            ):
                 return False
             if uid not in self._op_done:
                 self._op_done.add(uid)
@@ -315,6 +365,12 @@ class WorkerRuntime:
     def _fetch_region(self, key: Any) -> Any:
         fetch = self.fetch_region
         return fetch(key) if fetch is not None else None
+
+    def _fetch_regions(self, keys: list) -> Optional[list]:
+        """Batched pull used by the StagingAgent; None => unwired, the
+        agent falls back to per-key ``fetch`` round-trips."""
+        fetch = self.fetch_regions
+        return fetch(list(keys)) if fetch is not None else None
 
     def _input_staged(self, key: Any, nbytes: int = 0) -> None:
         """StagingAgent landed/promoted a region: unlock waiting ops."""
@@ -409,6 +465,9 @@ class WorkerRuntime:
             "chain_hits": self.chain_hits,
             "chain_deferred": self.chain_deferred,
             "chain_writebacks": self.chain_writebacks,
+            "host_chain_hits": self.host_chain_hits,
+            "host_chain_deferred": self.host_chain_deferred,
+            "host_chain_writebacks": self.host_chain_writebacks,
             "batches": self.scheduler.stats.batches,
             "batched_ops": self.scheduler.stats.batched_ops,
             "staging": self.store.stats(),
@@ -559,6 +618,13 @@ class WorkerRuntime:
                         self.chain_hits += 1
                     dep_objs.append((uid, lane.memory.get(uid)))
                     continue
+                if self.chaining and uid in self._host_chained:
+                    # Host-resident chained fast path: the producer ran
+                    # on a host lane and deferred the region-store write;
+                    # serve the value by reference, no tier churn.
+                    self.host_chain_hits += 1
+                    dep_objs.append((uid, self._host_chained[uid]))
+                    continue
                 # Host-side read through the region store (promotes from
                 # a slow tier if the StagingAgent has not gotten there
                 # yet), falling back to a sibling lane's device memory.
@@ -608,7 +674,14 @@ class WorkerRuntime:
                 self.store.pin(op_key(e_uid))
 
     def _materialize_locked(self, uid: int) -> Any:
-        """Download a device-only chained output into the host tier."""
+        """Move a chained output (device-only or host-chained) into the
+        host tier so host-side consumers and remote pulls can read it."""
+        if uid in self._host_chained:
+            value = self._host_chained.pop(uid)
+            self.host_chain_writebacks += 1
+            self.store.put(op_key(uid), value)
+            self.store.pin(op_key(uid))
+            return value
         holder = self._device_only.get(uid)
         if holder is None or holder.memory is None or uid not in holder.memory:
             return None
@@ -649,16 +722,25 @@ class WorkerRuntime:
     def _commit(self, lane: _LaneState, oi: OperationInstance, out: Any) -> None:
         with self._lock:
             chained = False
+            host_chained = False
             if lane.memory is not None:
                 self._device_put_locked(lane, oi.uid, out)
                 chained = self._chainable_locked(oi)
                 if not chained and not self.locality:
                     lane.memory.downloads += 1  # basic mode: always download
+            elif self.chaining and self._chainable_locked(oi):
+                # Chained CPU lane: every consumer is known locally, so
+                # the intermediate skips the region-store round-trip
+                # (lock + tier accounting + pin churn) entirely.
+                host_chained = True
             if chained:
                 # Resident fast path: the intermediate never touches the
                 # host tier unless a host-side consumer materializes it.
                 self._device_only[oi.uid] = lane
                 self.chain_deferred += 1
+            elif host_chained:
+                self._host_chained[oi.uid] = out
+                self.host_chain_deferred += 1
             else:
                 self.store.put(op_key(oi.uid), out)  # host write-back (download)
                 # Keep the output resident until its consumers (and the
@@ -709,7 +791,16 @@ class WorkerRuntime:
                 outputs: dict[str, Any] = {}
                 for o in si.op_instances:
                     holder = self._device_only.get(o.uid)
-                    if holder is None:
+                    if holder is None and o.uid in self._host_chained:
+                        if o.op.name in sinks:
+                            # Sinks cross the worker boundary: land them
+                            # in the host tier for directory pulls.
+                            outputs[o.op.name] = self._materialize_locked(o.uid)
+                        else:
+                            # Intermediate: consumers all ran; hand the
+                            # reference over and end tracking.
+                            outputs[o.op.name] = self._host_chained.pop(o.uid)
+                    elif holder is None:
                         outputs[o.op.name] = self.store.get(op_key(o.uid))
                     elif o.op.name in sinks:
                         outputs[o.op.name] = self._materialize_locked(o.uid)

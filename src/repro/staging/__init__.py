@@ -32,6 +32,7 @@ transfers behind computation (§IV-D generalized to all tiers).
 from .agent import StagingAgent
 from .config import StagingConfig
 from .directory import PlacementDirectory
+from .journal import DirectoryService, WriteAheadJournal
 from .policy import PlacementPolicy, select_lease
 from .store import RegionStore, chunk_key, content_key, op_key
 from .tiers import (
@@ -46,6 +47,7 @@ from .tiers import (
 
 __all__ = [
     "DeviceTier",
+    "DirectoryService",
     "DiskTier",
     "GlobalTier",
     "HostTier",
@@ -56,6 +58,7 @@ __all__ = [
     "StagingConfig",
     "Tier",
     "TierStats",
+    "WriteAheadJournal",
     "chunk_key",
     "content_key",
     "op_key",

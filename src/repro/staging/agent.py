@@ -1,4 +1,4 @@
-"""Per-worker staging agent: async promote/demote + input prefetch.
+"""Per-worker staging agent: async promote/demote + batched prefetch.
 
 The paper overlaps data movement with computation (§IV-D, upload /
 process / download pipeline).  The StagingAgent generalizes that from
@@ -8,6 +8,10 @@ one accelerator lane to the whole storage hierarchy of a worker:
   it has *leased but not started*; the agent pulls any that are missing
   from the fetch source (global tier / remote worker) into the host
   tier on a background thread, so lanes find them RAM-resident;
+* **batched pulls** — queued keys are coalesced and fetched through
+  ``fetch_batch`` as one transport round-trip (mirroring micro-batched
+  dispatch: amortize the per-call latency over the batch); per-key
+  ``fetch`` remains the fallback when no batch source is wired;
 * **promote** — a requested key sitting in a slow tier (disk) is moved
   up ahead of use;
 * **demote** — when the host tier crosses its high-water mark, LRU
@@ -19,7 +23,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 from .store import RegionStore
 from .tiers import RegionKey, sizeof
@@ -27,6 +31,9 @@ from .tiers import RegionKey, sizeof
 __all__ = ["StagingAgent"]
 
 FetchFn = Callable[[RegionKey], Any]
+#: Batched pull: ordered keys in, same-length ordered values out
+#: (None per miss); returning None means "no batch source, fall back".
+FetchBatchFn = Callable[[Sequence[RegionKey]], Optional[Sequence[Any]]]
 
 
 class StagingAgent:
@@ -36,6 +43,8 @@ class StagingAgent:
         *,
         worker_id: int = 0,
         fetch: Optional[FetchFn] = None,
+        fetch_batch: Optional[FetchBatchFn] = None,
+        max_batch: int = 16,
         on_staged: Optional[Callable[[RegionKey, int], None]] = None,
         watermark: float = 0.9,
         interval: float = 0.002,
@@ -43,6 +52,8 @@ class StagingAgent:
         self.store = store
         self.worker_id = worker_id
         self.fetch = fetch
+        self.fetch_batch = fetch_batch
+        self.max_batch = max(int(max_batch), 1)
         self.on_staged = on_staged  # e.g. PlacementDirectory.record
         self.watermark = watermark
         # Idle wake-up only matters when some tier can actually demote;
@@ -61,6 +72,9 @@ class StagingAgent:
         self.already_resident = 0
         self.fetch_misses = 0
         self.demote_moves = 0
+        self.fetch_calls = 0        # transport round-trips actually paid
+        self.batched_keys = 0       # keys that rode a coalesced pull
+        self.fetch_errors = 0       # pulls that raised (bus timeout/drop)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -107,40 +121,93 @@ class StagingAgent:
                 continue
             if key is None:
                 return
+            # Coalesce whatever else is already queued into one batch:
+            # one transport round-trip serves every key waiting now.
+            keys = [key]
+            while len(keys) < self.max_batch:
+                try:
+                    nxt = self._requests.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    self._stop = True
+                    break
+                keys.append(nxt)
             try:
-                self._stage(key)
+                self._stage_batch(keys)
+            except Exception:  # noqa: BLE001 - transport hiccup, not fatal
+                # A fetch source over a bus raises on timeouts/restarts
+                # (e.g. Manager failover).  The prefetch thread must
+                # survive: the keys count as misses and the lanes'
+                # synchronous re-pull path remains the backstop.
+                self.fetch_errors += 1
+                self.fetch_misses += len(keys)
             finally:
                 with self._lock:
-                    self._inflight.discard(key)
+                    for k in keys:
+                        self._inflight.discard(k)
 
-    def _stage(self, key: RegionKey) -> bool:
+    def _local_hit(self, key: RegionKey) -> bool:
+        """Serve ``key`` from a local tier if present (promote slow hits)."""
         where = self.store.where(key)
-        if where is not None:
-            if where == self.store.tiers[0].name:
-                self.already_resident += 1
-            else:
-                # Promote from a slow tier ahead of use.
-                self.store.get(key, promote=True)
-                self.prefetched += 1
-            # on_staged fires on *every* success path: a region found in
-            # a lower tier (e.g. the shared global store) is just as
-            # newly-available to the consumer as a fetched one.
-            if self.on_staged is not None:
-                self.on_staged(key, 0)
-            return True
-        if self.fetch is None:
-            self.fetch_misses += 1
+        if where is None:
             return False
-        value = self.fetch(key)
-        if value is None:
-            self.fetch_misses += 1
-            return False
+        if where == self.store.tiers[0].name:
+            self.already_resident += 1
+        else:
+            # Promote from a slow tier ahead of use.
+            self.store.get(key, promote=True)
+            self.prefetched += 1
+        # on_staged fires on *every* success path: a region found in
+        # a lower tier (e.g. the shared global store) is just as
+        # newly-available to the consumer as a fetched one.
+        if self.on_staged is not None:
+            self.on_staged(key, 0)
+        return True
+
+    def _land(self, key: RegionKey, value: Any) -> None:
         nbytes = sizeof(value)
         self.store.put(key, value, tier=self.store.tiers[0].name, nbytes=nbytes)
         self.prefetched += 1
         self.prefetched_bytes += nbytes
         if self.on_staged is not None:
             self.on_staged(key, nbytes)
+
+    def _stage_batch(self, keys: list[RegionKey]) -> None:
+        missing = [k for k in keys if not self._local_hit(k)]
+        if not missing:
+            return
+        values = None
+        if self.fetch_batch is not None:
+            values = self.fetch_batch(missing)
+            if values is not None:
+                self.fetch_calls += 1
+                self.batched_keys += len(missing)
+        if values is not None:
+            for k, v in zip(missing, values):
+                if v is None:
+                    self.fetch_misses += 1
+                else:
+                    self._land(k, v)
+            return
+        for k in missing:  # no batch source wired: per-key round-trips
+            self._fetch_one(k)
+
+    def _stage(self, key: RegionKey) -> bool:
+        if self._local_hit(key):
+            return True
+        return self._fetch_one(key)
+
+    def _fetch_one(self, key: RegionKey) -> bool:
+        if self.fetch is None:
+            self.fetch_misses += 1
+            return False
+        self.fetch_calls += 1
+        value = self.fetch(key)
+        if value is None:
+            self.fetch_misses += 1
+            return False
+        self._land(key, value)
         return True
 
     def stats(self) -> dict[str, int]:
@@ -150,4 +217,7 @@ class StagingAgent:
             "already_resident": self.already_resident,
             "fetch_misses": self.fetch_misses,
             "demote_moves": self.demote_moves,
+            "fetch_calls": self.fetch_calls,
+            "batched_keys": self.batched_keys,
+            "fetch_errors": self.fetch_errors,
         }

@@ -1,0 +1,295 @@
+"""Failover-surviving placement directory: write-ahead journal + snapshot.
+
+The :class:`~repro.staging.directory.PlacementDirectory` is the
+Manager's only copy of "which worker holds which region" — lose the
+Manager and the whole cluster's locality metadata (and the record of
+which leases were outstanding) dies with it.  :class:`DirectoryService`
+wraps the directory so every mutation — placement records, evictions,
+worker drops, lease grants, stage completions — is appended to a
+:class:`WriteAheadJournal` *before* it is applied; a restarted Manager
+replays the journal (newest snapshot + tail) and comes back with
+holder maps and the pending-lease queue intact, then refetches any
+region payloads it needs from the workers the directory says hold
+them (the Manager journals metadata only, never payload bytes).
+
+Journal format: one JSON object per line, ``{"e": <event>, ...}``.
+A snapshot (written every ``snapshot_every`` appends) serializes the
+full directory + lease state into ``<path>.snap`` and truncates the
+journal, bounding replay time — the classic WAL/checkpoint pair.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Iterable, Optional
+
+from .directory import PlacementDirectory
+from .tiers import RegionKey
+
+__all__ = ["WriteAheadJournal", "DirectoryService", "decode_key"]
+
+
+def _jsonable_key(key: RegionKey) -> Any:
+    if isinstance(key, tuple):
+        return list(key)
+    return key
+
+
+def decode_key(key: Any) -> RegionKey:
+    """Region keys are tuples in memory but lists on JSON/wire formats;
+    normalize so directory lookups match (shared with repro.transport)."""
+    if isinstance(key, list):
+        return tuple(key)
+    return key
+
+
+class WriteAheadJournal:
+    """Append-only JSON-lines journal with a sidecar snapshot file."""
+
+    def __init__(self, path: str, *, fsync: bool = False):
+        self.path = path
+        self.snap_path = path + ".snap"
+        directory = os.path.dirname(os.path.abspath(path))
+        os.makedirs(directory, exist_ok=True)
+        self.appends = 0
+        self.fsync = fsync  # flush always; fsync only when durability > rate
+        self._lock = threading.Lock()
+        self._repair_torn_tail(path)
+        self._fh = open(path, "a", encoding="utf-8")  # noqa: SIM115
+
+    @staticmethod
+    def _repair_torn_tail(path: str) -> None:
+        """Truncate a half-written final line left by a crash.
+
+        Appending onto a torn fragment would corrupt that line AND make
+        ``load`` (which stops at the first bad line) silently discard
+        every valid entry written after the restart — so the fragment
+        is cut back to the last newline before the file is reopened.
+        """
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            return
+        if size == 0:
+            return
+        with open(path, "rb") as f:
+            f.seek(-min(size, 1 << 20), os.SEEK_END)
+            tail = f.read()
+        if tail.endswith(b"\n"):
+            return
+        keep = size - (len(tail) - (tail.rfind(b"\n") + 1))
+        with open(path, "rb+") as f:
+            f.truncate(keep)
+
+    def append(self, entry: dict[str, Any]) -> None:
+        with self._lock:
+            self._fh.write(json.dumps(entry, separators=(",", ":")) + "\n")
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+            self.appends += 1
+
+    def snapshot(self, state: dict[str, Any]) -> None:
+        """Checkpoint: persist ``state``, then truncate the journal."""
+        with self._lock:
+            tmp = self.snap_path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(state, f, separators=(",", ":"))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.snap_path)
+            self._fh.close()
+            self._fh = open(self.path, "w", encoding="utf-8")  # noqa: SIM115
+
+    def close(self) -> None:
+        with self._lock:
+            self._fh.close()
+
+    @classmethod
+    def load(cls, path: str) -> tuple[Optional[dict], list[dict]]:
+        """Newest snapshot (or None) plus the journal tail after it."""
+        snapshot = None
+        snap_path = path + ".snap"
+        if os.path.exists(snap_path):
+            with open(snap_path, encoding="utf-8") as f:
+                snapshot = json.load(f)
+        entries: list[dict] = []
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        entries.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        break  # torn tail write: everything before it is good
+        return snapshot, entries
+
+
+class DirectoryService:
+    """A PlacementDirectory whose state survives the Manager.
+
+    Same query surface as the directory (delegated); mutations are
+    journaled write-ahead.  Additionally journals the Manager's lease
+    lifecycle (``pending`` / ``lease`` / ``complete``) so a rehydrated
+    Manager knows which stage instances were done and which were in
+    flight when the coordinator died.
+
+    Opening a path that already has a journal/snapshot *replays* it:
+    ``DirectoryService(path)`` after a crash is the failover story.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        directory: Optional[PlacementDirectory] = None,
+        *,
+        snapshot_every: int = 512,
+    ):
+        self.directory = directory or PlacementDirectory()
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self.completed: set[int] = set()
+        self.leases: dict[int, int] = {}     # stage uid -> worker id
+        self.pending: list[int] = []         # noted, never completed
+        self.replayed = 0
+        snapshot, entries = WriteAheadJournal.load(path)
+        if snapshot is not None:
+            self._apply_snapshot(snapshot)
+        for entry in entries:
+            self._apply(entry)
+            self.replayed += 1
+        self.journal = WriteAheadJournal(path)
+        self._mutations = 0
+
+    # -- replay ------------------------------------------------------------
+
+    def _apply_snapshot(self, snap: dict) -> None:
+        for key_json, holders in snap.get("placement", []):
+            key = decode_key(key_json)
+            for wid, nbytes in holders.items():
+                self.directory.record(int(wid), key, int(nbytes))
+        self.completed = set(snap.get("completed", []))
+        self.leases = {int(k): int(v) for k, v in snap.get("leases", {}).items()}
+        self.pending = list(snap.get("pending", []))
+
+    def _apply(self, entry: dict) -> None:
+        e = entry.get("e")
+        if e == "rec":
+            self.directory.record(
+                int(entry["w"]), decode_key(entry["k"]), int(entry["n"])
+            )
+        elif e == "evi":
+            self.directory.evict(int(entry["w"]), decode_key(entry["k"]))
+        elif e == "drop":
+            self.directory.drop_worker(int(entry["w"]))
+            self.leases = {
+                uid: wid for uid, wid in self.leases.items()
+                if wid != int(entry["w"])
+            }
+        elif e == "pend":
+            uid = int(entry["u"])
+            if uid not in self.pending:
+                self.pending.append(uid)
+        elif e == "lease":
+            self.leases[int(entry["u"])] = int(entry["w"])
+        elif e == "done":
+            uid = int(entry["u"])
+            self.completed.add(uid)
+            self.leases.pop(uid, None)
+            if uid in self.pending:
+                self.pending.remove(uid)
+
+    # -- journaled mutations ----------------------------------------------
+
+    def _log(self, entry: dict) -> None:
+        """Write-ahead append.  The periodic checkpoint runs from
+        ``_applied`` — after the in-memory state reflects the entry —
+        so a snapshot can never miss the mutation that triggered it."""
+        self.journal.append(entry)
+
+    def _applied(self) -> None:
+        self._mutations += 1
+        if self._mutations % self.snapshot_every == 0:
+            self.checkpoint()
+
+    def record(self, worker_id: int, key: RegionKey, nbytes: int) -> None:
+        self._log({"e": "rec", "w": worker_id, "k": _jsonable_key(key), "n": nbytes})
+        self.directory.record(worker_id, key, nbytes)
+        self._applied()
+
+    def evict(self, worker_id: int, key: RegionKey) -> None:
+        self._log({"e": "evi", "w": worker_id, "k": _jsonable_key(key)})
+        self.directory.evict(worker_id, key)
+        self._applied()
+
+    def drop_worker(self, worker_id: int) -> None:
+        self._log({"e": "drop", "w": worker_id})
+        self.directory.drop_worker(worker_id)
+        self.leases = {
+            uid: wid for uid, wid in self.leases.items() if wid != worker_id
+        }
+        self._applied()
+
+    # -- lease lifecycle (Manager hooks) -----------------------------------
+
+    def note_pending(self, uid: int) -> None:
+        if uid not in self.pending:
+            self._log({"e": "pend", "u": uid})
+            self.pending.append(uid)
+            self._applied()
+
+    def note_lease(self, uid: int, worker_id: int) -> None:
+        self._log({"e": "lease", "u": uid, "w": worker_id})
+        self.leases[uid] = worker_id
+        self._applied()
+
+    def note_complete(self, uid: int) -> None:
+        self._log({"e": "done", "u": uid})
+        self.completed.add(uid)
+        self.leases.pop(uid, None)
+        if uid in self.pending:
+            self.pending.remove(uid)
+        self._applied()
+
+    def outstanding(self) -> list[int]:
+        """Stage uids that were pending or leased but never completed —
+        the work a rehydrated Manager must put back on the queue."""
+        out = [u for u in self.pending if u not in self.completed]
+        out += [
+            u for u in self.leases
+            if u not in self.completed and u not in out
+        ]
+        return out
+
+    # -- checkpoint --------------------------------------------------------
+
+    def checkpoint(self) -> None:
+        state = {
+            "placement": [
+                [_jsonable_key(k), {str(w): n for w, n in holders.items()}]
+                for k, holders in self._placement_items()
+            ],
+            "completed": sorted(self.completed),
+            "leases": {str(u): w for u, w in self.leases.items()},
+            "pending": list(self.pending),
+        }
+        self.journal.snapshot(state)
+
+    def _placement_items(self) -> Iterable[tuple[RegionKey, dict[int, int]]]:
+        d = self.directory
+        with d._lock:  # noqa: SLF001 - consistent snapshot of the map
+            return [(k, dict(h)) for k, h in d._placement.items()]  # noqa: SLF001
+
+    def close(self) -> None:
+        self.journal.close()
+
+    # -- query delegation --------------------------------------------------
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self.directory, name)
+
+    def __len__(self) -> int:
+        return len(self.directory)

@@ -1,0 +1,70 @@
+"""Pluggable cluster transport: the control plane as a message bus.
+
+Module map
+----------
+
+* :mod:`repro.transport.bus`       — ``MessageBus``/``Peer`` contract:
+  typed request/reply (``call``) + one-way ``notify``, per-peer
+  ordered delivery, handler tables.
+* :mod:`repro.transport.codec`     — wire codec registry: numpy/jax
+  arrays as raw buffers, msgpack frames, pickle fallback for graphs.
+* :mod:`repro.transport.inproc`    — ``InprocBus``: same-process
+  endpoints, direct invocation, zero-copy (the default deployment).
+* :mod:`repro.transport.socketbus` — ``SocketBus``: multiprocess peers
+  over TCP, length-prefixed frames, batched per-peer coalescing.
+* :mod:`repro.transport.endpoint`  — ``ManagerEndpoint`` (serves
+  lease / complete / heartbeat / region-pull RPCs), ``WorkerClient``
+  (bridges a WorkerRuntime onto the bus), ``WorkerProxy`` (the
+  Manager-side face of a remote worker), ``spawn_worker``/``worker_main``
+  (real OS-process workers).
+* :mod:`repro.transport.demo`      — module-level demo workload shared
+  by multiprocess tests and benchmarks.
+
+How it composes with the paper's runtime: §III-B's Manager/Worker
+protocol is MPI messages; here the same protocol is expressed once
+against the bus contract and deployed per-backend — in-process calls
+where the seed ran, real sockets across OS processes — so control-
+plane costs (round-trips, batching amortization) become measurable
+(``benchmarks/transport.py``) instead of structurally free.
+"""
+
+from .bus import (
+    BusClosedError,
+    BusError,
+    BusTimeoutError,
+    MessageBus,
+    Peer,
+    RemoteError,
+)
+from .codec import Codec, WireCodec, default_codec
+from .endpoint import (
+    ManagerEndpoint,
+    WorkerClient,
+    WorkerProxy,
+    WorkerSpec,
+    spawn_worker,
+    worker_main,
+)
+from .inproc import InprocBus
+from .socketbus import SocketBus, SocketPeer
+
+__all__ = [
+    "BusClosedError",
+    "BusError",
+    "BusTimeoutError",
+    "Codec",
+    "InprocBus",
+    "ManagerEndpoint",
+    "MessageBus",
+    "Peer",
+    "RemoteError",
+    "SocketBus",
+    "SocketPeer",
+    "WireCodec",
+    "WorkerClient",
+    "WorkerProxy",
+    "WorkerSpec",
+    "default_codec",
+    "spawn_worker",
+    "worker_main",
+]

@@ -1,0 +1,81 @@
+"""Importable demo workload for multiprocess transport runs.
+
+Spawned worker processes rebuild their VariantRegistry from a
+``"module:factory"`` path (locals don't survive ``spawn``), so the
+transport tests and benchmarks share this module-level two-stage
+pipeline: ``produce`` emits a deterministic tile-sized array,
+``consume`` reduces it.  Output values depend only on the chunk id,
+which is what lets a socket-bus run be compared bit-for-bit against an
+inproc run.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.variants import VariantRegistry
+from ..core.workflow import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    Operation,
+    Stage,
+)
+
+__all__ = [
+    "demo_registry",
+    "demo_slow_registry",
+    "demo_workflow",
+    "demo_concrete",
+    "expected_consume",
+]
+
+_SIDE = 64
+
+
+def _produce(ctx) -> np.ndarray:
+    return np.full((_SIDE, _SIDE), float(ctx.chunk.chunk_id + 1), np.float32)
+
+
+def _produce_slow(ctx) -> np.ndarray:
+    import time
+
+    time.sleep(0.2)  # keep leases outstanding long enough to crash into
+    return _produce(ctx)
+
+
+def _consume(ctx) -> float:
+    return float(np.asarray(ctx.sole_input()).sum())
+
+
+def expected_consume(chunk_id: int) -> float:
+    return float(chunk_id + 1) * _SIDE * _SIDE
+
+
+def demo_registry() -> VariantRegistry:
+    reg = VariantRegistry()
+    reg.register("produce", "cpu", _produce)
+    reg.register("consume", "cpu", _consume)
+    return reg
+
+
+def demo_slow_registry() -> VariantRegistry:
+    """Same pipeline, ~200ms per produce: fault-injection runs need
+    leases still in flight when the worker process is killed."""
+    reg = VariantRegistry()
+    reg.register("produce", "cpu", _produce_slow)
+    reg.register("consume", "cpu", _consume)
+    return reg
+
+
+def demo_workflow() -> AbstractWorkflow:
+    return AbstractWorkflow.chain(
+        "transport-demo",
+        [Stage.single(Operation("produce")), Stage.single(Operation("consume"))],
+    )
+
+
+def demo_concrete(n_chunks: int) -> ConcreteWorkflow:
+    return ConcreteWorkflow.replicate(
+        demo_workflow(), [DataChunk(i) for i in range(n_chunks)]
+    )

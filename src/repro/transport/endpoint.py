@@ -1,0 +1,427 @@
+"""Manager/Worker control-plane endpoints over a MessageBus.
+
+The Manager no longer has to be handed :class:`WorkerRuntime` objects
+directly: a :class:`ManagerEndpoint` serves its RPCs
+(register / lease / complete / heartbeat / region-pull) on any
+:class:`~repro.transport.bus.MessageBus`, and a
+:class:`WorkerClient` bridges a WorkerRuntime — in this process or in
+another OS process — onto the same bus.  On the Manager's side each
+connected worker appears as a :class:`WorkerProxy` that quacks like
+the WorkerRuntime subset the Manager uses, so ``core/manager.py``
+needs no backend-specific code.
+
+RPC surface
+-----------
+
+worker -> manager: ``register_worker``, ``heartbeat`` (notify),
+``stage_complete`` (notify), ``fetch_region`` / ``fetch_regions``
+(region pull, single / batched), ``region_drop`` (notify — keeps the
+placement directory honest), ``deregister_worker``.
+
+manager -> worker: ``submit_stage`` (notify), ``cancel_stage``
+(notify), ``provide_input`` (notify), ``forward_inputs`` (request —
+one batched round-trip replaces a per-dependency mark/provide chat),
+``pull_region`` (request — failover refetch), ``stop``.
+
+For multiprocess deployments :func:`spawn_worker` launches
+:func:`worker_main` in a fresh OS process (spawn context, so jax/BLAS
+thread state is never forked mid-flight) from a picklable
+:class:`WorkerSpec` naming a module-level registry factory.
+"""
+
+from __future__ import annotations
+
+import importlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .bus import BusClosedError, BusError, BusTimeoutError, MessageBus, Peer
+from ..staging.journal import decode_key as _as_key
+
+__all__ = [
+    "ManagerEndpoint",
+    "WorkerProxy",
+    "WorkerClient",
+    "WorkerSpec",
+    "spawn_worker",
+    "worker_main",
+]
+
+
+class _ProxyStore:
+    """Minimal stand-in for a remote worker's RegionStore.
+
+    The Manager only touches ``on_drop`` (wired to the directory) and
+    ``tier("host")`` (replication-aware eviction — served remotely by
+    the worker's own store, so the proxy declines).
+    """
+
+    def __init__(self) -> None:
+        self.on_drop: Optional[Callable[[Any], None]] = None
+
+    def tier(self, name: str):
+        raise KeyError(name)
+
+    def stats(self) -> dict:
+        return {}
+
+
+class WorkerProxy:
+    """The Manager-side face of a bus-connected worker."""
+
+    def __init__(self, worker_id: int, peer: Peer, *, has_agent: bool) -> None:
+        self.worker_id = worker_id
+        self.peer = peer
+        # Manager checks ``getattr(rt, "agent", None) is not None`` to
+        # pick push vs agent-pull input forwarding.
+        self.agent = True if has_agent else None
+        self.store = _ProxyStore()
+        # Assigned by Manager.register_worker; the endpoint routes
+        # incoming notifies through these.
+        self.on_stage_complete: Optional[Callable] = None
+        self.on_heartbeat: Optional[Callable] = None
+        self.fetch_region: Optional[Callable] = None   # unused remotely
+        self.fetch_regions: Optional[Callable] = None  # (worker pulls via bus)
+        self._dead = False
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead and self.peer.alive
+
+    def mark_dead(self) -> None:
+        self._dead = True
+
+    # -- WorkerRuntime protocol (Manager-facing subset) --------------------
+
+    def submit_stage(self, si) -> None:
+        self._send("submit_stage", si)
+
+    def cancel_stage(self, si_uid: int) -> None:
+        self._send("cancel_stage", si_uid)
+
+    def provide_input(self, uid: int, value: Any) -> None:
+        self._send("provide_input", (uid, value))
+
+    def mark_staged_input(self, uid: int) -> bool:
+        staged = self.forward_inputs([(uid, None, False)])
+        return uid in staged
+
+    def forward_inputs(self, items) -> set[int]:
+        """One batched round-trip: mark already-staged inputs, push the
+        rest.  Returns the uids that were already staged remotely."""
+        try:
+            return set(self.peer.call("forward_inputs", tuple(items)))
+        except BusError:
+            self._dead = True
+            return set()
+
+    def pull_region(self, key: Any) -> Any:
+        try:
+            # Short timeout: a region pull may run on the Manager's
+            # dispatch path, so a hung holder must fail fast.
+            return self.peer.call("pull_region", key, timeout=10.0)
+        except BusTimeoutError:
+            return None  # slow, not dead: the heartbeat monitor decides
+        except BusError:
+            self._dead = True
+            return None
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        try:
+            self.peer.call("stop", timeout=timeout)
+        except BusError:
+            pass
+        self.peer.close()
+
+    def _send(self, method: str, payload: Any) -> None:
+        try:
+            self.peer.notify(method, payload)
+        except BusError:
+            self._dead = True
+
+
+class ManagerEndpoint:
+    """Serves a Manager's control plane on a MessageBus."""
+
+    def __init__(self, manager, bus: MessageBus) -> None:
+        self.manager = manager
+        self.bus = bus
+        self.proxies: dict[int, WorkerProxy] = {}
+        self._peer_worker: dict[Peer, int] = {}
+        self._lock = threading.Lock()
+        self._registered = threading.Condition(self._lock)
+        self.address = bus.serve(
+            {
+                "register_worker": self._h_register,
+                "deregister_worker": self._h_deregister,
+                "heartbeat": self._h_heartbeat,
+                "stage_complete": self._h_stage_complete,
+                "fetch_region": self._h_fetch_region,
+                "fetch_regions": self._h_fetch_regions,
+                "region_drop": self._h_region_drop,
+            },
+            on_disconnect=self._on_disconnect,
+        )
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def wait_workers(self, n: int, timeout: float = 60.0) -> bool:
+        """Block until ``n`` workers registered (process startup barrier)."""
+        deadline = time.monotonic() + timeout
+        with self._registered:
+            while len(self.proxies) < n:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._registered.wait(timeout=remaining)
+        return True
+
+    def shutdown_workers(self) -> None:
+        with self._lock:
+            proxies = list(self.proxies.values())
+        for proxy in proxies:
+            proxy.shutdown()
+
+    def close(self) -> None:
+        self.shutdown_workers()
+        self.bus.close()
+
+    # -- handlers (worker -> manager) --------------------------------------
+
+    def _h_register(self, peer: Peer, payload: Any):
+        wid = int(payload["worker_id"])
+        proxy = WorkerProxy(wid, peer, has_agent=bool(payload.get("has_agent")))
+        with self._registered:
+            # A relaunched worker reuses its id: forget the dead peer's
+            # mapping so its (possibly lagging) disconnect can never be
+            # misattributed to this fresh registration.
+            for old_peer, old_wid in list(self._peer_worker.items()):
+                if old_wid == wid and old_peer is not peer:
+                    del self._peer_worker[old_peer]
+            self.proxies[wid] = proxy
+            self._peer_worker[peer] = wid
+            self._registered.notify_all()
+        self.manager.register_worker(proxy)
+        return {"ok": True, "window": self.manager.cfg.window}
+
+    def _h_deregister(self, peer: Peer, payload: Any):
+        wid = int(payload)
+        with self._lock:
+            self.proxies.pop(wid, None)
+        self.manager.deregister_worker(wid)
+        return True
+
+    def _h_heartbeat(self, peer: Peer, payload: Any) -> None:
+        proxy = self._proxy_of(peer)
+        if proxy is not None and proxy.on_heartbeat is not None:
+            proxy.on_heartbeat(proxy.worker_id)
+
+    def _h_stage_complete(self, peer: Peer, payload: Any) -> None:
+        proxy = self._proxy_of(peer)
+        if proxy is None or proxy.on_stage_complete is None:
+            return
+        uid, outputs = int(payload[0]), dict(payload[1])
+        si = self.manager.cw.stage_instances.get(uid)
+        if si is not None:
+            proxy.on_stage_complete(si, outputs)
+
+    def _h_fetch_region(self, peer: Peer, payload: Any):
+        return self.manager._fetch_region(_as_key(payload))  # noqa: SLF001
+
+    def _h_fetch_regions(self, peer: Peer, payload: Any):
+        keys = [_as_key(k) for k in payload]
+        return tuple(self.manager._fetch_regions(keys))  # noqa: SLF001
+
+    def _h_region_drop(self, peer: Peer, payload: Any) -> None:
+        proxy = self._proxy_of(peer)
+        if proxy is not None and proxy.store.on_drop is not None:
+            proxy.store.on_drop(_as_key(payload))
+
+    def _proxy_of(self, peer: Peer) -> Optional[WorkerProxy]:
+        with self._lock:
+            wid = self._peer_worker.get(peer)
+            return self.proxies.get(wid) if wid is not None else None
+
+    def _on_disconnect(self, peer: Peer) -> None:
+        """Connection drop = the worker process died: the heartbeat
+        monitor reaps it exactly like a thread-worker crash."""
+        with self._lock:
+            wid = self._peer_worker.pop(peer, None)
+            proxy = self.proxies.get(wid) if wid is not None else None
+        # Guard against a stale drop outliving a re-registration: only
+        # the proxy bound to THIS connection may be declared dead.
+        if proxy is not None and proxy.peer is peer:
+            proxy.mark_dead()
+
+
+class WorkerClient:
+    """Bridges a local WorkerRuntime onto a Manager's bus endpoint."""
+
+    def __init__(self, runtime, bus: MessageBus, address: str) -> None:
+        self.runtime = runtime
+        self.bus = bus
+        self._stop = threading.Event()
+        self.peer = bus.connect(
+            address,
+            {
+                "submit_stage": self._h_submit,
+                "cancel_stage": self._h_cancel,
+                "provide_input": self._h_provide,
+                "forward_inputs": self._h_forward,
+                "pull_region": self._h_pull,
+                "stop": self._h_stop,
+            },
+        )
+        # Outbound control plane: runtime hooks -> bus messages.
+        runtime.on_stage_complete = self._stage_complete
+        runtime.on_heartbeat = lambda wid: self._notify("heartbeat", wid)
+        runtime.fetch_region = self._fetch_region
+        runtime.fetch_regions = self._fetch_regions
+        runtime.store.on_drop = lambda key: self._notify("region_drop", key)
+        reply = self.peer.call(
+            "register_worker",
+            {
+                "worker_id": runtime.worker_id,
+                "has_agent": runtime.agent is not None,
+            },
+        )
+        self.window = int(reply.get("window", 0)) if reply else 0
+
+    # -- runtime -> manager ------------------------------------------------
+
+    def _stage_complete(self, si, outputs: dict[str, Any]) -> None:
+        self._notify("stage_complete", (si.uid, outputs))
+
+    def _fetch_region(self, key):
+        # Pull failures (Manager restarting, bus timeout) degrade to a
+        # miss: the caller treats None as "not available yet" and the
+        # Manager re-feeds or the agent retries on the next lease.
+        try:
+            return self.peer.call("fetch_region", key)
+        except BusError:
+            return None
+
+    def _fetch_regions(self, keys):
+        try:
+            values = self.peer.call("fetch_regions", tuple(keys))
+        except BusError:
+            return [None for _ in keys]
+        return list(values)
+
+    def _notify(self, method: str, payload: Any) -> None:
+        try:
+            self.peer.notify(method, payload)
+        except BusClosedError:
+            pass  # manager gone; the runtime keeps draining locally
+
+    # -- manager -> runtime ------------------------------------------------
+
+    def _h_submit(self, peer: Peer, payload: Any) -> None:
+        self.runtime.submit_stage(payload)
+
+    def _h_cancel(self, peer: Peer, payload: Any) -> None:
+        self.runtime.cancel_stage(int(payload))
+
+    def _h_provide(self, peer: Peer, payload: Any) -> None:
+        uid, value = payload
+        self.runtime.provide_input(int(uid), value)
+
+    def _h_forward(self, peer: Peer, payload: Any):
+        items = [(int(uid), value, bool(push)) for uid, value, push in payload]
+        return tuple(self.runtime.forward_inputs(items))
+
+    def _h_pull(self, peer: Peer, payload: Any):
+        return self.runtime.pull_region(_as_key(payload))
+
+    def _h_stop(self, peer: Peer, payload: Any) -> bool:
+        self._stop.set()
+        return True
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the manager sends ``stop`` (worker-process main)."""
+        return self._stop.wait(timeout=timeout)
+
+    def close(self) -> None:
+        self._stop.set()
+        self.peer.close()
+
+
+# --------------------------------------------------------------------------
+# Multiprocess workers
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkerSpec:
+    """Picklable recipe for building a WorkerRuntime in a child process.
+
+    ``registry`` is a ``"module:function"`` path to a zero-arg factory
+    returning a VariantRegistry — a callable reference survives spawn
+    only if importable by name.
+    """
+
+    worker_id: int
+    registry: str                      # "package.module:factory"
+    lanes: tuple[tuple[str, int], ...] = (("cpu", 0),)
+    policy: str = "fcfs"
+    chaining: bool = False
+    micro_batch: int = 1
+    staging: bool = True               # build a StagingConfig (prefetch agent)
+    host_budget_bytes: Optional[int] = None
+    extra: dict[str, Any] = field(default_factory=dict)
+
+
+def _resolve_factory(path: str) -> Callable[[], Any]:
+    module, _, attr = path.partition(":")
+    return getattr(importlib.import_module(module), attr)
+
+
+def worker_main(address: str, spec: WorkerSpec) -> None:
+    """Entry point of a spawned worker process: build, bridge, serve."""
+    from ..core.worker import LaneSpec, WorkerRuntime
+    from ..staging import StagingConfig
+
+    registry = _resolve_factory(spec.registry)()
+    staging = (
+        StagingConfig(host_budget_bytes=spec.host_budget_bytes)
+        if spec.staging
+        else None
+    )
+    runtime = WorkerRuntime(
+        spec.worker_id,
+        lanes=tuple(LaneSpec(kind, idx) for kind, idx in spec.lanes),
+        policy=spec.policy,
+        chaining=spec.chaining,
+        micro_batch=spec.micro_batch,
+        staging=staging,
+        variant_registry=registry,
+        **spec.extra,
+    )
+    runtime.start()
+    from .socketbus import SocketBus
+
+    bus = SocketBus()
+    client = WorkerClient(runtime, bus, address)
+    try:
+        client.wait()
+    finally:
+        runtime.stop()
+        client.close()
+        bus.close()
+
+
+def spawn_worker(address: str, spec: WorkerSpec):
+    """Launch ``worker_main`` in a fresh OS process (spawn context)."""
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    proc = ctx.Process(
+        target=worker_main,
+        args=(address, spec),
+        daemon=True,
+        name=f"repro-worker-{spec.worker_id}",
+    )
+    proc.start()
+    return proc

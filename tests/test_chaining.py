@@ -450,3 +450,115 @@ def test_bench_pr2_meets_acceptance(tmp_path):
     speed = [v for n, v, _ in rows if n == "pr2/sim/speedup_on_vs_off"][0]
     assert speed >= 1.3
     assert (tmp_path / "BENCH_PR2.json").exists()
+
+
+# -- worker runtime: chained CPU lanes ----------------------------------------
+
+
+def test_host_lane_chaining_skips_region_store_roundtrip():
+    """Satellite (ROADMAP): host lanes get the same dependent-affinity
+    as accelerator lanes — a CPU-resident chain's intermediates never
+    round-trip through the region store."""
+    reg = VariantRegistry()
+    cw = _chain_setup(reg, n_ops=4, n_chunks=6)
+    rt = WorkerRuntime(
+        0, lanes=(LaneSpec("cpu", 0),), policy="fcfs", chaining=True,
+        variant_registry=reg,
+    )
+    rt.start()
+    try:
+        for si in cw.stage_instances.values():
+            rt.submit_stage(si)
+        assert rt.drain(timeout=60.0)
+        assert not rt.errors
+        for si in cw.stage_instances.values():
+            last = [o for o in si.op_instances if o.op.name == "s3"][0]
+            out = rt.output_of(last.uid)
+            assert float(np.asarray(out)[0, 0]) == si.chunk.chunk_id + 3.0
+        stats = rt.stats()
+        # 3 of 4 ops per chunk have local dependents => deferred, and
+        # every dependent read was served from the chain dict.
+        assert stats["host_chain_deferred"] == 3 * 6
+        assert stats["host_chain_hits"] == 3 * 6
+        # The store only ever saw the sink outputs: no intermediate put.
+        host_puts = rt.store.tier("host").stats.puts
+        assert host_puts == 6  # one sink per chunk
+    finally:
+        rt.stop()
+
+
+def test_host_lane_chaining_matches_unchained_results():
+    """Chained and unchained host-lane runs produce identical sinks."""
+    outs = {}
+    for chaining in (False, True):
+        reg = VariantRegistry()
+        cw = _chain_setup(reg, n_ops=5, n_chunks=5)
+        rt = WorkerRuntime(
+            0, lanes=(LaneSpec("cpu", 0),), policy="fcfs",
+            chaining=chaining, variant_registry=reg,
+        )
+        rt.start()
+        try:
+            for si in cw.stage_instances.values():
+                rt.submit_stage(si)
+            assert rt.drain(timeout=60.0)
+            assert not rt.errors
+            outs[chaining] = sorted(
+                float(np.asarray(rt.output_of(o.uid))[0, 0])
+                for si in cw.stage_instances.values()
+                for o in si.op_instances
+                if o.op.name == "s4"
+            )
+        finally:
+            rt.stop()
+    assert outs[True] == outs[False]
+
+
+def test_host_chained_sink_materializes_for_remote_pull():
+    """A host-chained stage sink (its consumer stage is already leased
+    here) must materialize to the host tier at stage completion so a
+    Manager pull (pull_region) can serve it to another worker."""
+    from repro.staging import op_key as _ok
+
+    reg = VariantRegistry()
+
+    def step(ctx):
+        if not ctx.inputs:
+            return np.full((16, 16), float(ctx.chunk.chunk_id), np.float32)
+        return next(iter(ctx.inputs.values())) + 1.0
+
+    for name in ("a0", "a1", "b0"):
+        reg.register(name, "cpu", step)
+    wf = AbstractWorkflow.chain(
+        "two-stage",
+        [
+            Stage.chain("A", [Operation("a0"), Operation("a1")]),
+            Stage.single(Operation("b0")),
+        ],
+    )
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(i) for i in range(3)])
+    done = []
+    rt = WorkerRuntime(
+        0, lanes=(LaneSpec("cpu", 0),), policy="fcfs", chaining=True,
+        variant_registry=reg,
+        on_stage_complete=lambda si, outputs: done.append((si, outputs)),
+    )
+    rt.start()
+    try:
+        # Both stages of every chunk are leased up-front, so stage A's
+        # sink a1 sees its consumer locally and chains.
+        for si in cw.stage_instances.values():
+            rt.submit_stage(si)
+        assert rt.drain(timeout=60.0)
+        assert not rt.errors
+        stats = rt.stats()
+        assert stats["host_chain_deferred"] >= 3  # a0 chains; a1 too
+        assert stats["host_chain_writebacks"] >= 3  # a1 materialized
+        for si, outputs in done:
+            if si.stage.name != "A":
+                continue
+            sink = [o for o in si.op_instances if o.op.name == "a1"][0]
+            pulled = rt.pull_region(_ok(sink.uid))
+            assert float(np.asarray(pulled)[0, 0]) == si.chunk.chunk_id + 1.0
+    finally:
+        rt.stop()

@@ -195,3 +195,99 @@ def test_slandered_worker_rejoins_and_run_completes():
         assert not mgr._workers[0].dead   # ...and rejoined
     finally:
         w0.stop()
+
+
+def test_manager_failover_journal_restores_directory_and_pending(tmp_path):
+    """Kill the coordinator mid-run; a rehydrated Manager (same journal
+    path) must come back with the placement holder maps and the
+    pending-lease ledger intact, then finish the workflow without
+    re-running completed stages."""
+    import numpy as np
+
+    from repro.staging import DirectoryService, StagingConfig, op_key
+
+    release = threading.Event()
+    reg = VariantRegistry()
+
+    def produce(ctx):
+        return np.full((16, 16), float(ctx.chunk.chunk_id + 1), np.float32)
+
+    def consume(ctx):
+        assert release.wait(timeout=60.0)
+        return float(np.asarray(ctx.sole_input()).sum())
+
+    reg.register("produce", "cpu", produce)
+    reg.register("consume", "cpu", consume)
+    wf = AbstractWorkflow.chain(
+        "failover",
+        [Stage.single(Operation("produce")), Stage.single(Operation("consume"))],
+    )
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(i) for i in range(4)])
+    journal = str(tmp_path / "manager.wal")
+
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(
+            wid, lanes=(LaneSpec("cpu", 0),), variant_registry=reg,
+            staging=StagingConfig(),
+        )
+        rt.start()
+        workers.append(rt)
+    try:
+        # -- phase 1: produce completes, consume wedges, coordinator dies
+        mgr1 = Manager(cw, ManagerConfig(window=4, backup_tasks=False,
+                                         journal_path=journal))
+        for rt in workers:
+            mgr1.register_worker(rt)
+        assert not mgr1.run(timeout=1.5)  # consume is gated: must time out
+        produce_uids = {
+            si.uid for si in cw.stage_instances.values()
+            if si.stage.name == "produce"
+        }
+        consume_uids = {
+            si.uid for si in cw.stage_instances.values()
+            if si.stage.name == "consume"
+        }
+        assert produce_uids <= mgr1._stage_done
+        holders_before = {
+            key: mgr1.directory.holders(key)
+            for si in cw.stage_instances.values()
+            if si.stage.name == "produce"
+            for key in [op_key(si.op_instances[0].uid)]
+        }
+        assert any(holders_before.values())  # placements were recorded
+        mgr1.directory.close()  # the old coordinator is gone
+
+        # -- phase 2: rehydrate from the journal alone
+        mgr2 = Manager(cw, ManagerConfig(window=4, backup_tasks=False,
+                                         journal_path=journal))
+        svc = mgr2.directory
+        assert isinstance(svc, DirectoryService)
+        # Journal replay: completed stages, holder maps, pending leases.
+        assert produce_uids <= mgr2._stage_done
+        for key, holders in holders_before.items():
+            assert svc.holders(key) == holders
+        assert set(svc.outstanding()) == consume_uids
+        # The new coordinator resumes: same workers re-register (their
+        # tiers still hold the produce outputs the directory points at).
+        for rt in workers:
+            mgr2.register_worker(rt)
+        threading.Timer(0.2, release.set).start()
+        assert mgr2.run(timeout=60.0)
+        done, total = mgr2.progress()
+        assert done == total == 8
+        # Completed work was not re-executed after the failover.
+        produced = sum(
+            1 for rt in workers for uid in rt.completion_order
+            if cw.op_instances[uid].op.name == "produce"
+        )
+        assert produced == 4
+        # The resumed run produced the right values.
+        for si in cw.stage_instances.values():
+            if si.stage.name == "consume":
+                out = mgr2.stage_outputs(si.uid).get("consume")
+                assert out == float(si.chunk.chunk_id + 1) * 16 * 16
+    finally:
+        release.set()
+        for rt in workers:
+            rt.stop()
