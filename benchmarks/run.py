@@ -33,6 +33,8 @@ def main() -> None:
                     help="path for the pr2 bench JSON (default: BENCH_PR2.json)")
     ap.add_argument("--pr3-json", default=None,
                     help="path for the pr3 bench JSON (default: BENCH_PR3.json)")
+    ap.add_argument("--pr4-json", default=None,
+                    help="path for the pr4 bench JSON (default: BENCH_PR4.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -40,7 +42,7 @@ def main() -> None:
     selected = (
         args.only.split(",")
         if args.only
-        else list(ALL_BENCHES) + ["staging", "pr2", "pr3", "roofline"]
+        else list(ALL_BENCHES) + ["staging", "pr2", "pr3", "pr4", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -54,6 +56,10 @@ def main() -> None:
                 from benchmarks.transport import bench_pr3
 
                 bench_rows = bench_pr3(args.pr3_json)
+            elif name == "pr4":
+                from benchmarks.dataplane import bench_pr4
+
+                bench_rows = bench_pr4(args.pr4_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

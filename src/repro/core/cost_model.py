@@ -33,6 +33,7 @@ __all__ = [
     "batched_runtime",
     "batch_amortization",
     "optimal_micro_batch",
+    "op_cost_from_seconds",
 ]
 
 
@@ -147,6 +148,29 @@ def optimal_micro_batch(
             break
         best = b
     return best
+
+
+def op_cost_from_seconds(
+    accel_seconds: float,
+    lane: LaneModel = TPU_V5E,
+    mxu_friendly: bool = True,
+) -> OpCost:
+    """Synthesize an :class:`OpCost` whose roofline runtime on ``lane``
+    equals a measured / calibrated per-instance runtime.
+
+    The dispatcher knows per-op *seconds* (calibrated profiles, online
+    EMAs) rather than flop counts; this adapter lets those timings
+    drive the batching curves (``batched_runtime`` /
+    ``optimal_micro_batch``) without hand-characterizing every op.
+    The cost is compute-bound by construction (memory term at half the
+    compute term), which is the regime where batching pays anyway.
+    """
+    s = max(accel_seconds, 1e-12)
+    return OpCost(
+        flops=s * lane.effective_flops(mxu_friendly),
+        bytes=s * lane.mem_bw / 2.0,
+        mxu_friendly=mxu_friendly,
+    )
 
 
 def roofline_terms(

@@ -67,6 +67,17 @@ class ManagerConfig:
     # replayed so a restarted coordinator resumes instead of restarting.
     journal_path: Optional[str] = None
     snapshot_every: int = 512        # journal appends between checkpoints
+    # Byte-keyed compaction: when set, checkpoints trigger on journal
+    # *bytes* since the last snapshot (replay time is bounded by bytes
+    # to parse, not append count) and snapshot_every is ignored.
+    snapshot_bytes: Optional[int] = None
+    # Predictive push of sink outputs (coordinator-bypass data plane):
+    # at stage completion the placement rule predicts the next holder
+    # of each sink output and the completing worker pushes the bytes
+    # there before the dependent lease starts, hiding the first-touch
+    # transfer.  Off by default: pull stays the baseline the benchmarks
+    # compare against.
+    predictive_push: bool = False
 
 
 @dataclass
@@ -98,6 +109,7 @@ class Manager:
                 self.cfg.journal_path,
                 self.cfg.directory,
                 snapshot_every=self.cfg.snapshot_every,
+                snapshot_bytes=self.cfg.snapshot_bytes,
             )
             for uid in self.directory.completed:
                 if uid in self.cw.stage_instances:
@@ -107,13 +119,26 @@ class Manager:
         self.placement_local = 0       # dependent leased where its data is
         self.placement_remote = 0      # dependent leased elsewhere
         self.staged_bytes_avoided = 0  # inputs not re-sent: already staged
+        # Coordinator data-plane accounting: region payloads this
+        # coordinator relayed (fetch_region(s) serving worker pulls) vs
+        # push work it only *directed* (bytes flowed worker-to-worker).
+        self.relay_regions = 0
+        self.relay_bytes = 0
+        self.push_directives = 0       # pushes delegated to a WorkerClient
+        self.pushes_inline = 0         # in-process targets injected directly
+        # (target worker, dep op uid) -> predict time: keys a push was
+        # directed toward, so the target's forward_inputs can defer its
+        # own pull of the same bytes (grace-bounded on the worker side).
+        self._push_inbound: dict[tuple[int, int], float] = {}
         self._done_event = threading.Event()
         self._monitor: Optional[threading.Thread] = None
         self._stop_monitor = False
 
     # -- membership -------------------------------------------------------
 
-    def register_worker(self, runtime: WorkerRuntime) -> None:
+    def register_worker(
+        self, runtime: WorkerRuntime, address: Any = None
+    ) -> None:
         runtime.on_stage_complete = self._make_completion_cb(runtime.worker_id)
         runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
         # Region pull path: the StagingAgent prefetches completed
@@ -156,6 +181,10 @@ class Manager:
                         self._push_pending_locked(self.cw.stage_instances[uid])
                 self.directory.drop_worker(wid)
             self._workers[wid] = _WorkerState(runtime=runtime)
+            if address is not None:
+                # Data-plane address: lets sibling workers dial this one
+                # for region bytes instead of relaying through here.
+                self.directory.set_address(wid, address)
             self._dispatch_all_locked()
 
     def _heartbeat(self, worker_id: int) -> None:
@@ -290,6 +319,15 @@ class Manager:
                     ) or any(p.uid == dep_uid for p in self._pending)
                     if not already:
                         self._push_pending_locked(dsi)
+            # Predictive push: BEFORE the dispatch below leases the
+            # newly-ready dependents, predict where they will land and
+            # direct the holders (push_request notify — the completing
+            # worker is already a directory holder of its sinks) to push
+            # the missing inputs there.  The notifies are in flight
+            # while dispatch still runs, so the bytes race *ahead of*
+            # the lease instead of trailing its first touch.
+            if self.cfg.predictive_push:
+                self._predict_pushes_locked(worker_id, primary, outputs)
             self._dispatch_all_locked()
             self._check_done_locked()
 
@@ -379,15 +417,256 @@ class Manager:
             if dep_uid not in local
         ]
 
+    # -- coordinator-bypass data plane --------------------------------------
+
+    def resolve_regions(
+        self, keys: list, exclude: Optional[int] = None
+    ) -> list:
+        """Directory lookup for worker-to-worker transfer: for each key
+        the ``(worker_id, bus_address)`` of a live holder (largest
+        replica first), or None when only the Manager route can serve
+        it.  This is the whole control-plane cost of a direct transfer:
+        metadata out, bytes never through here."""
+        out: list = []
+        with self._lock:
+            for key in keys:
+                best = None
+                holders = self.directory.holders(key)
+                for wid in sorted(holders, key=lambda w: -holders[w]):
+                    if wid == exclude:
+                        continue
+                    st = self._workers.get(wid)
+                    if st is None or st.dead or not st.runtime.alive:
+                        continue
+                    addr = self.directory.address_of(wid)
+                    if addr is None:
+                        continue
+                    best = (wid, addr)
+                    break
+                out.append(best)
+        return out
+
+    def region_staged(self, worker_id: int, key: RegionKey, nbytes: int) -> None:
+        """A pushed replica landed on ``worker_id``: record it (journaled
+        when a DirectoryService backs the directory) so dependents — and
+        a restarted coordinator — can route to the new holder."""
+        self.directory.record(worker_id, key, int(nbytes))
+
+    def _predict_pushes_locked(
+        self, worker_id: int, primary: StageInstance, outputs: dict[str, Any]
+    ) -> None:
+        """Predictive push for ``primary``'s newly-ready dependents.
+
+        Prediction = the same rule the dispatch below uses (pending-
+        queue affinity under locality-aware placement, window-slack FIFO
+        otherwise), run virtually.  EVERY input the predicted worker is
+        missing gets pushed ahead of the lease: bus holders get a
+        ``push_request`` notify (the completing worker is already a
+        directory holder of its just-recorded sinks, so one mechanism
+        covers both fresh and older regions), in-process targets are
+        injected directly (zero copy).  Bytes never touch the Manager.
+        """
+        now = time.monotonic()
+        if self._push_inbound:  # drop predictions never consumed by a lease
+            self._push_inbound = {
+                k: t for k, t in self._push_inbound.items() if now - t < 10.0
+            }
+        sink_uids = {
+            oi.uid
+            for oi in primary.op_instances
+            if oi.op.name in primary.stage.sinks()
+        }
+        ready: list[int] = []
+        upcoming: list[int] = []
+        for uid in primary.dependents:
+            if uid in self._stage_done:
+                continue
+            dsi = self.cw.stage_instances[uid]
+            (ready if dsi.deps.issubset(self._stage_done) else upcoming).append(
+                uid
+            )
+        targets = self._predict_assignment_locked(ready)
+        for uid in upcoming:
+            # A dependent still waiting on other upstreams: its lease is
+            # not imminent, but THIS completion's sinks can start moving
+            # toward wherever its inputs are accumulating — counting
+            # both recorded holders AND in-flight upstream leases (that
+            # output will materialize on the leased worker).  By the
+            # time the last upstream finishes, the fan-in is already
+            # staged and the transfer rode under its compute.
+            twid = self._predict_upcoming_locked(uid)
+            if twid is not None:
+                targets[uid] = twid
+        pushed: set[tuple[int, RegionKey]] = set()
+        for dep_uid in ready + upcoming:
+            twid = targets.get(dep_uid)
+            if twid is None:
+                continue
+            tst = self._workers.get(twid)
+            if tst is None or tst.dead:
+                continue
+            dsi = self.cw.stage_instances[dep_uid]
+            cross = self._cross_dep_uids(dsi)
+            if dep_uid in upcoming:
+                # Only this completion's own sinks are pushed early;
+                # other inputs move when their producers complete.
+                cross &= sink_uids
+            for dep in sorted(cross):
+                key = op_key(dep)
+                if (twid, key) in pushed or (twid, dep) in self._push_inbound:
+                    continue  # this push is already in flight
+                if self.directory.holders(key).get(twid):
+                    continue  # the predicted worker already holds it
+                if self._push_one_locked(worker_id, twid, tst, dep, key, now):
+                    pushed.add((twid, key))
+
+    def _cross_dep_uids(self, si: StageInstance) -> set[int]:
+        local = {oi.uid for oi in si.op_instances}
+        return {
+            u for oi in si.op_instances for u in oi.deps if u not in local
+        }
+
+    def _predict_upcoming_locked(self, dep_uid: int) -> Optional[int]:
+        """Predicted worker for a dependent whose upstreams are still
+        running: one vote per input already held (directory) plus one
+        per input whose producer stage is currently leased there."""
+        dsi = self.cw.stage_instances[dep_uid]
+        lease_of = {
+            uid: wid
+            for wid, st in self._workers.items()
+            if not st.dead
+            for uid in st.leases
+        }
+        votes: dict[int, int] = {}
+        for dep in self._cross_dep_uids(dsi):
+            for wid in self.directory.holders(op_key(dep)):
+                votes[wid] = votes.get(wid, 0) + 1
+            dep_oi = self.cw.op_instances.get(dep)
+            if dep_oi is not None:
+                # Still-running producer: its output will materialize on
+                # the worker holding its lease (leases are dropped at
+                # completion, so this never double-counts a holder).
+                wid = lease_of.get(dep_oi.stage_instance.uid)
+                if wid is not None:
+                    votes[wid] = votes.get(wid, 0) + 1
+        live = {
+            wid
+            for wid, st in self._workers.items()
+            if not st.dead and st.runtime.alive
+        }
+        votes = {w: v for w, v in votes.items() if w in live}
+        if not votes:
+            return None
+        return max(votes, key=lambda w: (votes[w], -w))
+
+    def _push_one_locked(
+        self,
+        worker_id: int,
+        twid: int,
+        tst: "_WorkerState",
+        dep: int,
+        key: RegionKey,
+        now: float,
+    ) -> bool:
+        """Route one region push toward predicted worker ``twid``."""
+        trt = tst.runtime
+        if callable(getattr(trt, "ingest_push", None)):
+            # In-process target: the Manager holds the output copy —
+            # the "push" is a reference hand-over, done right here.
+            dep_oi = self.cw.op_instances.get(dep)
+            if dep_oi is None:
+                return False
+            up = self._stage_outputs.get(dep_oi.stage_instance.uid, {})
+            value = up.get(dep_oi.op.name)
+            if value is None:
+                return False
+            trt.ingest_push(key, value)
+            self.directory.record(twid, key, sizeof(value))
+            self.pushes_inline += 1
+            return True
+        addr = self.directory.address_of(twid)
+        if addr is None:
+            return False  # target has no data plane: pull remains
+        # Ask a live holder to push (prefer the completing worker: its
+        # copy is freshest and its notify is already racing the lease).
+        holders = self.directory.holders(key)
+        order = sorted(holders, key=lambda w: (w != worker_id, -holders[w]))
+        for hwid in order:
+            hst = self._workers.get(hwid)
+            if (
+                hwid == twid
+                or hst is None
+                or hst.dead
+                or not hst.runtime.alive
+            ):
+                continue
+            req = getattr(hst.runtime, "push_region_to", None)
+            if req is None:
+                continue
+            req(key, addr)
+            self.push_directives += 1
+            self._push_inbound[(twid, dep)] = now
+            return True
+        return False
+
+    def _predict_assignment_locked(self, uids: list) -> dict[int, int]:
+        """Which worker will the imminent dispatch lease each of
+        ``uids`` to?  Mirrors ``_dispatch_all_locked`` virtually (no
+        side effects): locality-aware placement scores pending-queue
+        affinity per slack worker; demand-driven mode replays the
+        window-filling FIFO walk over the current pending order."""
+        live = {
+            wid: st
+            for wid, st in self._workers.items()
+            if not st.dead and st.runtime.alive
+        }
+        slots = {
+            wid: max(self.cfg.window - len(st.leases), 0)
+            for wid, st in live.items()
+        }
+        out: dict[int, int] = {}
+        if self.cfg.locality_aware:
+            for uid in uids:
+                keys = self._input_keys(self.cw.stage_instances[uid])
+                best, best_f = None, -1.0
+                for wid in live:
+                    if slots.get(wid, 0) <= 0:
+                        continue
+                    f = (
+                        self.directory.local_fraction(wid, keys)
+                        if keys
+                        else 0.0
+                    )
+                    if f > best_f:
+                        best, best_f = wid, f
+                if best is not None:
+                    out[uid] = best
+                    slots[best] -= 1
+            return out
+        assign: dict[int, int] = {}
+        queue = iter([si.uid for si in self._pending])
+        for wid in live:
+            n = slots.get(wid, 0)
+            while n > 0:
+                uid = next(queue, None)
+                if uid is None:
+                    return {u: assign[u] for u in uids if u in assign}
+                assign[uid] = wid
+                n -= 1
+        return {u: assign[u] for u in uids if u in assign}
+
     def _fetch_region(self, key: RegionKey) -> Any:
         """Region pull: output of a completed upstream op, or None.
 
-        The Manager's own output copy is tried first; after a failover
-        rehydration that copy is gone, so the pull falls back to a
-        worker the placement directory records as a holder (region-pull
-        RPC via the worker handle).  The holder RPCs run *outside* the
-        Manager lock: a slow or hung holder must not stall heartbeats
-        and dispatch for every other worker.
+        This is the *relay* route — the bytes cross the coordinator —
+        kept as the fallback when the holder is dead or unknown; the
+        happy path resolves holders (``resolve_regions``) and dials the
+        sibling directly.  The Manager's own output copy is tried
+        first; after a failover rehydration that copy is gone, so the
+        pull falls back to a worker the placement directory records as
+        a holder (region-pull RPC via the worker handle).  The holder
+        RPCs run *outside* the Manager lock: a slow or hung holder must
+        not stall heartbeats and dispatch for every other worker.
         """
         if not (isinstance(key, tuple) and len(key) == 2 and key[0] == "op"):
             return None
@@ -397,11 +676,16 @@ class Manager:
                 return None
             outputs = self._stage_outputs.get(oi.stage_instance.uid)
             if outputs and oi.op.name in outputs:
-                return outputs.get(oi.op.name)
+                value = outputs.get(oi.op.name)
+                self.relay_regions += 1
+                self.relay_bytes += sizeof(value)
+                return value
             holders = self._holder_runtimes_locked(key)
         for rt in holders:
             value = rt.pull_region(key)
             if value is not None:
+                self.relay_regions += 1
+                self.relay_bytes += sizeof(value)
                 return value
         return None
 
@@ -454,7 +738,7 @@ class Manager:
         dependency mark/provide conversation.
         """
         lazy = getattr(rt, "agent", None) is not None
-        items: list[tuple[int, Any, bool]] = []
+        items: list[tuple[int, Any, bool, bool]] = []
         sizes: dict[int, int] = {}
         for oi in si.op_instances:
             for dep_uid in oi.deps:
@@ -470,8 +754,9 @@ class Manager:
                 elif up_uid in self._stage_done:
                     # Rehydrated Manager: the output payload died with
                     # the old coordinator.  Lazy workers pull it through
-                    # fetch_region (which consults directory holders);
-                    # push-mode workers need it refetched right now.
+                    # the data plane / fetch_region (both consult the
+                    # directory's sibling holders); push-mode workers
+                    # need it refetched right now.
                     key = op_key(dep_uid)
                     value = (
                         None
@@ -491,7 +776,16 @@ class Manager:
                     )
                 )
                 push = not lazy and value is not None
-                items.append((dep_uid, value if push else None, push))
+                # A predicted push is racing toward this worker for this
+                # key: tell it, so its agent defers the duplicate pull.
+                inbound = (
+                    lazy
+                    and self._push_inbound.pop(
+                        (rt.worker_id, dep_uid), None
+                    )
+                    is not None
+                )
+                items.append((dep_uid, value if push else None, push, inbound))
         if not items:
             return
         for uid in rt.forward_inputs(items):
@@ -529,7 +823,11 @@ class Manager:
             local = {o.uid for o in si.op_instances}
             orig_by_name = {o.op.name: o for o in si.op_instances}
             for c_oi in clone.op_instances:
-                c_oi.deps |= orig_by_name[c_oi.op.name].deps - local
+                orig = orig_by_name[c_oi.op.name]
+                c_oi.deps |= orig.deps - local
+                c_oi.dep_names.update(
+                    {u: n for u, n in orig.dep_names.items() if u not in local}
+                )
             clones_of[clone.uid] = si.uid
             st.leases.add(clone.uid)
             self._forward_upstream_outputs(st.runtime, clone)

@@ -31,6 +31,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from . import calibration as cal
+from .cost_model import TPU_V5E, op_cost_from_seconds, optimal_micro_batch
 from .scheduling import HOST_KIND, ReadyScheduler
 from ..staging import PlacementDirectory
 from .workflow import (
@@ -141,6 +142,13 @@ class SimConfig:
     # many ready instances of the same batchable op per decision and
     # executes them as one launch (cost_model.batched_runtime).
     micro_batch: int = 1
+    # Adaptive micro-batch sizing: per-op batch depth from the cost
+    # model's latency-budget curve (cost_model.optimal_micro_batch) —
+    # the largest batch whose single-launch latency fits the budget —
+    # with ``micro_batch`` as the hard cap.  Fast ops batch deep, slow
+    # ops stay responsive, instead of one constant serving both.
+    adaptive_batch: bool = False
+    batch_latency_budget: float = 0.5
     # Fixed per-dispatch cost of an accelerator kernel launch (driver /
     # JIT dispatch / MPI control round).  Paid once per (batched) call.
     launch_overhead: float = 0.0
@@ -168,6 +176,17 @@ class SimConfig:
     staging_locality: bool = True      # directory-driven lease placement
     stage_output_mb: float = 48.0      # inter-stage region per tile (MB)
     interconnect_gb_s: float = 6.0     # node-to-node staging bandwidth
+    # Coordinator-bypass data plane (PR4).  With direct_transfer,
+    # inter-node region copies flow worker-to-worker (the runtime's
+    # peer-dial path) and serialize only on the destination NIC;
+    # without it every byte relays through the coordinator, whose NIC
+    # carries it twice (in + out) and is shared by ALL nodes — the
+    # per-PR3 wire reality, and the bottleneck at scale.
+    direct_transfer: bool = True
+    # Predictive push: at stage completion the predicted next holder's
+    # copy starts immediately (agent-driven push), so the dependent's
+    # first-touch transfer is hidden behind the lease round-trip.
+    predictive_push: bool = False
     # Control-plane cost model (repro.transport): every Manager/Worker
     # message — lease dispatch, completion notify, staging pull request
     # — pays one bus round-trip of this latency.  0 (default) keeps the
@@ -216,6 +235,12 @@ class SimResult:
     staged_bytes_avoided: int = 0
     cross_node_bytes: int = 0
     transfer_wait: float = 0.0
+    # Data-plane accounting: cross-node bytes relayed through the
+    # coordinator vs moved worker-to-worker, and predictive pushes.
+    relay_region_bytes: int = 0
+    direct_region_bytes: int = 0
+    pushes: int = 0
+    pushed_bytes: int = 0
     # Micro-batched dispatch accounting (cfg.micro_batch > 1).
     batches: int = 0
     batched_ops: int = 0
@@ -294,6 +319,13 @@ class ClusterSim:
         self.staged_bytes_avoided = 0
         self.cross_node_bytes = 0
         self.transfer_wait = 0.0
+        # Data plane: coordinator NIC busy-until time (relay mode) and
+        # relay/direct/push byte accounting.
+        self._coord_free = 0.0
+        self.relay_region_bytes = 0
+        self.direct_region_bytes = 0
+        self.pushes = 0
+        self.pushed_bytes = 0
         # Control-plane cost model (repro.transport).
         self.control_messages = 0
         self.rpc_wait = 0.0
@@ -456,6 +488,10 @@ class ClusterSim:
             staged_bytes_avoided=self.staged_bytes_avoided,
             cross_node_bytes=self.cross_node_bytes,
             transfer_wait=self.transfer_wait,
+            relay_region_bytes=self.relay_region_bytes,
+            direct_region_bytes=self.direct_region_bytes,
+            pushes=self.pushes,
+            pushed_bytes=self.pushed_bytes,
             batches=batches,
             batched_ops=batched_ops,
             control_messages=self.control_messages,
@@ -567,14 +603,33 @@ class ClusterSim:
                 key = ("stage", d)
                 n = self._stage_bytes
                 self.cross_node_bytes += n
-                start = max(copies_start, node.net_free)
-                node.net_free = start + n / self._interconnect_bps
-                ready = max(ready, node.net_free)
+                done_t = self._transfer_into(node, copies_start, n)
+                ready = max(ready, done_t)
                 # The directory learns of the replica now; consumers
                 # scheduled before it lands gate on _region_ready.
                 self.staging_dir.record(node.node_id, key, n)
-                self._region_ready[(node.node_id, d)] = node.net_free
+                self._region_ready[(node.node_id, d)] = done_t
         return ready - self.now
+
+    def _transfer_into(self, node: _Node, earliest: float, n: int) -> float:
+        """Time at which ``n`` region bytes land on ``node``.
+
+        Direct mode: the copy serializes on the destination's ingress
+        NIC only (worker-to-worker peer dial).  Relay mode: the bytes
+        additionally pass through the coordinator's NIC twice (in +
+        out), a single link shared by EVERY node's cross-node traffic —
+        the structural bottleneck the coordinator-bypass removes.
+        """
+        if self.cfg.direct_transfer:
+            start = max(earliest, node.net_free)
+            node.net_free = start + n / self._interconnect_bps
+            self.direct_region_bytes += n
+            return node.net_free
+        start = max(earliest, node.net_free, self._coord_free)
+        self._coord_free = start + 2.0 * n / self._interconnect_bps
+        node.net_free = self._coord_free
+        self.relay_region_bytes += n
+        return node.net_free
 
     def _start_stage_ops(self, node: _Node, si: StageInstance) -> None:
         if not node.alive or si.uid in self.stage_done:
@@ -653,9 +708,29 @@ class ClusterSim:
                 self._execute(node, lane, live)
 
     def _op_batchable(self, oi: OperationInstance) -> int:
-        """pop_batch cap for the simulated op (profiles carry no
-        per-op maximum, so batchable ops use the config's)."""
-        return self.cfg.micro_batch if self._profile(oi.op.name).batchable else 1
+        """pop_batch cap for the simulated op.
+
+        Static mode uses the config constant; adaptive mode asks the
+        cost model for the largest batch whose single-launch latency
+        (calibrated per-instance runtime, launch overhead) still fits
+        ``batch_latency_budget`` — per-op ``B``, capped by the config.
+        """
+        p = self._profile(oi.op.name)
+        if not p.batchable:
+            return 1
+        if not self.cfg.adaptive_batch:
+            return self.cfg.micro_batch
+        accel_s = self._cpu_seconds(oi) / max(p.gpu_speedup, 1e-9)
+        return max(
+            1,
+            optimal_micro_batch(
+                op_cost_from_seconds(accel_s),
+                TPU_V5E,
+                self.cfg.launch_overhead,
+                self.cfg.batch_latency_budget,
+                max_batch=self.cfg.micro_batch,
+            ),
+        )
 
     def _execute(
         self, node: _Node, lane: _Lane, ois: list[OperationInstance]
@@ -779,6 +854,10 @@ class ClusterSim:
             self.staging_dir.record(
                 node.node_id, ("stage", primary_uid), self._stage_bytes
             )
+            if self.cfg.predictive_push:
+                self._predict_push(node, self.cw.stage_instances.get(
+                    primary_uid, si
+                ))
         # A backup clone finishing completes the original, and vice versa.
         orig_uid = self._clone_of.get(si.uid)
         effective = self.cw.stage_instances.get(orig_uid, si) if orig_uid else si
@@ -811,6 +890,71 @@ class ClusterSim:
         for oi in si.op_instances:
             if oi.uid not in self.op_done:
                 self.cancelled_ops.add(oi.uid)
+
+    def _predict_push(self, src: _Node, si: StageInstance) -> None:
+        """Agent-driven predictive push: at ``si``'s completion, predict
+        the node each newly-ready dependent will be leased to (the same
+        pending-queue-affinity rule ``_pick_for_node`` uses) and start
+        copying EVERY input region it is missing NOW — from whichever
+        node holds it (completing node or an earlier holder, the
+        runtime's directive/push_request split) — so the first-touch
+        transfer overlaps the lease dispatch instead of gating the
+        dependent's source ops.  A wrong prediction wastes link time
+        (counted in pushed_bytes) but never correctness: the dependent's
+        own ``_staging_delay`` pull remains the backstop.
+        """
+        for dep_uid in sorted(si.dependents):
+            dsi = self.cw.stage_instances[dep_uid]
+            if dep_uid in self.stage_done:
+                continue
+            is_ready = dsi.deps.issubset(self.stage_done)
+            keys = [("stage", d) for d in dsi.deps]
+            target = None
+            if is_ready:
+                best_f = -1.0
+                for cand in self.nodes:
+                    if not cand.alive or len(cand.leased) >= self.cfg.window:
+                        continue
+                    f = self.staging_dir.local_fraction(cand.node_id, keys)
+                    if f > best_f:
+                        target, best_f = cand, f
+            else:
+                # Upstreams still running: vote with recorded holders
+                # plus in-flight upstream leases — this stage's fresh
+                # region starts moving while the siblings compute, so
+                # the fan-in's first touch hides under their runtime.
+                votes: dict[int, int] = {}
+                for d in dsi.deps:
+                    for nid in self.staging_dir.holders(("stage", d)):
+                        votes[nid] = votes.get(nid, 0) + 1
+                    nid = self.stage_node.get(d)
+                    if nid is not None and d not in self.stage_done:
+                        votes[nid] = votes.get(nid, 0) + 1
+                votes = {
+                    nid: v for nid, v in votes.items() if self.nodes[nid].alive
+                }
+                if votes:
+                    target = self.nodes[
+                        max(votes, key=lambda nid: (votes[nid], -nid))
+                    ]
+            if target is None:
+                continue
+            pushable = (
+                dsi.deps
+                if is_ready
+                else dsi.deps & {self._clone_of.get(si.uid, si.uid)}
+            )
+            for d in pushable:
+                holders = self.staging_dir.holders(("stage", d))
+                if holders.get(target.node_id) or not holders:
+                    continue  # already resident there / nothing staged
+                n = self._stage_bytes
+                self.cross_node_bytes += n
+                done_t = self._transfer_into(target, self.now, n)
+                self.staging_dir.record(target.node_id, ("stage", d), n)
+                self._region_ready[(target.node_id, d)] = done_t
+                self.pushes += 1
+                self.pushed_bytes += n
 
     # -- fault tolerance / stragglers ---------------------------------------------
 

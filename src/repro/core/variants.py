@@ -93,6 +93,13 @@ class FunctionVariant:
         alpha = 0.3
         self._observed[device_kind] = (alpha * seconds + (1 - alpha) * ema, n + 1)
 
+    def expected_runtime(self, device_kind: str) -> float | None:
+        """Online EMA of the per-instance runtime on ``device_kind``
+        (None until observed) — feeds the adaptive micro-batch sizing
+        (``cost_model.optimal_micro_batch`` latency-budget curve)."""
+        obs = self._observed.get(device_kind)
+        return obs[0] if obs is not None else None
+
 
 class VariantRegistry:
     """Thread-safe name -> FunctionVariant map."""

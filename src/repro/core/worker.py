@@ -47,6 +47,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+from .cost_model import TPU_V5E, op_cost_from_seconds, optimal_micro_batch
 from .scheduling import HOST_KIND, ReadyScheduler
 from .variants import VariantRegistry, registry as global_registry
 from .workflow import OperationInstance, StageInstance
@@ -144,6 +145,7 @@ class WorkerRuntime:
         prefetch: bool = False,
         chaining: bool = False,
         micro_batch: int = 1,
+        batch_budget: float | None = None,
         speedups_known: bool = True,
         staging: StagingConfig | None = None,
         variant_registry: VariantRegistry | None = None,
@@ -159,6 +161,11 @@ class WorkerRuntime:
         self.chaining = chaining
         self.locality = locality or chaining
         self.micro_batch = max(int(micro_batch), 1)
+        # Adaptive micro-batch sizing: with a latency budget (seconds
+        # one batched launch may take), per-op batch depth comes from
+        # cost_model.optimal_micro_batch over the variant's observed
+        # runtime instead of the static max_batch cap.
+        self.batch_budget = batch_budget
         self.scheduler = ReadyScheduler(
             policy=policy,
             locality=self.locality,
@@ -230,6 +237,10 @@ class WorkerRuntime:
         # variant: reestimate (O(queue)) only runs when the online EMA
         # actually moved an estimate, not on every completion.
         self._reorder_est: dict[str, float] = {}
+        # Coordinator-bypass data plane: regions pushed here by siblings
+        # (predictive push of sink outputs) before the lease's own pull.
+        self.push_ingested = 0
+        self.push_ingested_bytes = 0
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -307,23 +318,56 @@ class WorkerRuntime:
             self._op_done.add(uid)
 
     def forward_inputs(
-        self, items: list[tuple[int, Any, bool]]
+        self, items: list[tuple]
     ) -> list[int]:
         """Batched input delivery: one control-plane round-trip for a
         whole lease's cross-stage inputs.
 
-        Each item is ``(uid, value, push)``: inputs already staged here
-        are marked available (returned, so the Manager can account the
-        bytes it did not re-send); the rest are injected when ``push``
-        is set, or left for the StagingAgent to pull when not.
+        Each item is ``(uid, value, push[, inbound])``: inputs already
+        staged here are marked available (returned, so the Manager can
+        account the bytes it did not re-send); the rest are injected
+        when ``push`` is set, or left for the StagingAgent to pull when
+        not.  ``inbound`` flags a key the Manager predicted a sibling
+        will *push* here — the agent defers its pull for a grace period
+        so the push and the prefetch don't cross the wire twice.
         """
         staged: list[int] = []
-        for uid, value, push in items:
+        expected: list[Any] = []
+        for item in items:
+            uid, value, push = item[0], item[1], item[2]
+            inbound = bool(item[3]) if len(item) > 3 else False
             if self.mark_staged_input(uid):
                 staged.append(uid)
             elif push:
                 self.provide_input(uid, value)
+            elif inbound:
+                expected.append(op_key(uid))
+        if expected and self.agent is not None:
+            self.agent.expect_push(expected)
         return staged
+
+    def ingest_push(self, key: Any, value: Any) -> int:
+        """A sibling pushed a predicted input (data plane, coordinator
+        bypassed): land it in the host tier and unlock any waiting ops.
+        Returns the bytes landed (0 = rejected)."""
+        if value is None:
+            return 0
+        nbytes = self.store.put(key, value)
+        if isinstance(key, tuple) and len(key) == 2 and key[0] == "op":
+            with self._lock:
+                uid = key[1]
+                if uid not in self._op_done:
+                    self._op_done.add(uid)
+                    self._release_dependents_locked(uid)
+        self.push_ingested += 1
+        self.push_ingested_bytes += nbytes
+        return nbytes
+
+    def invalidate_region(self, key: Any, worker_id: int | None = None) -> None:
+        """Manager broadcast: ``worker_id`` no longer holds ``key`` —
+        keep the staging agent's holder cache honest."""
+        if self.agent is not None:
+            self.agent.invalidate_holder(key, worker_id)
 
     def has_region(self, key: Any) -> bool:
         """True when ``key`` is resident in any tier of this worker
@@ -470,6 +514,8 @@ class WorkerRuntime:
             "host_chain_writebacks": self.host_chain_writebacks,
             "batches": self.scheduler.stats.batches,
             "batched_ops": self.scheduler.stats.batched_ops,
+            "push_ingested": self.push_ingested,
+            "push_ingested_bytes": self.push_ingested_bytes,
             "staging": self.store.stats(),
             "prefetch": self.agent.stats() if self.agent is not None else {},
         }
@@ -532,12 +578,34 @@ class WorkerRuntime:
                     self._work_ready.notify_all()
 
     def _batch_limit(self, oi: OperationInstance) -> int:
-        """pop_batch cap: the variant's declared max batch (1 = scalar)."""
+        """pop_batch cap: the variant's declared max batch (1 = scalar).
+
+        With a ``batch_budget`` the cap adapts per op: the largest batch
+        whose single-launch latency (observed per-instance runtime x B)
+        still fits the budget — ``cost_model.optimal_micro_batch`` —
+        so fast ops batch deep and slow ops stay responsive, instead of
+        one config constant serving both.
+        """
         try:
             var = self.registry.get(oi.op.variant_name)
         except KeyError:
             return 1
-        return var.max_batch if var.batchable else 1
+        cap = var.max_batch if var.batchable else 1
+        if cap <= 1 or self.batch_budget is None:
+            return cap
+        per_item = var.expected_runtime(self._accel_kind())
+        if per_item is None:
+            return cap  # nothing observed yet: static cap until then
+        return max(
+            1,
+            optimal_micro_batch(
+                op_cost_from_seconds(per_item),
+                TPU_V5E,
+                launch_overhead=0.0,
+                latency_budget=self.batch_budget,
+                max_batch=cap,
+            ),
+        )
 
     def _run_batch(self, lane: _LaneState, ois: list[OperationInstance]) -> None:
         """Execute one dispatch decision: a single op or a micro-batch
@@ -694,6 +762,11 @@ class WorkerRuntime:
         return value
 
     def _dep_name(self, oi: OperationInstance, dep_uid: int) -> str:
+        # Wiring-time name map: correct even when this worker never saw
+        # the producing stage (data-plane pull / predictive push).
+        name = oi.dep_names.get(dep_uid)
+        if name is not None:
+            return name
         si = oi.stage_instance
         for other in si.op_instances:
             if other.uid == dep_uid:

@@ -222,6 +222,12 @@ class OperationInstance:
     stage_instance: "StageInstance"
     deps: set[int] = field(default_factory=set)  # uids of upstream op instances
     dependents: set[int] = field(default_factory=set)
+    # dep uid -> producing op name, recorded at wiring time (both edge
+    # endpoints are known there).  A worker leasing only the consumer
+    # stage can then name cross-stage inputs correctly — it may never
+    # see the producing stage instance at all when the region arrives
+    # through the data plane (direct pull / predictive push).
+    dep_names: dict[int, str] = field(default_factory=dict)
 
     # Filled by the scheduler / cost model at enqueue time.
     speedup: float = 1.0          # estimated accelerator-vs-host-core speedup
@@ -327,6 +333,7 @@ class ConcreteWorkflow:
             by_name[op.name] = oi
         for src, dst in stage.edges:
             by_name[dst].deps.add(by_name[src].uid)
+            by_name[dst].dep_names[by_name[src].uid] = src
             by_name[src].dependents.add(by_name[dst].uid)
         return si
 
@@ -345,6 +352,7 @@ class ConcreteWorkflow:
             if oi.op.name in dst.stage.sources():
                 oi.deps.update(sink_uids)
                 for uid in sink_uids:
+                    oi.dep_names[uid] = self.op_instances[uid].op.name
                     self.op_instances[uid].dependents.add(oi.uid)
 
     # -- queries -------------------------------------------------------------

@@ -12,6 +12,19 @@ one accelerator lane to the whole storage hierarchy of a worker:
   ``fetch_batch`` as one transport round-trip (mirroring micro-batched
   dispatch: amortize the per-call latency over the batch); per-key
   ``fetch`` remains the fallback when no batch source is wired;
+* **direct dial (coordinator bypass)** — with ``resolve``/``dial``
+  wired, missing keys are resolved to sibling holders through a cached
+  directory lookup and the region bytes are pulled worker-to-worker;
+  the Manager relay (``fetch``/``fetch_batch``) remains the fallback
+  when the holder is unknown, stale, or dead.  The holder cache is
+  invalidation-correct: ``invalidate_holder`` (driven by the Manager's
+  ``region_drop`` broadcast) guarantees a direct dial never targets a
+  holder that spilled the region without at worst one wasted dial;
+* **expected pushes** — the Manager may predict that a sibling will
+  *push* a key here (predictive push of sink outputs); ``expect_push``
+  defers the pull for a grace period so the push and the pull don't
+  race the same bytes across the wire, with the pull re-arming as the
+  backstop when the push never lands;
 * **promote** — a requested key sitting in a slow tier (disk) is moved
   up ahead of use;
 * **demote** — when the host tier crosses its high-water mark, LRU
@@ -23,6 +36,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, Optional, Sequence
 
 from .store import RegionStore
@@ -34,6 +48,13 @@ FetchFn = Callable[[RegionKey], Any]
 #: Batched pull: ordered keys in, same-length ordered values out
 #: (None per miss); returning None means "no batch source, fall back".
 FetchBatchFn = Callable[[Sequence[RegionKey]], Optional[Sequence[Any]]]
+#: Holder lookup for the direct data plane: ordered keys in, same-length
+#: ``(worker_id, bus_address)`` (or None per unknown key) out; returning
+#: None means the lookup itself failed (coordinator unreachable).
+ResolveFn = Callable[[Sequence[RegionKey]], Optional[Sequence[Any]]]
+#: Peer dial: ``dial(holder, keys)`` pulls the keys straight from the
+#: sibling ``holder = (worker_id, address)``; None = holder unreachable.
+DialFn = Callable[[Any, Sequence[RegionKey]], Optional[Sequence[Any]]]
 
 
 class StagingAgent:
@@ -44,15 +65,23 @@ class StagingAgent:
         worker_id: int = 0,
         fetch: Optional[FetchFn] = None,
         fetch_batch: Optional[FetchBatchFn] = None,
+        resolve: Optional[ResolveFn] = None,
+        dial: Optional[DialFn] = None,
         max_batch: int = 16,
         on_staged: Optional[Callable[[RegionKey, int], None]] = None,
         watermark: float = 0.9,
         interval: float = 0.002,
+        push_grace: float = 0.25,
     ) -> None:
         self.store = store
         self.worker_id = worker_id
         self.fetch = fetch
         self.fetch_batch = fetch_batch
+        # Coordinator-bypass data plane (wired by a transport
+        # WorkerClient): resolve holders, dial the sibling directly.
+        self.resolve = resolve
+        self.dial = dial
+        self.push_grace = push_grace
         self.max_batch = max(int(max_batch), 1)
         self.on_staged = on_staged  # e.g. PlacementDirectory.record
         self.watermark = watermark
@@ -66,6 +95,14 @@ class StagingAgent:
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = False
+        # Directory cache for the direct path: key -> (worker_id, addr).
+        # Entries die on region_drop/eviction notifies (invalidate_*) or
+        # when a dial comes back empty/dead — never silently trusted.
+        self._holders: dict[RegionKey, tuple] = {}
+        # Keys a sibling was predicted to push here: key -> deadline.
+        # The pull is deferred until the deadline so push and pull don't
+        # move the same bytes twice; overdue keys re-enter the queue.
+        self._deferred: dict[RegionKey, float] = {}
         # Counters read by benchmarks / tests.
         self.prefetched = 0
         self.prefetched_bytes = 0
@@ -75,6 +112,14 @@ class StagingAgent:
         self.fetch_calls = 0        # transport round-trips actually paid
         self.batched_keys = 0       # keys that rode a coalesced pull
         self.fetch_errors = 0       # pulls that raised (bus timeout/drop)
+        self.direct_keys = 0        # keys served worker-to-worker
+        self.direct_bytes = 0
+        self.direct_misses = 0      # stale holder: dialed, region gone
+        self.relay_keys = 0         # keys that fell back to the Manager
+        self.relay_bytes = 0
+        self.holder_invalidations = 0
+        self.pushes_expected = 0
+        self.pushes_landed = 0      # expected pushes that arrived in time
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -110,13 +155,57 @@ class StagingAgent:
         """Synchronous fallback: a lane needs ``key`` immediately."""
         return self._stage(key)
 
+    def expect_push(self, keys) -> None:
+        """A sibling is predicted to push ``keys`` here: defer their
+        pull for ``push_grace`` seconds so the push and the prefetch
+        don't race the same bytes.  Overdue keys pull normally — the
+        grace period bounds the stall when a push is lost."""
+        deadline = time.monotonic() + self.push_grace
+        n = 0
+        with self._lock:
+            for key in keys:
+                if key in self._inflight:
+                    continue
+                self._inflight.add(key)
+                self._deferred[key] = deadline
+                n += 1
+        self.pushes_expected += n
+
+    def invalidate_holder(
+        self, key: RegionKey, worker_id: Optional[int] = None
+    ) -> None:
+        """Region ``key`` left ``worker_id``'s tiers (drop/eviction
+        notify): forget the cached holder so a direct dial never fetches
+        from a sibling that spilled the region."""
+        with self._lock:
+            h = self._holders.get(key)
+            if h is not None and (worker_id is None or h[0] == worker_id):
+                del self._holders[key]
+                self.holder_invalidations += 1
+
+    def invalidate_worker(self, worker_id: int) -> None:
+        """Worker died/left: every cached holder entry naming it is gone."""
+        with self._lock:
+            stale = [
+                k for k, h in self._holders.items() if h[0] == worker_id
+            ]
+            for k in stale:
+                del self._holders[k]
+            self.holder_invalidations += len(stale)
+
     # -- internals ---------------------------------------------------------
 
     def _loop(self) -> None:
         while not self._stop:
+            # With pushes pending, poll fast enough that an overdue
+            # (lost) push degrades to a pull within ~one grace period.
+            timeout = self.interval
+            if self._deferred:
+                timeout = min(timeout, max(self.push_grace / 4.0, 0.01))
             try:
-                key = self._requests.get(timeout=self.interval)
+                key = self._requests.get(timeout=timeout)
             except queue.Empty:
+                self._check_deferred()
                 self.demote_moves += self.store.demote_excess(self.watermark)
                 continue
             if key is None:
@@ -146,6 +235,26 @@ class StagingAgent:
                 with self._lock:
                     for k in keys:
                         self._inflight.discard(k)
+            self._check_deferred()
+
+    def _check_deferred(self) -> None:
+        """Resolve expected pushes: landed keys leave the inflight set,
+        overdue keys re-enter the queue as ordinary pulls."""
+        if not self._deferred:
+            return
+        now = time.monotonic()
+        due: list[RegionKey] = []
+        with self._lock:
+            for k, deadline in list(self._deferred.items()):
+                if self.store.where(k) is not None:
+                    del self._deferred[k]
+                    self._inflight.discard(k)
+                    self.pushes_landed += 1
+                elif now >= deadline:
+                    del self._deferred[k]
+                    due.append(k)  # stays inflight: queued for a pull
+        for k in due:
+            self._requests.put(k)
 
     def _local_hit(self, key: RegionKey) -> bool:
         """Serve ``key`` from a local tier if present (promote slow hits)."""
@@ -165,18 +274,25 @@ class StagingAgent:
             self.on_staged(key, 0)
         return True
 
-    def _land(self, key: RegionKey, value: Any) -> None:
+    def _land(self, key: RegionKey, value: Any) -> int:
         nbytes = sizeof(value)
         self.store.put(key, value, tier=self.store.tiers[0].name, nbytes=nbytes)
         self.prefetched += 1
         self.prefetched_bytes += nbytes
         if self.on_staged is not None:
             self.on_staged(key, nbytes)
+        return nbytes
 
     def _stage_batch(self, keys: list[RegionKey]) -> None:
         missing = [k for k in keys if not self._local_hit(k)]
         if not missing:
             return
+        if self.dial is not None:
+            # Coordinator bypass: pull straight from sibling holders;
+            # whatever stays unresolved falls through to the relay.
+            missing = self._direct_stage(missing)
+            if not missing:
+                return
         values = None
         if self.fetch_batch is not None:
             values = self.fetch_batch(missing)
@@ -188,13 +304,75 @@ class StagingAgent:
                 if v is None:
                     self.fetch_misses += 1
                 else:
-                    self._land(k, v)
+                    self.relay_keys += 1
+                    self.relay_bytes += self._land(k, v)
             return
         for k in missing:  # no batch source wired: per-key round-trips
             self._fetch_one(k)
 
+    def _direct_stage(self, missing: list[RegionKey]) -> list[RegionKey]:
+        """Worker-to-worker pull of ``missing``; returns the keys the
+        direct path could not serve (unknown/stale/dead holder)."""
+        holders: dict[RegionKey, tuple] = {}
+        with self._lock:
+            for k in missing:
+                h = self._holders.get(k)
+                if h is not None:
+                    holders[k] = h
+        unknown = [k for k in missing if k not in holders]
+        if unknown and self.resolve is not None:
+            try:
+                resolved = self.resolve(unknown)
+            except Exception:  # noqa: BLE001 - coordinator unreachable
+                resolved = None
+                self.fetch_errors += 1
+            if resolved is not None:
+                with self._lock:
+                    for k, h in zip(unknown, resolved):
+                        if h is not None:
+                            h = (h[0], h[1])
+                            holders[k] = h
+                            self._holders[k] = h
+        leftover = [k for k in missing if k not in holders]
+        groups: dict[tuple, list[RegionKey]] = {}
+        for k in missing:
+            if k in holders:
+                groups.setdefault(holders[k], []).append(k)
+        for holder, hkeys in groups.items():
+            try:
+                values = self.dial(holder, hkeys)
+            except Exception:  # noqa: BLE001 - peer dropped mid-pull
+                values = None
+                self.fetch_errors += 1
+            if values is None:  # dead holder: forget it, use the relay
+                self._forget_holder(holder[0], hkeys)
+                leftover.extend(hkeys)
+                continue
+            self.fetch_calls += 1
+            if len(hkeys) > 1:
+                self.batched_keys += len(hkeys)
+            for k, v in zip(hkeys, values):
+                if v is None:
+                    # Stale holder (spilled between notify and dial).
+                    self.direct_misses += 1
+                    self._forget_holder(holder[0], [k])
+                    leftover.append(k)
+                else:
+                    self.direct_keys += 1
+                    self.direct_bytes += self._land(k, v)
+        return leftover
+
+    def _forget_holder(self, worker_id: int, keys) -> None:
+        with self._lock:
+            for k in keys:
+                h = self._holders.get(k)
+                if h is not None and h[0] == worker_id:
+                    del self._holders[k]
+
     def _stage(self, key: RegionKey) -> bool:
         if self._local_hit(key):
+            return True
+        if self.dial is not None and not self._direct_stage([key]):
             return True
         return self._fetch_one(key)
 
@@ -207,7 +385,8 @@ class StagingAgent:
         if value is None:
             self.fetch_misses += 1
             return False
-        self._land(key, value)
+        self.relay_keys += 1
+        self.relay_bytes += self._land(key, value)
         return True
 
     def stats(self) -> dict[str, int]:
@@ -220,4 +399,12 @@ class StagingAgent:
             "fetch_calls": self.fetch_calls,
             "batched_keys": self.batched_keys,
             "fetch_errors": self.fetch_errors,
+            "direct_keys": self.direct_keys,
+            "direct_bytes": self.direct_bytes,
+            "direct_misses": self.direct_misses,
+            "relay_keys": self.relay_keys,
+            "relay_bytes": self.relay_bytes,
+            "holder_invalidations": self.holder_invalidations,
+            "pushes_expected": self.pushes_expected,
+            "pushes_landed": self.pushes_landed,
         }

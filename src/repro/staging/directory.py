@@ -16,7 +16,7 @@ transport — a real multi-node deployment (ROADMAP open item).
 from __future__ import annotations
 
 import threading
-from typing import Iterable, Optional
+from typing import Any, Iterable, Optional
 
 from .tiers import RegionKey
 
@@ -29,10 +29,27 @@ class PlacementDirectory:
     def __init__(self) -> None:
         self._lock = threading.RLock()
         self._placement: dict[RegionKey, dict[int, int]] = {}
+        # Worker-to-worker data plane: each worker's bus address, so a
+        # holder lookup can be answered with a dialable peer instead of
+        # relaying the region bytes through the coordinator.
+        self._addresses: dict[int, Any] = {}
         self.records = 0
         self.evictions = 0
 
     # -- updates -----------------------------------------------------------
+
+    def set_address(self, worker_id: int, address: Any) -> None:
+        """Record worker ``worker_id``'s bus address (peer-dial target)."""
+        with self._lock:
+            self._addresses[int(worker_id)] = address
+
+    def address_of(self, worker_id: int) -> Any:
+        with self._lock:
+            return self._addresses.get(worker_id)
+
+    def addresses(self) -> dict[int, Any]:
+        with self._lock:
+            return dict(self._addresses)
 
     def record(self, worker_id: int, key: RegionKey, nbytes: int) -> None:
         """Worker ``worker_id`` now holds ``key`` (``nbytes`` big)."""
@@ -50,8 +67,9 @@ class PlacementDirectory:
                     del self._placement[key]
 
     def drop_worker(self, worker_id: int) -> None:
-        """Worker left/died: all of its replicas are gone."""
+        """Worker left/died: all of its replicas (and address) are gone."""
         with self._lock:
+            self._addresses.pop(worker_id, None)
             for key in list(self._placement):
                 self.evict(worker_id, key)
 

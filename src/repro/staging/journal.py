@@ -58,6 +58,13 @@ class WriteAheadJournal:
         self._lock = threading.Lock()
         self._repair_torn_tail(path)
         self._fh = open(path, "a", encoding="utf-8")  # noqa: SIM115
+        # Journal bytes accumulated since the last truncating snapshot —
+        # the byte-based compaction trigger reads this, so an existing
+        # (replayed) tail counts toward the first checkpoint too.
+        try:
+            self.appended_bytes = os.path.getsize(path)
+        except OSError:
+            self.appended_bytes = 0
 
     @staticmethod
     def _repair_torn_tail(path: str) -> None:
@@ -85,11 +92,13 @@ class WriteAheadJournal:
 
     def append(self, entry: dict[str, Any]) -> None:
         with self._lock:
-            self._fh.write(json.dumps(entry, separators=(",", ":")) + "\n")
+            line = json.dumps(entry, separators=(",", ":")) + "\n"
+            self._fh.write(line)
             self._fh.flush()
             if self.fsync:
                 os.fsync(self._fh.fileno())
             self.appends += 1
+            self.appended_bytes += len(line)
 
     def snapshot(self, state: dict[str, Any]) -> None:
         """Checkpoint: persist ``state``, then truncate the journal."""
@@ -102,6 +111,7 @@ class WriteAheadJournal:
             os.replace(tmp, self.snap_path)
             self._fh.close()
             self._fh = open(self.path, "w", encoding="utf-8")  # noqa: SIM115
+            self.appended_bytes = 0
 
     def close(self) -> None:
         with self._lock:
@@ -148,9 +158,20 @@ class DirectoryService:
         directory: Optional[PlacementDirectory] = None,
         *,
         snapshot_every: int = 512,
+        snapshot_bytes: Optional[int] = None,
     ):
         self.directory = directory or PlacementDirectory()
         self.snapshot_every = max(int(snapshot_every), 1)
+        # Byte-keyed compaction: when set, a checkpoint triggers once the
+        # journal grows past this many bytes since the last snapshot —
+        # replay time is bounded by bytes-to-parse, not append count
+        # (entries vary 20x in size), so this is the scale-stable knob.
+        self.snapshot_bytes = snapshot_bytes
+        # Serializes append+apply against checkpoint: an entry journaled
+        # by one thread while another builds the snapshot state must not
+        # be truncated away with its mutation in neither file (mutators
+        # arrive from Manager, endpoint dispatcher, and worker threads).
+        self._mu = threading.RLock()
         self.completed: set[int] = set()
         self.leases: dict[int, int] = {}     # stage uid -> worker id
         self.pending: list[int] = []         # noted, never completed
@@ -174,6 +195,8 @@ class DirectoryService:
         self.completed = set(snap.get("completed", []))
         self.leases = {int(k): int(v) for k, v in snap.get("leases", {}).items()}
         self.pending = list(snap.get("pending", []))
+        for wid, addr in snap.get("addresses", {}).items():
+            self.directory.set_address(int(wid), addr)
 
     def _apply(self, entry: dict) -> None:
         e = entry.get("e")
@@ -183,6 +206,8 @@ class DirectoryService:
             )
         elif e == "evi":
             self.directory.evict(int(entry["w"]), decode_key(entry["k"]))
+        elif e == "addr":
+            self.directory.set_address(int(entry["w"]), entry["a"])
         elif e == "drop":
             self.directory.drop_worker(int(entry["w"]))
             self.leases = {
@@ -212,47 +237,68 @@ class DirectoryService:
 
     def _applied(self) -> None:
         self._mutations += 1
-        if self._mutations % self.snapshot_every == 0:
+        if self.snapshot_bytes is not None:
+            if self.journal.appended_bytes >= self.snapshot_bytes:
+                self.checkpoint()
+        elif self._mutations % self.snapshot_every == 0:
             self.checkpoint()
 
     def record(self, worker_id: int, key: RegionKey, nbytes: int) -> None:
-        self._log({"e": "rec", "w": worker_id, "k": _jsonable_key(key), "n": nbytes})
-        self.directory.record(worker_id, key, nbytes)
-        self._applied()
+        with self._mu:
+            self._log(
+                {"e": "rec", "w": worker_id, "k": _jsonable_key(key), "n": nbytes}
+            )
+            self.directory.record(worker_id, key, nbytes)
+            self._applied()
+
+    def set_address(self, worker_id: int, address: Any) -> None:
+        """Journal a worker's data-plane bus address: a rehydrated
+        coordinator can answer holder lookups with dialable peers even
+        before the workers re-register (stale addresses fail the dial
+        and fall back to the Manager route, so this is best-effort)."""
+        with self._mu:
+            self._log({"e": "addr", "w": worker_id, "a": address})
+            self.directory.set_address(worker_id, address)
+            self._applied()
 
     def evict(self, worker_id: int, key: RegionKey) -> None:
-        self._log({"e": "evi", "w": worker_id, "k": _jsonable_key(key)})
-        self.directory.evict(worker_id, key)
-        self._applied()
+        with self._mu:
+            self._log({"e": "evi", "w": worker_id, "k": _jsonable_key(key)})
+            self.directory.evict(worker_id, key)
+            self._applied()
 
     def drop_worker(self, worker_id: int) -> None:
-        self._log({"e": "drop", "w": worker_id})
-        self.directory.drop_worker(worker_id)
-        self.leases = {
-            uid: wid for uid, wid in self.leases.items() if wid != worker_id
-        }
-        self._applied()
+        with self._mu:
+            self._log({"e": "drop", "w": worker_id})
+            self.directory.drop_worker(worker_id)
+            self.leases = {
+                uid: wid for uid, wid in self.leases.items() if wid != worker_id
+            }
+            self._applied()
 
     # -- lease lifecycle (Manager hooks) -----------------------------------
 
     def note_pending(self, uid: int) -> None:
-        if uid not in self.pending:
-            self._log({"e": "pend", "u": uid})
-            self.pending.append(uid)
-            self._applied()
+        with self._mu:
+            if uid not in self.pending:
+                self._log({"e": "pend", "u": uid})
+                self.pending.append(uid)
+                self._applied()
 
     def note_lease(self, uid: int, worker_id: int) -> None:
-        self._log({"e": "lease", "u": uid, "w": worker_id})
-        self.leases[uid] = worker_id
-        self._applied()
+        with self._mu:
+            self._log({"e": "lease", "u": uid, "w": worker_id})
+            self.leases[uid] = worker_id
+            self._applied()
 
     def note_complete(self, uid: int) -> None:
-        self._log({"e": "done", "u": uid})
-        self.completed.add(uid)
-        self.leases.pop(uid, None)
-        if uid in self.pending:
-            self.pending.remove(uid)
-        self._applied()
+        with self._mu:
+            self._log({"e": "done", "u": uid})
+            self.completed.add(uid)
+            self.leases.pop(uid, None)
+            if uid in self.pending:
+                self.pending.remove(uid)
+            self._applied()
 
     def outstanding(self) -> list[int]:
         """Stage uids that were pending or leased but never completed —
@@ -267,6 +313,10 @@ class DirectoryService:
     # -- checkpoint --------------------------------------------------------
 
     def checkpoint(self) -> None:
+        with self._mu:
+            self._checkpoint_locked()
+
+    def _checkpoint_locked(self) -> None:
         state = {
             "placement": [
                 [_jsonable_key(k), {str(w): n for w, n in holders.items()}]
@@ -275,6 +325,9 @@ class DirectoryService:
             "completed": sorted(self.completed),
             "leases": {str(u): w for u, w in self.leases.items()},
             "pending": list(self.pending),
+            "addresses": {
+                str(w): a for w, a in self.directory.addresses().items()
+            },
         }
         self.journal.snapshot(state)
 

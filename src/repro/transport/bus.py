@@ -43,8 +43,10 @@ __all__ = [
 
 Handler = Callable[["Peer", Any], Any]
 
-#: Message kinds on the wire.
-REQ, REP, ERR, NTF = "req", "rep", "err", "ntf"
+#: Message kinds on the wire.  ``seg`` carries one chunk of a large
+#: message that was split so bulk region payloads cannot head-of-line
+#: block control traffic sharing the connection.
+REQ, REP, ERR, NTF, SEG = "req", "rep", "err", "ntf", "seg"
 
 
 class BusError(RuntimeError):

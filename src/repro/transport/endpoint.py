@@ -13,15 +13,29 @@ needs no backend-specific code.
 RPC surface
 -----------
 
-worker -> manager: ``register_worker``, ``heartbeat`` (notify),
-``stage_complete`` (notify), ``fetch_region`` / ``fetch_regions``
-(region pull, single / batched), ``region_drop`` (notify — keeps the
-placement directory honest), ``deregister_worker``.
+worker -> manager: ``register_worker`` (carries the worker's data-plane
+address), ``heartbeat`` (notify), ``stage_complete`` (notify),
+``fetch_region`` / ``fetch_regions`` (region pull *relayed through the
+coordinator* — fallback only), ``resolve_regions`` (request — holder
+lookup for the direct data plane: metadata out, bytes never through
+the Manager), ``region_staged`` (notify — a pushed replica landed,
+journal it), ``region_drop`` (notify — keeps the placement directory
+honest), ``deregister_worker``.
 
 manager -> worker: ``submit_stage`` (notify), ``cancel_stage``
 (notify), ``provide_input`` (notify), ``forward_inputs`` (request —
 one batched round-trip replaces a per-dependency mark/provide chat),
-``pull_region`` (request — failover refetch), ``stop``.
+``pull_region`` (request — failover refetch), ``push_request``
+(notify — predictive push: this worker holds a region the predicted
+next holder is missing; ship it over the data plane, racing ahead of
+the lease dispatch), ``region_invalidate`` (notify — stale-holder
+cache invalidation), ``get_stats`` (request), ``stop``.
+
+worker <-> worker (the coordinator-bypass data plane, served by every
+:class:`WorkerClient` on its own bus address): ``pull_region`` /
+``pull_regions`` (sibling region pull — bulk bytes skip the Manager)
+and ``push_region`` (notify — predictive push of sink outputs into the
+target's host tier ahead of its lease).
 
 For multiprocess deployments :func:`spawn_worker` launches
 :func:`worker_main` in a fresh OS process (spawn context, so jax/BLAS
@@ -32,6 +46,7 @@ thread state is never forked mid-flight) from a picklable
 from __future__ import annotations
 
 import importlib
+import queue
 import threading
 import time
 from dataclasses import dataclass, field
@@ -39,6 +54,7 @@ from typing import Any, Callable, Optional
 
 from .bus import BusClosedError, BusError, BusTimeoutError, MessageBus, Peer
 from ..staging.journal import decode_key as _as_key
+from ..staging.tiers import sizeof as _sizeof
 
 __all__ = [
     "ManagerEndpoint",
@@ -71,12 +87,22 @@ class _ProxyStore:
 class WorkerProxy:
     """The Manager-side face of a bus-connected worker."""
 
-    def __init__(self, worker_id: int, peer: Peer, *, has_agent: bool) -> None:
+    def __init__(
+        self,
+        worker_id: int,
+        peer: Peer,
+        *,
+        has_agent: bool,
+        data_address: Any = None,
+    ) -> None:
         self.worker_id = worker_id
         self.peer = peer
         # Manager checks ``getattr(rt, "agent", None) is not None`` to
         # pick push vs agent-pull input forwarding.
         self.agent = True if has_agent else None
+        # Bus address siblings dial for region bytes (None = this worker
+        # serves no data plane; everything relays through the Manager).
+        self.data_address = data_address
         self.store = _ProxyStore()
         # Assigned by Manager.register_worker; the endpoint routes
         # incoming notifies through these.
@@ -128,6 +154,25 @@ class WorkerProxy:
             self._dead = True
             return None
 
+    def invalidate_region(self, key: Any, worker_id: int) -> None:
+        """Stale-holder broadcast: ``worker_id`` dropped ``key``; the
+        worker behind this proxy must purge its directory cache."""
+        self._send("region_invalidate", (key, worker_id))
+
+    def push_region_to(self, key: Any, address: Any) -> None:
+        """Predictive push by a non-completing holder: this worker holds
+        ``key`` and should push it to the sibling at ``address`` (the
+        predicted next holder) — metadata from the Manager, bytes
+        worker-to-worker."""
+        self._send("push_request", (key, address))
+
+    def stats(self) -> dict:
+        """Remote runtime + transport counters (benchmarks/tests)."""
+        try:
+            return dict(self.peer.call("get_stats", timeout=10.0))
+        except BusError:
+            return {}
+
     def shutdown(self, timeout: float = 5.0) -> None:
         try:
             self.peer.call("stop", timeout=timeout)
@@ -152,6 +197,16 @@ class ManagerEndpoint:
         self._peer_worker: dict[Peer, int] = {}
         self._lock = threading.Lock()
         self._registered = threading.Condition(self._lock)
+        # Region payloads served through the coordinator (the relay
+        # fallback).  ~0 on the happy path: the data plane dials
+        # siblings directly and only metadata crosses this endpoint.
+        self.relay_regions = 0
+        self.relay_bytes = 0
+        # key -> worker ids that resolved it: only THEIR holder caches
+        # can name it, so region_drop invalidations go to them alone
+        # (not an O(workers) broadcast per drop).  Entries die with the
+        # invalidation; a re-resolve re-registers.
+        self._resolvers: dict[Any, set[int]] = {}
         self.address = bus.serve(
             {
                 "register_worker": self._h_register,
@@ -160,6 +215,8 @@ class ManagerEndpoint:
                 "stage_complete": self._h_stage_complete,
                 "fetch_region": self._h_fetch_region,
                 "fetch_regions": self._h_fetch_regions,
+                "resolve_regions": self._h_resolve_regions,
+                "region_staged": self._h_region_staged,
                 "region_drop": self._h_region_drop,
             },
             on_disconnect=self._on_disconnect,
@@ -192,7 +249,12 @@ class ManagerEndpoint:
 
     def _h_register(self, peer: Peer, payload: Any):
         wid = int(payload["worker_id"])
-        proxy = WorkerProxy(wid, peer, has_agent=bool(payload.get("has_agent")))
+        proxy = WorkerProxy(
+            wid,
+            peer,
+            has_agent=bool(payload.get("has_agent")),
+            data_address=payload.get("address"),
+        )
         with self._registered:
             # A relaunched worker reuses its id: forget the dead peer's
             # mapping so its (possibly lagging) disconnect can never be
@@ -203,7 +265,7 @@ class ManagerEndpoint:
             self.proxies[wid] = proxy
             self._peer_worker[peer] = wid
             self._registered.notify_all()
-        self.manager.register_worker(proxy)
+        self.manager.register_worker(proxy, address=proxy.data_address)
         return {"ok": True, "window": self.manager.cfg.window}
 
     def _h_deregister(self, peer: Peer, payload: Any):
@@ -219,6 +281,10 @@ class ManagerEndpoint:
             proxy.on_heartbeat(proxy.worker_id)
 
     def _h_stage_complete(self, peer: Peer, payload: Any) -> None:
+        """Completion ingest (notify).  Predictive-push routing happens
+        inside the Manager: push_request notifies to the holders go out
+        before the dependent leases are dispatched, so the pushed bytes
+        race ahead of the lease round-trip."""
         proxy = self._proxy_of(peer)
         if proxy is None or proxy.on_stage_complete is None:
             return
@@ -228,16 +294,65 @@ class ManagerEndpoint:
             proxy.on_stage_complete(si, outputs)
 
     def _h_fetch_region(self, peer: Peer, payload: Any):
-        return self.manager._fetch_region(_as_key(payload))  # noqa: SLF001
+        value = self.manager._fetch_region(_as_key(payload))  # noqa: SLF001
+        if value is not None:
+            self.relay_regions += 1
+            self.relay_bytes += _sizeof(value)
+        return value
 
     def _h_fetch_regions(self, peer: Peer, payload: Any):
         keys = [_as_key(k) for k in payload]
-        return tuple(self.manager._fetch_regions(keys))  # noqa: SLF001
+        values = tuple(self.manager._fetch_regions(keys))  # noqa: SLF001
+        for value in values:
+            if value is not None:
+                self.relay_regions += 1
+                self.relay_bytes += _sizeof(value)
+        return values
+
+    def _h_resolve_regions(self, peer: Peer, payload: Any):
+        proxy = self._proxy_of(peer)
+        exclude = proxy.worker_id if proxy is not None else None
+        keys = [_as_key(k) for k in payload]
+        resolved = self.manager.resolve_regions(keys, exclude=exclude)
+        if proxy is not None:
+            with self._lock:
+                for key, holder in zip(keys, resolved):
+                    if holder is not None:
+                        self._resolvers.setdefault(key, set()).add(
+                            proxy.worker_id
+                        )
+        return tuple(resolved)
+
+    def _h_region_staged(self, peer: Peer, payload: Any) -> None:
+        proxy = self._proxy_of(peer)
+        if proxy is None:
+            return
+        key, nbytes = payload
+        self.manager.region_staged(proxy.worker_id, _as_key(key), int(nbytes))
 
     def _h_region_drop(self, peer: Peer, payload: Any) -> None:
         proxy = self._proxy_of(peer)
-        if proxy is not None and proxy.store.on_drop is not None:
-            proxy.store.on_drop(_as_key(payload))
+        if proxy is None:
+            return
+        key = _as_key(payload)
+        if proxy.store.on_drop is not None:
+            proxy.store.on_drop(key)
+        # Stale-holder invalidation: only workers that resolved this key
+        # can have it cached — tell exactly those to forget the replica
+        # before their next direct dial targets a holder that spilled
+        # it.  (Their caches drop the entry, so the registration dies
+        # with the notify; a later re-resolve re-registers.)
+        with self._lock:
+            wids = self._resolvers.pop(key, ())
+            targets = [
+                self.proxies[wid]
+                for wid in wids
+                if wid != proxy.worker_id
+                and wid in self.proxies
+                and self.proxies[wid].alive
+            ]
+        for p in targets:
+            p.invalidate_region(key, proxy.worker_id)
 
     def _proxy_of(self, peer: Peer) -> Optional[WorkerProxy]:
         with self._lock:
@@ -257,12 +372,55 @@ class ManagerEndpoint:
 
 
 class WorkerClient:
-    """Bridges a local WorkerRuntime onto a Manager's bus endpoint."""
+    """Bridges a local WorkerRuntime onto a Manager's bus endpoint.
 
-    def __init__(self, runtime, bus: MessageBus, address: str) -> None:
+    Beyond the control plane, the client serves this worker's side of
+    the *data plane*: a second bus address siblings dial directly for
+    region bytes (``pull_region(s)``) and predictive pushes
+    (``push_region``) — the coordinator routes metadata, never bulk
+    payloads, on the happy path.
+    """
+
+    def __init__(
+        self,
+        runtime,
+        bus: MessageBus,
+        address: str,
+        *,
+        data_plane: bool = True,
+        push_grace: Optional[float] = None,
+    ) -> None:
         self.runtime = runtime
         self.bus = bus
         self._stop = threading.Event()
+        # Sibling peer cache: data-plane address -> dialed Peer.
+        self._siblings: dict[Any, Peer] = {}
+        self._sibling_lock = threading.Lock()
+        # Data-plane traffic counters (benchmarks/tests).
+        self.pushes = 0
+        self.pushed_bytes = 0
+        self.push_ingests = 0
+        self.served_regions = 0
+        self.served_bytes = 0
+        self.data_address: Optional[str] = None
+        if data_plane:
+            self.data_address = bus.serve(
+                {
+                    "pull_region": self._h_peer_pull,
+                    "pull_regions": self._h_peer_pull_batch,
+                    "push_region": self._h_peer_push,
+                }
+            )
+        # Pushes run off a dedicated thread: the lane thread that
+        # completed the stage must not serialize megabytes of encode +
+        # send before starting its next op (async data copy, §IV-D).
+        self._push_queue: "queue.Queue[Optional[tuple]]" = queue.Queue()
+        self._push_thread = threading.Thread(
+            target=self._push_loop,
+            daemon=True,
+            name=f"push-{runtime.worker_id}",
+        )
+        self._push_thread.start()
         self.peer = bus.connect(
             address,
             {
@@ -271,6 +429,9 @@ class WorkerClient:
                 "provide_input": self._h_provide,
                 "forward_inputs": self._h_forward,
                 "pull_region": self._h_pull,
+                "push_request": self._h_push_request,
+                "region_invalidate": self._h_invalidate,
+                "get_stats": self._h_stats,
                 "stop": self._h_stop,
             },
         )
@@ -280,11 +441,19 @@ class WorkerClient:
         runtime.fetch_region = self._fetch_region
         runtime.fetch_regions = self._fetch_regions
         runtime.store.on_drop = lambda key: self._notify("region_drop", key)
+        # Data plane: the staging agent resolves holders through the
+        # Manager's directory (cached) and dials siblings directly.
+        if self.data_address is not None and runtime.agent is not None:
+            runtime.agent.resolve = self._resolve_holders
+            runtime.agent.dial = self._dial_fetch
+            if push_grace is not None:
+                runtime.agent.push_grace = push_grace
         reply = self.peer.call(
             "register_worker",
             {
                 "worker_id": runtime.worker_id,
                 "has_agent": runtime.agent is not None,
+                "address": self.data_address,
             },
         )
         self.window = int(reply.get("window", 0)) if reply else 0
@@ -292,7 +461,34 @@ class WorkerClient:
     # -- runtime -> manager ------------------------------------------------
 
     def _stage_complete(self, si, outputs: dict[str, Any]) -> None:
+        # The Manager answers with push_request notifies (predictive
+        # push) racing ahead of the dependent leases it dispatches.
         self._notify("stage_complete", (si.uid, outputs))
+
+    def _push_loop(self) -> None:
+        """Drain queued pushes off the critical path (lane threads only
+        enqueue; this thread pays the encode + send)."""
+        while True:
+            item = self._push_queue.get()
+            if item is None:
+                return
+            key, addr, value = item
+            if value is None:
+                value = self.runtime.pull_region(key)
+            if value is None:
+                continue  # already evicted here: target pulls instead
+            peer = self._sibling(addr)
+            if peer is None:
+                continue
+            try:
+                peer.notify(
+                    "push_region", (self.runtime.worker_id, key, value)
+                )
+            except BusError:
+                self._drop_sibling(addr)
+                continue
+            self.pushes += 1
+            self.pushed_bytes += _sizeof(value)
 
     def _fetch_region(self, key):
         # Pull failures (Manager restarting, bus timeout) degrade to a
@@ -316,6 +512,87 @@ class WorkerClient:
         except BusClosedError:
             pass  # manager gone; the runtime keeps draining locally
 
+    # -- data plane: holder resolution + sibling dialing --------------------
+
+    def _resolve_holders(self, keys) -> Optional[list]:
+        try:
+            out = self.peer.call("resolve_regions", tuple(keys))
+        except BusError:
+            return None  # coordinator unreachable: agent uses the relay
+        return [tuple(h) if h is not None else None for h in out]
+
+    def _dial_fetch(self, holder, keys) -> Optional[list]:
+        """Pull ``keys`` straight from sibling ``holder=(wid, addr)``."""
+        _, addr = holder
+        peer = self._sibling(addr)
+        if peer is None:
+            return None
+        try:
+            return list(peer.call("pull_regions", tuple(keys)))
+        except BusError:
+            self._drop_sibling(addr)
+            return None
+
+    def _sibling(self, addr) -> Optional[Peer]:
+        if addr is None or addr == self.data_address:
+            return None
+        with self._sibling_lock:
+            peer = self._siblings.get(addr)
+            if peer is not None and peer.alive:
+                return peer
+        try:
+            peer = self.bus.connect(addr, {})
+        except Exception:  # noqa: BLE001 - holder gone: caller falls back
+            return None
+        with self._sibling_lock:
+            # Another thread (prefetch vs push) may have dialed the same
+            # sibling concurrently: keep one connection, close the loser
+            # (and any dead entry being replaced) so peers never leak.
+            current = self._siblings.get(addr)
+            if current is not None and current.alive:
+                loser, peer = peer, current
+            else:
+                loser = current
+                self._siblings[addr] = peer
+        if loser is not None:
+            loser.close()
+        return peer
+
+    def _drop_sibling(self, addr) -> None:
+        with self._sibling_lock:
+            peer = self._siblings.pop(addr, None)
+        if peer is not None:
+            peer.close()
+
+    # -- data plane: serving siblings ---------------------------------------
+
+    def _h_peer_pull(self, peer: Peer, payload: Any):
+        value = self.runtime.pull_region(_as_key(payload))
+        if value is not None:
+            self.served_regions += 1
+            self.served_bytes += _sizeof(value)
+        return value
+
+    def _h_peer_pull_batch(self, peer: Peer, payload: Any):
+        values = tuple(
+            self.runtime.pull_region(_as_key(k)) for k in payload
+        )
+        for value in values:
+            if value is not None:
+                self.served_regions += 1
+                self.served_bytes += _sizeof(value)
+        return values
+
+    def _h_peer_push(self, peer: Peer, payload: Any) -> None:
+        src_wid, key, value = payload
+        key = _as_key(key)
+        nbytes = self.runtime.ingest_push(key, value)
+        if nbytes:
+            self.push_ingests += 1
+            # Confirm the replica so the directory journals it: after a
+            # coordinator restart the pushed copy is still findable.
+            self._notify("region_staged", (key, nbytes))
+
     # -- manager -> runtime ------------------------------------------------
 
     def _h_submit(self, peer: Peer, payload: Any) -> None:
@@ -329,11 +606,40 @@ class WorkerClient:
         self.runtime.provide_input(int(uid), value)
 
     def _h_forward(self, peer: Peer, payload: Any):
-        items = [(int(uid), value, bool(push)) for uid, value, push in payload]
+        items = [
+            (
+                int(item[0]),
+                item[1],
+                bool(item[2]),
+                bool(item[3]) if len(item) > 3 else False,
+            )
+            for item in payload
+        ]
         return tuple(self.runtime.forward_inputs(items))
 
     def _h_pull(self, peer: Peer, payload: Any):
         return self.runtime.pull_region(_as_key(payload))
+
+    def _h_push_request(self, peer: Peer, payload: Any) -> None:
+        """Manager-directed push: this worker holds the region; ship it
+        to the predicted next holder's data plane."""
+        key, addr = payload
+        self._push_queue.put((_as_key(key), addr, None))
+
+    def _h_invalidate(self, peer: Peer, payload: Any) -> None:
+        key, wid = payload
+        self.runtime.invalidate_region(_as_key(key), int(wid))
+
+    def _h_stats(self, peer: Peer, payload: Any) -> dict:
+        stats = dict(self.runtime.stats())
+        stats["transport"] = {
+            "pushes": self.pushes,
+            "pushed_bytes": self.pushed_bytes,
+            "push_ingests": self.push_ingests,
+            "served_regions": self.served_regions,
+            "served_bytes": self.served_bytes,
+        }
+        return stats
 
     def _h_stop(self, peer: Peer, payload: Any) -> bool:
         self._stop.set()
@@ -345,6 +651,13 @@ class WorkerClient:
 
     def close(self) -> None:
         self._stop.set()
+        self._push_queue.put(None)
+        self._push_thread.join(timeout=2.0)
+        with self._sibling_lock:
+            siblings = list(self._siblings.values())
+            self._siblings.clear()
+        for peer in siblings:
+            peer.close()
         self.peer.close()
 
 
@@ -368,8 +681,10 @@ class WorkerSpec:
     policy: str = "fcfs"
     chaining: bool = False
     micro_batch: int = 1
+    batch_budget: Optional[float] = None  # adaptive micro-batch sizing
     staging: bool = True               # build a StagingConfig (prefetch agent)
     host_budget_bytes: Optional[int] = None
+    data_plane: bool = True            # serve worker-to-worker transfers
     extra: dict[str, Any] = field(default_factory=dict)
 
 
@@ -395,6 +710,7 @@ def worker_main(address: str, spec: WorkerSpec) -> None:
         policy=spec.policy,
         chaining=spec.chaining,
         micro_batch=spec.micro_batch,
+        batch_budget=spec.batch_budget,
         staging=staging,
         variant_registry=registry,
         **spec.extra,
@@ -403,7 +719,7 @@ def worker_main(address: str, spec: WorkerSpec) -> None:
     from .socketbus import SocketBus
 
     bus = SocketBus()
-    client = WorkerClient(runtime, bus, address)
+    client = WorkerClient(runtime, bus, address, data_plane=spec.data_plane)
     try:
         client.wait()
     finally:

@@ -88,13 +88,15 @@ class InprocBus(MessageBus):
     def __init__(self) -> None:
         super().__init__()
         self._peers: list[_InprocPeer] = []
-        self._address: Optional[str] = None
+        # One bus may serve several endpoints (e.g. a WorkerClient's
+        # control connection plus its worker-to-worker data plane).
+        self._addresses: list[str] = []
 
     def serve(self, handlers, *, on_connect=None, on_disconnect=None) -> str:
         address = f"inproc://{next(self._addr_counter)}"
         with self._registry_lock:
             self._registry[address] = (dict(handlers), on_connect, on_disconnect)
-        self._address = address
+        self._addresses.append(address)
         return address
 
     def connect(self, address: str, handlers=None) -> Peer:
@@ -115,6 +117,6 @@ class InprocBus(MessageBus):
     def close(self) -> None:
         for peer in self._peers:
             peer.close()
-        if self._address is not None:
-            with self._registry_lock:
-                self._registry.pop(self._address, None)
+        with self._registry_lock:
+            for address in self._addresses:
+                self._registry.pop(address, None)

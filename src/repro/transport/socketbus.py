@@ -6,7 +6,7 @@ One TCP connection per peer pair, used full-duplex; either side may
     [4-byte big-endian length][codec bytes of a tuple of messages]
 
 and each message is ``(kind, msg_id, method, payload)`` with kind one
-of ``req``/``rep``/``err``/``ntf``.
+of ``req``/``rep``/``err``/``ntf``/``seg``.
 
 Three threads per peer:
 
@@ -20,6 +20,17 @@ Three threads per peer:
   an in-flight call), requests/notifies go to the dispatch queue.
 * **dispatcher** — runs handlers one at a time in arrival order:
   per-peer ordered delivery.
+
+Large messages (region payloads on the worker-to-worker data plane,
+push bytes) are *segmented*: the message is encoded once, split into
+``max_frame_bytes`` chunks riding ``seg`` messages through a separate
+bulk queue, and reassembled by the receiver.  The sender always ships
+every queued control message plus at most ~one frame's worth of bulk
+chunks per frame, so a multi-megabyte region transfer cannot
+head-of-line block a heartbeat or a lease dispatch sharing the
+connection.  The price is that a *bulk* message may be overtaken by a
+control message enqueued after it (ordering still holds among control
+messages and among the chunks of one bulk message).
 """
 
 from __future__ import annotations
@@ -36,6 +47,7 @@ from .bus import (
     NTF,
     REP,
     REQ,
+    SEG,
     BusClosedError,
     BusTimeoutError,
     Handler,
@@ -44,6 +56,7 @@ from .bus import (
     RemoteError,
 )
 from .codec import WireCodec, default_codec
+from ..staging.tiers import sizeof as _sizeof
 
 __all__ = ["SocketBus", "SocketPeer"]
 
@@ -92,11 +105,19 @@ class SocketPeer(Peer):
         self._closed = False
         self._dispatch: deque[tuple] = deque()
         self._dispatch_ready = threading.Condition(threading.Lock())
+        # Streamed/chunked path for large messages: pre-encoded chunks
+        # waiting to ride frames (control messages always jump ahead).
+        self.max_frame_bytes = bus.max_frame_bytes
+        self._bulk: deque[tuple] = deque()
+        self._seg_id = 0
+        self._reassembly: dict[int, bytearray] = {}  # receiver thread only
         # Per-peer traffic counters.
         self.sent_messages = 0
         self.sent_frames = 0
+        self.sent_segments = 0
         self.recv_messages = 0
         self.recv_frames = 0
+        self.recv_segments = 0
         self._threads = [
             threading.Thread(target=fn, daemon=True, name=f"{name}-{tag}")
             for tag, fn in (
@@ -118,8 +139,7 @@ class SocketPeer(Peer):
             self._msg_id += 1
             msg_id = self._msg_id
             self._pending[msg_id] = pending
-            self._outgoing.append((REQ, msg_id, method, payload))
-            self._send_ready.notify()
+            self._enqueue_locked((REQ, msg_id, method, payload))
         try:
             if not pending.event.wait(timeout=timeout):
                 raise BusTimeoutError(f"{self.name}: no reply to {method!r}")
@@ -135,8 +155,7 @@ class SocketPeer(Peer):
             if self._closed:
                 raise BusClosedError(f"{self.name}: closed ({method!r})")
             self._msg_id += 1
-            self._outgoing.append((NTF, self._msg_id, method, payload))
-            self._send_ready.notify()
+            self._enqueue_locked((NTF, self._msg_id, method, payload))
 
     def close(self) -> None:
         self._teardown(notify_disconnect=False)
@@ -174,23 +193,62 @@ class SocketPeer(Peer):
             except Exception:  # noqa: BLE001 - teardown must not raise
                 pass
 
+    def _enqueue_locked(self, msg: tuple) -> None:
+        """Queue a message for the sender (``_send_lock`` held).
+
+        Large payloads take the chunked path: the message is encoded
+        once, split into ``max_frame_bytes`` segments, and queued on the
+        bulk deque — control messages enqueued later still overtake the
+        remaining chunks, so region bytes never head-of-line block a
+        heartbeat or a lease riding the same connection.
+        """
+        self.sent_messages += 1
+        with self.bus._lock:
+            self.bus.messages_sent += 1
+        limit = self.max_frame_bytes
+        if limit and _sizeof(msg[3]) > limit:
+            data = self.codec.encode(msg)
+            if len(data) > limit:
+                self._seg_id += 1
+                sid = self._seg_id
+                n = (len(data) + limit - 1) // limit
+                for i in range(n):
+                    chunk = data[i * limit:(i + 1) * limit]
+                    self._bulk.append((SEG, sid, (i, n), chunk))
+                self.sent_segments += n
+                self._send_ready.notify()
+                return
+        self._outgoing.append(msg)
+        self._send_ready.notify()
+
     def _sender_loop(self) -> None:
         while True:
             with self._send_lock:
-                while not self._outgoing and not self._closed:
+                while (
+                    not self._outgoing and not self._bulk and not self._closed
+                ):
                     self._send_ready.wait(timeout=0.25)
                 if self._closed:
                     return
-                # Coalesce: every message queued right now rides one frame.
-                batch = tuple(self._outgoing)
+                # Coalesce: every control message queued right now rides
+                # one frame, plus at most ~one frame's worth of bulk
+                # segments (so later control messages can interleave
+                # between the chunks of a large region transfer).
+                batch = list(self._outgoing)
                 self._outgoing.clear()
+                budget = self.max_frame_bytes or None
+                while self._bulk:
+                    seg = self._bulk.popleft()
+                    batch.append(seg)
+                    if budget is not None:
+                        budget -= len(seg[3])
+                        if budget <= 0:
+                            break
             try:
-                data = self.codec.encode(batch)
+                data = self.codec.encode(tuple(batch))
                 with self._send_lock:
-                    self.sent_messages += len(batch)
                     self.sent_frames += 1
                 with self.bus._lock:
-                    self.bus.messages_sent += len(batch)
                     self.bus.frames_sent += 1
                 self._sock.sendall(_LEN.pack(len(data)) + data)
             except (OSError, ConnectionError):
@@ -208,21 +266,38 @@ class SocketPeer(Peer):
                 return
             self.recv_frames += 1
             for msg in frame:
-                self.recv_messages += 1
-                kind, msg_id = msg[0], msg[1]
-                if kind in (REP, ERR):
-                    with self._send_lock:
-                        pending = self._pending.get(msg_id)
-                    if pending is not None:
-                        if kind == ERR:
-                            pending.error = RemoteError(str(msg[3]))
-                        else:
-                            pending.result = msg[3]
-                        pending.event.set()
-                else:  # REQ / NTF: ordered dispatch off the receiver thread
-                    with self._dispatch_ready:
-                        self._dispatch.append(msg)
-                        self._dispatch_ready.notify()
+                self._handle_message(msg)
+
+    def _handle_message(self, msg: tuple) -> None:
+        kind, msg_id = msg[0], msg[1]
+        if kind == SEG:
+            # Chunk of a segmented message: reassemble (chunks of one
+            # message arrive in order on this connection), then handle
+            # the decoded inner message as if it arrived whole.  Only
+            # the reassembled logical message counts toward
+            # recv_messages, mirroring the sender's accounting.
+            self.recv_segments += 1
+            idx, total = msg[2]
+            buf = self._reassembly.setdefault(msg_id, bytearray())
+            buf += msg[3]
+            if idx + 1 >= total:
+                del self._reassembly[msg_id]
+                self._handle_message(self.codec.decode(bytes(buf)))
+            return
+        self.recv_messages += 1
+        if kind in (REP, ERR):
+            with self._send_lock:
+                pending = self._pending.get(msg_id)
+            if pending is not None:
+                if kind == ERR:
+                    pending.error = RemoteError(str(msg[3]))
+                else:
+                    pending.result = msg[3]
+                pending.event.set()
+        else:  # REQ / NTF: ordered dispatch off the receiver thread
+            with self._dispatch_ready:
+                self._dispatch.append(msg)
+                self._dispatch_ready.notify()
 
     def _dispatcher_loop(self) -> None:
         while True:
@@ -253,17 +328,23 @@ class SocketPeer(Peer):
         with self._send_lock:
             if self._closed:
                 raise BusClosedError(f"{self.name}: closed (reply {method!r})")
-            self._outgoing.append((kind, msg_id, method, payload))
-            self._send_ready.notify()
+            self._enqueue_locked((kind, msg_id, method, payload))
 
 
 class SocketBus(MessageBus):
     def __init__(
-        self, host: str = "127.0.0.1", codec: Optional[WireCodec] = None
+        self,
+        host: str = "127.0.0.1",
+        codec: Optional[WireCodec] = None,
+        *,
+        max_frame_bytes: int = 1 << 20,
     ) -> None:
         super().__init__()
         self.host = host
         self.codec = codec or default_codec()
+        # Messages whose encoded size exceeds this ride the chunked bulk
+        # path (0 disables segmentation: everything coalesces as before).
+        self.max_frame_bytes = int(max_frame_bytes)
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._peers: list[SocketPeer] = []
