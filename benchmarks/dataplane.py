@@ -189,7 +189,13 @@ def _bench_first_touch() -> dict[str, float]:
 _E2E_ITERS = 10
 
 
-def _run_e2e_iters(bus_factory, *, push: bool, iters: int = _E2E_ITERS):
+def _run_e2e_iters(
+    bus_factory,
+    *,
+    push: bool,
+    iters: int = _E2E_ITERS,
+    push_cap: int | None = None,
+):
     """Deterministic pull-vs-push comparison: ``iters`` sequential
     one-tile fan-ins on a persistent 2-worker cluster.
 
@@ -230,6 +236,7 @@ def _run_e2e_iters(bus_factory, *, push: bool, iters: int = _E2E_ITERS):
                 ManagerConfig(
                     window=1, locality_aware=True, backup_tasks=False,
                     heartbeat_timeout=120.0, predictive_push=push,
+                    push_inflight_cap_bytes=push_cap,
                 ),
             )
             endpoint = T.ManagerEndpoint(mgr, bus_factory())

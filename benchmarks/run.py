@@ -35,6 +35,8 @@ def main() -> None:
                     help="path for the pr3 bench JSON (default: BENCH_PR3.json)")
     ap.add_argument("--pr4-json", default=None,
                     help="path for the pr4 bench JSON (default: BENCH_PR4.json)")
+    ap.add_argument("--pr5-json", default=None,
+                    help="path for the pr5 bench JSON (default: BENCH_PR5.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -42,7 +44,8 @@ def main() -> None:
     selected = (
         args.only.split(",")
         if args.only
-        else list(ALL_BENCHES) + ["staging", "pr2", "pr3", "pr4", "roofline"]
+        else list(ALL_BENCHES)
+        + ["staging", "pr2", "pr3", "pr4", "pr5", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -60,6 +63,10 @@ def main() -> None:
                 from benchmarks.dataplane import bench_pr4
 
                 bench_rows = bench_pr4(args.pr4_json)
+            elif name == "pr5":
+                from benchmarks.network import bench_pr5
+
+                bench_rows = bench_pr5(args.pr5_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

@@ -1,0 +1,19 @@
+"""Reproduction of *High-throughput Execution of Hierarchical Analysis
+Pipelines on Hybrid Cluster Platforms* (cs.DC 2012), grown into a
+cluster middleware with a real transport, a hierarchical data-staging
+subsystem, a network-aware data plane, and a calibrated discrete-event
+simulator.
+
+Package map (see ``docs/architecture.md`` for the full picture):
+
+* :mod:`repro.core`      — Manager / Worker runtime, scheduler,
+  workflow graphs, calibrated simulator, per-link network model.
+* :mod:`repro.transport` — pluggable MessageBus control plane +
+  worker-to-worker data plane (Inproc / Socket backends).
+* :mod:`repro.staging`   — tiered region stores, staging agents,
+  placement directory and locality/rack-aware placement policy.
+* :mod:`repro.app`       — the flagship whole-slide-image analysis
+  pipeline (segmentation -> feature fan-out).
+* :mod:`repro.kernels`   — accelerator kernels (jax/pallas) with CPU
+  reference implementations.
+"""

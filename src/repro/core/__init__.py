@@ -6,6 +6,7 @@
 * :mod:`repro.core.worker` — threaded Worker Resource Manager
 * :mod:`repro.core.manager` — demand-driven Manager (fault tolerant)
 * :mod:`repro.core.simulator` — discrete-event cluster simulator
+* :mod:`repro.core.network` — per-link topology model (flat / fat-tree)
 * :mod:`repro.core.calibration` — paper-calibrated workload model
 * :mod:`repro.core.cost_model` — roofline PATS estimates (TPU plane)
 
@@ -17,6 +18,7 @@ is wired through the Manager/Worker/simulator here.
 from .calibration import OP_PROFILES, PIPELINE_ORDER
 from .cost_model import OpCost, estimate_speedup, roofline_terms
 from .manager import Manager, ManagerConfig
+from .network import FatTreeNetwork, FlatNetwork, NetworkModel, build_network
 from .scheduling import ReadyScheduler, SchedulerStats
 from .simulator import ClusterSim, SimConfig, SimResult, run_simulation
 from .variants import FunctionVariant, VariantRegistry, registry
@@ -37,10 +39,13 @@ __all__ = [
     "ConcreteWorkflow",
     "DataChunk",
     "DeviceMemory",
+    "FatTreeNetwork",
+    "FlatNetwork",
     "FunctionVariant",
     "LaneSpec",
     "Manager",
     "ManagerConfig",
+    "NetworkModel",
     "OpContext",
     "OpCost",
     "Operation",
@@ -55,6 +60,7 @@ __all__ = [
     "StageInstance",
     "VariantRegistry",
     "WorkerRuntime",
+    "build_network",
     "estimate_speedup",
     "registry",
     "roofline_terms",

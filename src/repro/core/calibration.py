@@ -180,6 +180,11 @@ class NodeConfig:
     # host/disk tier budgets from these instead of hand-set constants.
     host_ram_gb: float = 24.0
     scratch_disk_gb: float = 250.0
+    # Cluster wiring: nodes per rack / leaf switch.  KIDS packs ~8
+    # compute nodes behind each InfiniBand leaf; the simulator's
+    # fat-tree network model (SimConfig.network="fat_tree") defaults
+    # its rack grouping to this when SimConfig.rack_size is unset.
+    rack_size: int = 8
 
     def cpu_core_efficiency(self, active_cores: int) -> float:
         return 1.0 / (1.0 + self.cpu_bw_alpha * max(active_cores - 1, 0))

@@ -78,6 +78,18 @@ class ManagerConfig:
     # transfer.  Off by default: pull stays the baseline the benchmarks
     # compare against.
     predictive_push: bool = False
+    # Data-plane flow control: cap on push bytes in flight toward any
+    # single worker's ingress.  A push directive that would overflow
+    # the target's cap is *deferred* (per-target queue) instead of
+    # sent; the target's ``region_staged`` confirmation is the credit
+    # grant that drains the queue.  With nothing in flight one push
+    # always goes (a region larger than the cap degrades to
+    # pull-on-lease, never a permanent stall); a dead target voids its
+    # whole ledger so the cap cannot deadlock on a corpse.  None = the
+    # pre-flow-control behavior (push storms queue unbounded bytes on
+    # the target's ingress).  The simulator mirrors this knob as
+    # ``SimConfig.push_inflight_cap_bytes``.
+    push_inflight_cap_bytes: Optional[int] = None
 
 
 @dataclass
@@ -86,6 +98,17 @@ class _WorkerState:
     leases: set[int] = field(default_factory=set)
     last_heartbeat: float = field(default_factory=time.monotonic)
     dead: bool = False
+
+
+@dataclass
+class _PushInFlight:
+    """One in-flight push toward a target worker: dedup entry for the
+    predictor, reserved bytes for the ingress cap, and the inbound
+    hint ``forward_inputs`` hands the target's staging agent."""
+
+    t: float              # when the push directive went out
+    nbytes: int           # bytes reserved against the target's cap
+    leased: bool = False  # a dependent lease already consumed the hint
 
 
 class Manager:
@@ -126,10 +149,23 @@ class Manager:
         self.relay_bytes = 0
         self.push_directives = 0       # pushes delegated to a WorkerClient
         self.pushes_inline = 0         # in-process targets injected directly
-        # (target worker, dep op uid) -> predict time: keys a push was
-        # directed toward, so the target's forward_inputs can defer its
-        # own pull of the same bytes (grace-bounded on the worker side).
-        self._push_inbound: dict[tuple[int, int], float] = {}
+        # (target worker, region key) -> in-flight push ledger.  One
+        # structure serves three roles: predictor dedup (a push already
+        # racing toward the target is not re-sent), ingress byte
+        # accounting for flow control (push_inflight_cap_bytes), and
+        # the inbound hint forward_inputs consumes so the target's
+        # agent defers its duplicate pull.  Entries retire on the
+        # target's region_staged credit, on expiry (push evidently
+        # lost), or when the target dies.
+        self._push_inbound: dict[tuple[int, Any], _PushInFlight] = {}
+        self._push_inflight_bytes: dict[int, int] = {}  # twid -> reserved
+        # Flow control: directives queued behind a full ingress cap,
+        # drained oldest-first as region_staged credits return.
+        self._push_deferred: dict[int, deque] = {}
+        self._push_deferred_keys: set[tuple[int, Any]] = set()
+        self.pushes_deferred = 0       # directives that waited for credit
+        self.pushes_dropped = 0        # deferred directives voided (death)
+        self.push_inflight_peak: dict[int, int] = {}  # max reserved/target
         self._done_event = threading.Event()
         self._monitor: Optional[threading.Thread] = None
         self._stop_monitor = False
@@ -137,7 +173,10 @@ class Manager:
     # -- membership -------------------------------------------------------
 
     def register_worker(
-        self, runtime: WorkerRuntime, address: Any = None
+        self,
+        runtime: WorkerRuntime,
+        address: Any = None,
+        rack: Any = None,
     ) -> None:
         runtime.on_stage_complete = self._make_completion_cb(runtime.worker_id)
         runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
@@ -180,11 +219,18 @@ class Manager:
                         self.recovered_leases += 1
                         self._push_pending_locked(self.cw.stage_instances[uid])
                 self.directory.drop_worker(wid)
+                # Pushes racing toward the dead incarnation are void:
+                # release their reserved ingress bytes.
+                self._abort_push_target_locked(wid)
             self._workers[wid] = _WorkerState(runtime=runtime)
             if address is not None:
                 # Data-plane address: lets sibling workers dial this one
                 # for region bytes instead of relaying through here.
                 self.directory.set_address(wid, address)
+            if rack is not None:
+                # Topology identity: placement scoring can prefer
+                # same-rack replicas (PlacementPolicy.rack_affinity).
+                self.directory.set_rack(wid, rack)
             self._dispatch_all_locked()
 
     def _heartbeat(self, worker_id: int) -> None:
@@ -211,6 +257,7 @@ class Manager:
                     self.recovered_leases += 1
                     self._push_pending_locked(self.cw.stage_instances[uid])
             self.directory.drop_worker(worker_id)
+            self._abort_push_target_locked(worker_id)
             self._dispatch_all_locked()
 
     def _push_pending_locked(self, si: StageInstance) -> None:
@@ -449,8 +496,31 @@ class Manager:
     def region_staged(self, worker_id: int, key: RegionKey, nbytes: int) -> None:
         """A pushed replica landed on ``worker_id``: record it (journaled
         when a DirectoryService backs the directory) so dependents — and
-        a restarted coordinator — can route to the new holder."""
+        a restarted coordinator — can route to the new holder.
+
+        This confirmation is also the flow-control **credit grant**:
+        the landed bytes release their ingress-cap reservation and the
+        target's deferred-push queue drains as far as the freed credit
+        allows.
+        """
         self.directory.record(worker_id, key, int(nbytes))
+        with self._lock:
+            self._release_push_locked((worker_id, key))
+            self._drain_push_deferred_locked(worker_id)
+
+    def push_region_toward(self, key: RegionKey, target_wid: int) -> bool:
+        """Explicitly route one region push toward ``target_wid``
+        through the flow-controlled push path (the same admit / defer /
+        credit accounting the predictive pusher uses).  Returns False
+        when the push cannot be routed at all (unknown or dead target,
+        no live holder with a data plane)."""
+        with self._lock:
+            now = time.monotonic()
+            self._expire_pushes_locked(now)
+            tst = self._workers.get(target_wid)
+            if tst is None or tst.dead or not tst.runtime.alive:
+                return False
+            return self._push_one_locked(None, target_wid, tst, key, now)
 
     def _predict_pushes_locked(
         self, worker_id: int, primary: StageInstance, outputs: dict[str, Any]
@@ -467,10 +537,7 @@ class Manager:
         injected directly (zero copy).  Bytes never touch the Manager.
         """
         now = time.monotonic()
-        if self._push_inbound:  # drop predictions never consumed by a lease
-            self._push_inbound = {
-                k: t for k, t in self._push_inbound.items() if now - t < 10.0
-            }
+        self._expire_pushes_locked(now)
         sink_uids = {
             oi.uid
             for oi in primary.op_instances
@@ -513,11 +580,15 @@ class Manager:
                 cross &= sink_uids
             for dep in sorted(cross):
                 key = op_key(dep)
-                if (twid, key) in pushed or (twid, dep) in self._push_inbound:
-                    continue  # this push is already in flight
+                if (
+                    (twid, key) in pushed
+                    or (twid, key) in self._push_inbound
+                    or (twid, key) in self._push_deferred_keys
+                ):
+                    continue  # this push is already in flight / queued
                 if self.directory.holders(key).get(twid):
                     continue  # the predicted worker already holds it
-                if self._push_one_locked(worker_id, twid, tst, dep, key, now):
+                if self._push_one_locked(worker_id, twid, tst, key, now):
                     pushed.add((twid, key))
 
     def _cross_dep_uids(self, si: StageInstance) -> set[int]:
@@ -561,18 +632,29 @@ class Manager:
 
     def _push_one_locked(
         self,
-        worker_id: int,
+        worker_id: Optional[int],
         twid: int,
         tst: "_WorkerState",
-        dep: int,
         key: RegionKey,
         now: float,
     ) -> bool:
-        """Route one region push toward predicted worker ``twid``."""
+        """Route one region push toward predicted worker ``twid``,
+        subject to the per-target in-flight byte cap: a push that would
+        overflow the target's ingress credit is queued on its deferred
+        list and re-issued when ``region_staged`` credits return."""
+        if (
+            (twid, key) in self._push_inbound
+            or (twid, key) in self._push_deferred_keys
+        ):
+            # Already racing / queued toward this target: a duplicate
+            # request (caller retry) must not double-reserve its bytes.
+            return True
         trt = tst.runtime
         if callable(getattr(trt, "ingest_push", None)):
             # In-process target: the Manager holds the output copy —
-            # the "push" is a reference hand-over, done right here.
+            # the "push" is a reference hand-over, done right here
+            # (zero copy, no ingress queue, so no flow control either).
+            dep = key[1] if isinstance(key, tuple) and len(key) == 2 else None
             dep_oi = self.cw.op_instances.get(dep)
             if dep_oi is None:
                 return False
@@ -584,9 +666,31 @@ class Manager:
             self.directory.record(twid, key, sizeof(value))
             self.pushes_inline += 1
             return True
+        if self.directory.address_of(twid) is None:
+            return False  # target has no data plane: pull remains
+        est = max(self.directory.holders(key).values(), default=0)
+        if not self._push_admit_locked(twid, est):
+            self._push_deferred.setdefault(twid, deque()).append(
+                (worker_id, key)
+            )
+            self._push_deferred_keys.add((twid, key))
+            self.pushes_deferred += 1
+            return True  # queued: the push is owed, not abandoned
+        return self._issue_push_locked(worker_id, twid, tst, key, now, est)
+
+    def _issue_push_locked(
+        self,
+        worker_id: Optional[int],
+        twid: int,
+        tst: "_WorkerState",
+        key: RegionKey,
+        now: float,
+        est: int,
+    ) -> bool:
+        """Send one admitted push directive and reserve its bytes."""
         addr = self.directory.address_of(twid)
         if addr is None:
-            return False  # target has no data plane: pull remains
+            return False
         # Ask a live holder to push (prefer the completing worker: its
         # copy is freshest and its notify is already racing the lease).
         holders = self.directory.holders(key)
@@ -605,9 +709,96 @@ class Manager:
                 continue
             req(key, addr)
             self.push_directives += 1
-            self._push_inbound[(twid, dep)] = now
+            self._push_inbound[(twid, key)] = _PushInFlight(now, est)
+            total = self._push_inflight_bytes.get(twid, 0) + est
+            self._push_inflight_bytes[twid] = total
+            if total > self.push_inflight_peak.get(twid, 0):
+                self.push_inflight_peak[twid] = total
             return True
         return False
+
+    # -- data-plane flow control --------------------------------------------
+
+    def _push_admit_locked(self, twid: int, nbytes: int) -> bool:
+        """Ingress-cap admit rule (mirrored by the simulator's
+        ``_push_admit``): admit while the target's reserved bytes stay
+        within the cap; with nothing in flight one push always goes."""
+        cap = self.cfg.push_inflight_cap_bytes
+        if cap is None:
+            return True
+        inflight = self._push_inflight_bytes.get(twid, 0)
+        return inflight == 0 or inflight + nbytes <= cap
+
+    def _release_push_locked(self, lkey: tuple[int, Any]) -> None:
+        ent = self._push_inbound.pop(lkey, None)
+        if ent is None:
+            return
+        twid = lkey[0]
+        left = self._push_inflight_bytes.get(twid, 0) - ent.nbytes
+        if left > 0:
+            self._push_inflight_bytes[twid] = left
+        else:
+            self._push_inflight_bytes.pop(twid, None)
+
+    def _expire_pushes_locked(self, now: float) -> None:
+        """Reclaim ledger entries whose push evidently never landed
+        (holder died mid-send, frame lost): their reserved bytes return
+        so the ingress cap cannot leak shut, and the affected targets'
+        deferred queues get a drain chance."""
+        stale = [
+            lkey
+            for lkey, ent in self._push_inbound.items()
+            if now - ent.t >= 10.0
+        ]
+        for lkey in stale:
+            self._release_push_locked(lkey)
+        for twid in {lkey[0] for lkey in stale}:
+            self._drain_push_deferred_locked(twid)
+
+    def _drain_push_deferred_locked(self, twid: int) -> None:
+        """Re-issue deferred pushes toward ``twid`` as credits allow."""
+        q = self._push_deferred.get(twid)
+        if not q:
+            return
+        tst = self._workers.get(twid)
+        if tst is None or tst.dead or not tst.runtime.alive:
+            self._abort_push_target_locked(twid)
+            return
+        now = time.monotonic()
+        while q:
+            src_wid, key = q[0]
+            holders = self.directory.holders(key)
+            if holders.get(twid):
+                # Landed through another route (pull backstop) while
+                # queued: the push is moot.
+                q.popleft()
+                self._push_deferred_keys.discard((twid, key))
+                continue
+            est = max(holders.values(), default=0)
+            if not self._push_admit_locked(twid, est):
+                break
+            q.popleft()
+            self._push_deferred_keys.discard((twid, key))
+            if not self._issue_push_locked(src_wid, twid, tst, key, now, est):
+                # Every holder died (or lost its data plane) while the
+                # directive waited: the push is abandoned — counted, and
+                # served by the dependent's pull backstop.
+                self.pushes_dropped += 1
+        if not q:
+            self._push_deferred.pop(twid, None)
+
+    def _abort_push_target_locked(self, twid: int) -> None:
+        """Target worker died or left: every reserved or queued push
+        toward it is void — release the ledger so the ingress cap can
+        never deadlock on a corpse (its dependents re-pull from the
+        surviving holders instead)."""
+        q = self._push_deferred.pop(twid, None)
+        if q:
+            self.pushes_dropped += len(q)
+            for _, key in q:
+                self._push_deferred_keys.discard((twid, key))
+        for lkey in [k for k in self._push_inbound if k[0] == twid]:
+            self._release_push_locked(lkey)
 
     def _predict_assignment_locked(self, uids: list) -> dict[int, int]:
         """Which worker will the imminent dispatch lease each of
@@ -633,7 +824,9 @@ class Manager:
                     if slots.get(wid, 0) <= 0:
                         continue
                     f = (
-                        self.directory.local_fraction(wid, keys)
+                        self.directory.placement_score(
+                            wid, keys, self.cfg.placement.rack_affinity
+                        )
                         if keys
                         else 0.0
                     )
@@ -778,13 +971,16 @@ class Manager:
                 push = not lazy and value is not None
                 # A predicted push is racing toward this worker for this
                 # key: tell it, so its agent defers the duplicate pull.
-                inbound = (
-                    lazy
-                    and self._push_inbound.pop(
-                        (rt.worker_id, dep_uid), None
-                    )
-                    is not None
+                # The ledger entry stays until the region_staged credit
+                # (or expiry) retires it — the reserved ingress bytes
+                # are still on the wire; ``leased`` just stops a
+                # re-lease from double-arming the agent's deferral.
+                ent = self._push_inbound.get(
+                    (rt.worker_id, op_key(dep_uid))
                 )
+                inbound = lazy and ent is not None and not ent.leased
+                if ent is not None:
+                    ent.leased = True
                 items.append((dep_uid, value if push else None, push, inbound))
         if not items:
             return
@@ -848,6 +1044,9 @@ class Manager:
             time.sleep(self.cfg.poll_interval)
             now = time.monotonic()
             with self._lock:
+                # Reclaim lost-push reservations even when no further
+                # stage completion would run the predictor's sweep.
+                self._expire_pushes_locked(now)
                 any_live = any(
                     not st.dead and st.runtime.alive
                     for st in self._workers.values()
@@ -875,6 +1074,9 @@ class Manager:
                     if not st.runtime.alive or (inflight and expired):
                         st.dead = True
                         self.directory.drop_worker(wid)
+                        # Pushes toward the corpse are void: release
+                        # their credits, drop its deferred queue.
+                        self._abort_push_target_locked(wid)
                         for uid in st.leases:
                             if uid not in self._stage_done:
                                 self.recovered_leases += 1

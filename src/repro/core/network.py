@@ -1,0 +1,278 @@
+"""Per-link cluster network topology model (the simulator's data plane).
+
+The seed simulator modeled the cluster interconnect as one scalar
+bandwidth per node: every copy into a node serialized on that node's
+ingress NIC and nothing else.  Real clusters are switched fabrics —
+a transfer occupies its **source NIC**, any **shared switch uplinks**
+on the path, and the **destination NIC**, in that order, and the
+uplink tier is usually *oversubscribed* (a rack of ``r`` nodes shares
+an uplink of ``r * link / oversubscription`` capacity).  Whether
+locality-aware placement pays off depends exactly on that contention:
+on a flat (non-blocking) network every placement is one hop, while on
+a 4:1 fat-tree a rack-blind placement pays the shared uplink for
+every cross-rack region and a rack-aware one bypasses it.
+
+This module is the pluggable model behind
+``SimConfig.network``:
+
+* :class:`FlatNetwork` — single tier, non-blocking: each transfer
+  serializes on the source egress NIC and the destination ingress NIC
+  only.  With the source unknown (``src=None``) it degrades to the
+  seed's destination-NIC-only model.
+* :class:`FatTreeNetwork` — two-tier leaf/spine tree: nodes are
+  grouped into racks of ``rack_size``; an intra-rack transfer stays on
+  the leaf switch (NICs only), a cross-rack transfer additionally
+  serializes on the source rack's up-link and the destination rack's
+  down-link, each of capacity ``rack_size * link_gb_s /
+  oversubscription``.  ``oversubscription=1`` is a full-bisection
+  (non-blocking) tree; ``4`` is the classic cost-reduced 4:1 fabric.
+
+Both models also carry the **coordinator NIC** used by the relay
+route (data plane disabled): relayed bytes cross that single shared
+link twice (in + out), which is the structural bottleneck the
+worker-to-worker data plane removes (see ``docs/architecture.md``,
+"data plane").
+
+Every link keeps byte and busy-time accounting so results can report
+where the wire time went (``SimResult.cross_rack_bytes`` /
+``uplink_busy_s``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+__all__ = [
+    "Link",
+    "NetworkModel",
+    "FlatNetwork",
+    "FatTreeNetwork",
+    "build_network",
+]
+
+_GB = float(2**30)
+
+
+@dataclass
+class Link:
+    """One serializing network resource (a NIC or a switch uplink).
+
+    Transfers reserve the link back-to-back: a reservation starts at
+    ``max(earliest, busy_until)`` and holds the link for
+    ``nbytes / bandwidth`` seconds — the same store-and-forward rule
+    the seed model applied to the single ingress NIC, now applied to
+    every hop on the path.
+    """
+
+    name: str
+    gb_s: float
+    busy_until: float = 0.0
+    busy_seconds: float = 0.0
+    bytes_total: int = 0
+
+    def reserve(self, earliest: float, nbytes: int) -> float:
+        start = max(earliest, self.busy_until)
+        dt = nbytes / (self.gb_s * _GB)
+        self.busy_until = start + dt
+        self.busy_seconds += dt
+        self.bytes_total += int(nbytes)
+        return self.busy_until
+
+
+class NetworkModel:
+    """Base contract + the flat (single-tier, non-blocking) fabric.
+
+    ``transfer(src, dst, nbytes, earliest)`` returns the time the last
+    byte lands on ``dst``, having serialized the transfer on every
+    link of the path; ``relay`` is the coordinator route (bytes cross
+    the coordinator NIC twice).  ``rack_of`` exposes topology identity
+    to placement: ``None`` means this fabric has no racks.
+    """
+
+    kind = "flat"
+
+    def __init__(
+        self,
+        n_nodes: int,
+        link_gb_s: float,
+        *,
+        coordinator_gb_s: Optional[float] = None,
+    ) -> None:
+        self.n_nodes = int(n_nodes)
+        self.link_gb_s = float(link_gb_s)
+        self.ingress = [
+            Link(f"nic-in{i}", link_gb_s) for i in range(self.n_nodes)
+        ]
+        self.egress = [
+            Link(f"nic-out{i}", link_gb_s) for i in range(self.n_nodes)
+        ]
+        # The relay route's shared coordinator NIC (one link for the
+        # whole cluster; carries every relayed byte twice).
+        self.coordinator = Link(
+            "coordinator-nic", coordinator_gb_s or link_gb_s
+        )
+        self.rack_local_bytes = 0
+        self.cross_rack_bytes = 0
+
+    # -- topology identity --------------------------------------------------
+
+    def rack_of(self, node_id: int) -> Optional[int]:
+        """Rack (leaf switch) of ``node_id``; None = no rack tier."""
+        return None
+
+    def same_rack(self, a: Optional[int], b: Optional[int]) -> bool:
+        ra = self.rack_of(a) if a is not None else None
+        rb = self.rack_of(b) if b is not None else None
+        return ra is not None and ra == rb
+
+    # -- path construction --------------------------------------------------
+
+    def path(self, src: Optional[int], dst: int) -> list[Link]:
+        """Links a ``src -> dst`` transfer serializes on, in order.
+
+        ``src=None`` (holder unknown to the model) charges only the
+        destination NIC — the seed behavior, kept as the conservative
+        fallback.
+        """
+        if src is None:
+            return [self.ingress[dst]]
+        if src == dst:
+            return []
+        return [self.egress[src], self.ingress[dst]]
+
+    # -- transfers ----------------------------------------------------------
+
+    def transfer(
+        self, src: Optional[int], dst: int, nbytes: int, earliest: float
+    ) -> float:
+        """Direct (worker-to-worker) transfer; returns completion time."""
+        links = self.path(src, dst)
+        if not links:
+            return earliest
+        t = earliest
+        for link in links:
+            t = link.reserve(t, nbytes)
+        # Rack accounting only exists on fabrics WITH a rack tier: a
+        # flat network has no uplinks, so calling its traffic
+        # "cross-rack" would make flat-vs-fat-tree rows incomparable.
+        if src is not None and self.rack_of(dst) is not None:
+            if self.same_rack(src, dst):
+                self.rack_local_bytes += int(nbytes)
+            else:
+                self.cross_rack_bytes += int(nbytes)
+        return t
+
+    def relay(
+        self, src: Optional[int], dst: int, nbytes: int, earliest: float
+    ) -> float:
+        """Coordinator-relay transfer: the bytes leave the source NIC,
+        cross the coordinator's single shared NIC twice (in + out), and
+        land through the destination NIC."""
+        t = earliest
+        if src is not None and src != dst:
+            t = self.egress[src].reserve(t, nbytes)
+        t = self.coordinator.reserve(t, 2 * nbytes)
+        return self.ingress[dst].reserve(t, nbytes)
+
+    # -- accounting ---------------------------------------------------------
+
+    def uplink_busy_s(self) -> float:
+        return 0.0
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "rack_local_bytes": float(self.rack_local_bytes),
+            "cross_rack_bytes": float(self.cross_rack_bytes),
+            "uplink_busy_s": self.uplink_busy_s(),
+            "coordinator_bytes": float(self.coordinator.bytes_total),
+        }
+
+
+class FlatNetwork(NetworkModel):
+    """Single-tier non-blocking fabric (explicit alias of the base)."""
+
+
+class FatTreeNetwork(NetworkModel):
+    """Two-tier fat-tree: racks of ``rack_size`` nodes behind shared
+    uplinks of ``rack_size * link_gb_s / oversubscription`` capacity.
+
+    Intra-rack transfers never touch the uplink tier — that asymmetry
+    is what a rack-locality placement bonus exploits.
+    """
+
+    kind = "fat_tree"
+
+    def __init__(
+        self,
+        n_nodes: int,
+        link_gb_s: float,
+        *,
+        rack_size: int = 4,
+        oversubscription: float = 4.0,
+        coordinator_gb_s: Optional[float] = None,
+    ) -> None:
+        super().__init__(
+            n_nodes, link_gb_s, coordinator_gb_s=coordinator_gb_s
+        )
+        self.rack_size = max(int(rack_size), 1)
+        self.oversubscription = max(float(oversubscription), 1e-9)
+        n_racks = (self.n_nodes + self.rack_size - 1) // self.rack_size
+        up_gb_s = link_gb_s * self.rack_size / self.oversubscription
+        self.uplinks_up = [
+            Link(f"rack{r}-up", up_gb_s) for r in range(n_racks)
+        ]
+        self.uplinks_down = [
+            Link(f"rack{r}-down", up_gb_s) for r in range(n_racks)
+        ]
+
+    def rack_of(self, node_id: int) -> Optional[int]:
+        return int(node_id) // self.rack_size
+
+    def path(self, src: Optional[int], dst: int) -> list[Link]:
+        if src is None:
+            return [self.ingress[dst]]
+        if src == dst:
+            return []
+        links = [self.egress[src]]
+        if not self.same_rack(src, dst):
+            links.append(self.uplinks_up[self.rack_of(src)])
+            links.append(self.uplinks_down[self.rack_of(dst)])
+        links.append(self.ingress[dst])
+        return links
+
+    def uplink_busy_s(self) -> float:
+        return sum(
+            l.busy_seconds for l in self.uplinks_up + self.uplinks_down
+        )
+
+
+def build_network(
+    kind: str,
+    n_nodes: int,
+    link_gb_s: float,
+    *,
+    rack_size: int = 4,
+    oversubscription: float = 4.0,
+    coordinator_gb_s: Optional[float] = None,
+) -> NetworkModel:
+    """Factory behind ``SimConfig.network``.
+
+    ``"flat"`` — non-blocking single tier (default, seed-compatible
+    plus source-NIC serialization); ``"fat_tree"`` (aliases
+    ``"fat-tree"``, ``"fattree"``) — two-tier oversubscribed tree.
+    """
+    normalized = kind.lower().replace("-", "_").replace(" ", "_")
+    if normalized == "flat":
+        return FlatNetwork(
+            n_nodes, link_gb_s, coordinator_gb_s=coordinator_gb_s
+        )
+    if normalized in ("fat_tree", "fattree"):
+        return FatTreeNetwork(
+            n_nodes,
+            link_gb_s,
+            rack_size=rack_size,
+            oversubscription=oversubscription,
+            coordinator_gb_s=coordinator_gb_s,
+        )
+    raise ValueError(f"unknown network model {kind!r}")

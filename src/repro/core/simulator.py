@@ -32,6 +32,7 @@ import numpy as np
 
 from . import calibration as cal
 from .cost_model import TPU_V5E, op_cost_from_seconds, optimal_micro_batch
+from .network import build_network
 from .scheduling import HOST_KIND, ReadyScheduler
 from ..staging import PlacementDirectory
 from .workflow import (
@@ -175,7 +176,28 @@ class SimConfig:
     staging: bool = False              # charge cross-node staging copies
     staging_locality: bool = True      # directory-driven lease placement
     stage_output_mb: float = 48.0      # inter-stage region per tile (MB)
-    interconnect_gb_s: float = 6.0     # node-to-node staging bandwidth
+    interconnect_gb_s: float = 6.0     # per-NIC link bandwidth (GB/s)
+    # Per-link network topology (repro.core.network).  "flat" is the
+    # non-blocking single tier; "fat_tree" groups nodes into racks of
+    # ``rack_size`` behind shared uplinks of
+    # ``rack_size * interconnect_gb_s / oversubscription`` capacity.
+    # Every transfer serializes on its source NIC, any uplinks on the
+    # path, and the destination NIC — so link contention, not just
+    # destination ingress, shapes staging delays.
+    network: str = "flat"              # "flat" | "fat_tree"
+    rack_size: Optional[int] = None    # nodes per rack (default: node.rack_size)
+    oversubscription: float = 4.0      # uplink tier oversubscription ratio
+    # Rack-locality placement bonus: when scoring a pending stage for a
+    # node, bytes held by same-rack siblings count at this weight on
+    # top of the node-local fraction (0 = rack-blind placement).  Only
+    # meaningful with staging_locality on a racked network.
+    rack_affinity: float = 0.0
+    # Data-plane flow control mirror: cap on predictive-push bytes in
+    # flight toward any single node's ingress.  A push that would
+    # overflow the target's cap is skipped (counted in pushes_capped;
+    # the dependent's own pull remains the backstop) — the same knob
+    # ManagerConfig.push_inflight_cap_bytes applies on the wire.
+    push_inflight_cap_bytes: Optional[int] = None
     # Coordinator-bypass data plane (PR4).  With direct_transfer,
     # inter-node region copies flow worker-to-worker (the runtime's
     # peer-dial path) and serialize only on the destination NIC;
@@ -241,6 +263,14 @@ class SimResult:
     direct_region_bytes: int = 0
     pushes: int = 0
     pushed_bytes: int = 0
+    # Network topology accounting (cfg.network): where the cross-node
+    # bytes flowed and how long the shared uplink tier serialized.
+    rack_local_bytes: int = 0
+    cross_rack_bytes: int = 0
+    uplink_busy_s: float = 0.0
+    # Flow-control mirror (cfg.push_inflight_cap_bytes): predictive
+    # pushes skipped because the target's ingress cap was full.
+    pushes_capped: int = 0
     # Micro-batched dispatch accounting (cfg.micro_batch > 1).
     batches: int = 0
     batched_ops: int = 0
@@ -297,9 +327,6 @@ class _Node:
     alive: bool = True
     # chunk_id -> io-ready time (tile read from the filesystem)
     io_ready: dict[int, float] = field(default_factory=dict)
-    # Inter-node staging link (NIC) busy-until time: copies into this
-    # node serialize on its ingress bandwidth (cfg.interconnect_gb_s).
-    net_free: float = 0.0
 
 
 class ClusterSim:
@@ -319,19 +346,33 @@ class ClusterSim:
         self.staged_bytes_avoided = 0
         self.cross_node_bytes = 0
         self.transfer_wait = 0.0
-        # Data plane: coordinator NIC busy-until time (relay mode) and
-        # relay/direct/push byte accounting.
-        self._coord_free = 0.0
+        # Data plane: per-link network topology (NICs, uplinks, the
+        # relay route's coordinator NIC) and byte accounting.
+        self.net = build_network(
+            cfg.network,
+            cfg.n_nodes,
+            cfg.interconnect_gb_s,
+            rack_size=cfg.rack_size or cfg.node.rack_size,
+            oversubscription=cfg.oversubscription,
+        )
+        # Topology identity flows into the placement directory so the
+        # dispatch scoring can apply the rack-locality bonus.
+        for nid in range(cfg.n_nodes):
+            self.staging_dir.set_rack(nid, self.net.rack_of(nid))
         self.relay_region_bytes = 0
         self.direct_region_bytes = 0
         self.pushes = 0
         self.pushed_bytes = 0
+        # Flow-control mirror: per-target predictive-push bytes still in
+        # flight (list of (land time, bytes); landed entries return
+        # their credits on the next admit check).
+        self._push_inflight: dict[int, list[tuple[float, int]]] = {}
+        self.pushes_capped = 0
         # Control-plane cost model (repro.transport).
         self.control_messages = 0
         self.rpc_wait = 0.0
         self._rpc_s = cfg.rpc_latency_us * 1e-6
         self._stage_bytes = int(cfg.stage_output_mb * 2**20)
-        self._interconnect_bps = cfg.interconnect_gb_s * 2**30
         # (node_id, stage uid) -> time its replica finishes landing; a
         # replica recorded in the directory may still be in flight.
         self._region_ready: dict[tuple[int, int], float] = {}
@@ -492,6 +533,10 @@ class ClusterSim:
             direct_region_bytes=self.direct_region_bytes,
             pushes=self.pushes,
             pushed_bytes=self.pushed_bytes,
+            rack_local_bytes=self.net.rack_local_bytes,
+            cross_rack_bytes=self.net.cross_rack_bytes,
+            uplink_busy_s=self.net.uplink_busy_s(),
+            pushes_capped=self.pushes_capped,
             batches=batches,
             batched_ops=batched_ops,
             control_messages=self.control_messages,
@@ -524,13 +569,18 @@ class ClusterSim:
             if not self.cfg.staging_locality:
                 return self.pending.pop(0)  # pure demand-driven baseline
             # Directory-driven: lease the instance with the largest
-            # fraction of its input bytes already staged on this node.
+            # fraction of its input bytes already staged on this node
+            # (plus the rack-locality bonus: same-rack replicas avoid
+            # the oversubscribed uplinks, so they count at
+            # cfg.rack_affinity weight).
             best_i, best_f = 0, 0.0
             for i, si in enumerate(self.pending):
                 if not si.deps:
                     continue
                 keys = [("stage", d) for d in si.deps]
-                f = self.staging_dir.local_fraction(node.node_id, keys)
+                f = self.staging_dir.placement_score(
+                    node.node_id, keys, self.cfg.rack_affinity
+                )
                 if f > best_f:
                     best_i, best_f = i, f
             return self.pending.pop(best_i)
@@ -603,7 +653,8 @@ class ClusterSim:
                 key = ("stage", d)
                 n = self._stage_bytes
                 self.cross_node_bytes += n
-                done_t = self._transfer_into(node, copies_start, n)
+                src = self._pick_holder(node.node_id, key)
+                done_t = self._transfer_into(node, copies_start, n, src=src)
                 ready = max(ready, done_t)
                 # The directory learns of the replica now; consumers
                 # scheduled before it lands gate on _region_ready.
@@ -611,25 +662,41 @@ class ClusterSim:
                 self._region_ready[(node.node_id, d)] = done_t
         return ready - self.now
 
-    def _transfer_into(self, node: _Node, earliest: float, n: int) -> float:
+    def _pick_holder(self, dst_nid: int, key) -> Optional[int]:
+        """Source node of a region copy toward ``dst_nid``: prefer a
+        same-rack holder (the copy then bypasses the uplink tier),
+        then the largest replica; None when no holder is recorded (the
+        conservative destination-NIC-only fallback)."""
+        holders = self.staging_dir.holders(key)
+        if not holders:
+            return None
+        return min(
+            holders,
+            key=lambda nid: (
+                not self.net.same_rack(nid, dst_nid),
+                -holders[nid],
+                nid,
+            ),
+        )
+
+    def _transfer_into(
+        self, node: _Node, earliest: float, n: int, src: Optional[int] = None
+    ) -> float:
         """Time at which ``n`` region bytes land on ``node``.
 
-        Direct mode: the copy serializes on the destination's ingress
-        NIC only (worker-to-worker peer dial).  Relay mode: the bytes
-        additionally pass through the coordinator's NIC twice (in +
-        out), a single link shared by EVERY node's cross-node traffic —
-        the structural bottleneck the coordinator-bypass removes.
+        Direct mode: the copy serializes on every link of the
+        ``src -> node`` path (source NIC, any shared uplinks, the
+        destination NIC — see ``core/network.py``).  Relay mode: the
+        bytes additionally pass through the coordinator's NIC twice
+        (in + out), a single link shared by EVERY node's cross-node
+        traffic — the structural bottleneck the coordinator-bypass
+        removes.
         """
         if self.cfg.direct_transfer:
-            start = max(earliest, node.net_free)
-            node.net_free = start + n / self._interconnect_bps
             self.direct_region_bytes += n
-            return node.net_free
-        start = max(earliest, node.net_free, self._coord_free)
-        self._coord_free = start + 2.0 * n / self._interconnect_bps
-        node.net_free = self._coord_free
+            return self.net.transfer(src, node.node_id, n, earliest)
         self.relay_region_bytes += n
-        return node.net_free
+        return self.net.relay(src, node.node_id, n, earliest)
 
     def _start_stage_ops(self, node: _Node, si: StageInstance) -> None:
         if not node.alive or si.uid in self.stage_done:
@@ -915,7 +982,9 @@ class ClusterSim:
                 for cand in self.nodes:
                     if not cand.alive or len(cand.leased) >= self.cfg.window:
                         continue
-                    f = self.staging_dir.local_fraction(cand.node_id, keys)
+                    f = self.staging_dir.placement_score(
+                        cand.node_id, keys, self.cfg.rack_affinity
+                    )
                     if f > best_f:
                         target, best_f = cand, f
             else:
@@ -949,12 +1018,37 @@ class ClusterSim:
                 if holders.get(target.node_id) or not holders:
                     continue  # already resident there / nothing staged
                 n = self._stage_bytes
+                if not self._push_admit(target.node_id, n):
+                    # Flow control: the target's ingress already carries
+                    # a cap's worth of in-flight pushed bytes — skip
+                    # (the dependent's own pull is the backstop).
+                    self.pushes_capped += 1
+                    continue
+                src = self._pick_holder(target.node_id, ("stage", d))
                 self.cross_node_bytes += n
-                done_t = self._transfer_into(target, self.now, n)
+                done_t = self._transfer_into(target, self.now, n, src=src)
                 self.staging_dir.record(target.node_id, ("stage", d), n)
                 self._region_ready[(target.node_id, d)] = done_t
+                if self.cfg.push_inflight_cap_bytes is not None:
+                    self._push_inflight.setdefault(
+                        target.node_id, []
+                    ).append((done_t, n))
                 self.pushes += 1
                 self.pushed_bytes += n
+
+    def _push_admit(self, target_nid: int, nbytes: int) -> bool:
+        """Flow-control admit rule, mirroring the Manager's: a push is
+        admitted while the target's in-flight pushed bytes stay within
+        the cap; with nothing in flight one push always goes (a single
+        region larger than the cap degrades to pull-on-lease, it never
+        starves push permanently).  Landed transfers return credits."""
+        cap = self.cfg.push_inflight_cap_bytes
+        if cap is None:
+            return True
+        q = self._push_inflight.setdefault(target_nid, [])
+        q[:] = [(t, b) for (t, b) in q if t > self.now]
+        inflight = sum(b for _, b in q)
+        return inflight == 0 or inflight + nbytes <= cap
 
     # -- fault tolerance / stragglers ---------------------------------------------
 

@@ -1,4 +1,13 @@
-"""Hierarchical data staging: cluster-level locality for the runtime.
+"""Hierarchical data staging: the runtime's storage **tiers** and the
+cluster-level placement metadata the data plane routes by.
+
+Regions move through a per-worker tier stack (device memory -> host
+RAM -> scratch disk -> global store) driven by a background staging
+agent; the Manager-side placement directory (holders + bus addresses
++ rack identity) turns those placements into locality- and rack-aware
+lease dispatch, and the write-ahead journal makes that metadata
+survive a coordinator restart.  Terminology (control plane / data
+plane / tiers) matches ``docs/architecture.md``.
 
 Module map
 ----------

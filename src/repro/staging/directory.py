@@ -33,6 +33,11 @@ class PlacementDirectory:
         # holder lookup can be answered with a dialable peer instead of
         # relaying the region bytes through the coordinator.
         self._addresses: dict[int, Any] = {}
+        # Network topology identity: worker -> rack (leaf switch).  A
+        # replica on a same-rack sibling is one intra-rack hop away —
+        # no oversubscribed uplink on the path — so placement scoring
+        # can weight it above a cross-rack replica (rack_affinity).
+        self._racks: dict[int, Any] = {}
         self.records = 0
         self.evictions = 0
 
@@ -42,6 +47,22 @@ class PlacementDirectory:
         """Record worker ``worker_id``'s bus address (peer-dial target)."""
         with self._lock:
             self._addresses[int(worker_id)] = address
+
+    def set_rack(self, worker_id: int, rack: Any) -> None:
+        """Record worker ``worker_id``'s rack (None = no topology)."""
+        with self._lock:
+            if rack is None:
+                self._racks.pop(int(worker_id), None)
+            else:
+                self._racks[int(worker_id)] = rack
+
+    def rack_of(self, worker_id: int) -> Any:
+        with self._lock:
+            return self._racks.get(worker_id)
+
+    def racks(self) -> dict[int, Any]:
+        with self._lock:
+            return dict(self._racks)
 
     def address_of(self, worker_id: int) -> Any:
         with self._lock:
@@ -70,6 +91,7 @@ class PlacementDirectory:
         """Worker left/died: all of its replicas (and address) are gone."""
         with self._lock:
             self._addresses.pop(worker_id, None)
+            self._racks.pop(worker_id, None)
             for key in list(self._placement):
                 self.evict(worker_id, key)
 
@@ -115,6 +137,49 @@ class PlacementDirectory:
             if total <= 0:
                 return 0.0
             return self.bytes_on(worker_id, keys) / total
+
+    def rack_fraction(
+        self, worker_id: int, keys: Iterable[RegionKey]
+    ) -> float:
+        """Fraction of the recorded input bytes held by OTHER workers
+        in ``worker_id``'s rack (per key, the largest same-rack
+        replica counts — never more than the key's own share)."""
+        keys = list(keys)
+        with self._lock:
+            rack = self._racks.get(worker_id)
+            if rack is None:
+                return 0.0
+            total = self.total_bytes(keys)
+            if total <= 0:
+                return 0.0
+            near = 0
+            for k in keys:
+                holders = self._placement.get(k, {})
+                near += max(
+                    (
+                        n
+                        for w, n in holders.items()
+                        if w != worker_id and self._racks.get(w) == rack
+                    ),
+                    default=0,
+                )
+            return min(near / total, 1.0)
+
+    def placement_score(
+        self,
+        worker_id: int,
+        keys: Iterable[RegionKey],
+        rack_affinity: float = 0.0,
+    ) -> float:
+        """Locality score of leasing work over ``keys`` to ``worker_id``:
+        the local byte fraction, plus a rack-locality bonus — bytes a
+        same-rack sibling holds count at ``rack_affinity`` weight,
+        because pulling them never crosses an oversubscribed uplink."""
+        keys = list(keys)
+        score = self.local_fraction(worker_id, keys)
+        if rack_affinity > 0.0:
+            score += rack_affinity * self.rack_fraction(worker_id, keys)
+        return score
 
     def best_worker(
         self, keys: Iterable[RegionKey]

@@ -197,6 +197,8 @@ class DirectoryService:
         self.pending = list(snap.get("pending", []))
         for wid, addr in snap.get("addresses", {}).items():
             self.directory.set_address(int(wid), addr)
+        for wid, rack in snap.get("racks", {}).items():
+            self.directory.set_rack(int(wid), rack)
 
     def _apply(self, entry: dict) -> None:
         e = entry.get("e")
@@ -208,6 +210,8 @@ class DirectoryService:
             self.directory.evict(int(entry["w"]), decode_key(entry["k"]))
         elif e == "addr":
             self.directory.set_address(int(entry["w"]), entry["a"])
+        elif e == "rack":
+            self.directory.set_rack(int(entry["w"]), entry["r"])
         elif e == "drop":
             self.directory.drop_worker(int(entry["w"]))
             self.leases = {
@@ -259,6 +263,15 @@ class DirectoryService:
         with self._mu:
             self._log({"e": "addr", "w": worker_id, "a": address})
             self.directory.set_address(worker_id, address)
+            self._applied()
+
+    def set_rack(self, worker_id: int, rack: Any) -> None:
+        """Journal a worker's rack (network topology identity): a
+        rehydrated coordinator keeps scoring rack-locality correctly
+        before the workers re-register."""
+        with self._mu:
+            self._log({"e": "rack", "w": worker_id, "r": rack})
+            self.directory.set_rack(worker_id, rack)
             self._applied()
 
     def evict(self, worker_id: int, key: RegionKey) -> None:
@@ -327,6 +340,9 @@ class DirectoryService:
             "pending": list(self.pending),
             "addresses": {
                 str(w): a for w, a in self.directory.addresses().items()
+            },
+            "racks": {
+                str(w): r for w, r in self.directory.racks().items()
             },
         }
         self.journal.snapshot(state)

@@ -35,6 +35,13 @@ class PlacementPolicy:
     defer_remote: bool = True
     # Cap on how many pending instances to score per dispatch decision.
     scan_limit: int = 64
+    # Rack-locality bonus: input bytes held by a same-rack sibling
+    # (PlacementDirectory.set_rack identity) count at this weight on
+    # top of the worker-local fraction — a same-rack pull crosses the
+    # leaf switch only, never an oversubscribed uplink, so on a
+    # fat-tree fabric it is nearly as good as local.  0 keeps the
+    # rack-blind scoring.
+    rack_affinity: float = 0.0
     # Replication-aware host-tier eviction: under budget pressure a
     # worker sheds regions the PlacementDirectory shows replicated on
     # another worker before any sole copy (the Manager wires each
@@ -67,7 +74,13 @@ def select_lease(
     head_f = 0.0
     for i in range(limit):
         keys = list(input_keys(pending[i]))
-        f = directory.local_fraction(worker_id, keys) if keys else 0.0
+        f = (
+            directory.placement_score(
+                worker_id, keys, policy.rack_affinity
+            )
+            if keys
+            else 0.0
+        )
         if i == 0:
             head_f = f
         if f > best_f:

@@ -1,4 +1,13 @@
-"""Pluggable cluster transport: the control plane as a message bus.
+"""Pluggable cluster transport: control plane and data plane on a bus.
+
+The **control plane** — leases, completion notifies, heartbeats,
+holder metadata — crosses a pluggable :class:`MessageBus` and always
+routes through the coordinator.  The **data plane** — bulk region
+bytes — is coordinator-bypassing: every :class:`WorkerClient` serves
+a second bus address siblings dial directly (``pull_region(s)`` peer
+pulls, ``push_region`` predictive pushes), and push traffic is
+flow-controlled by the Manager's per-target in-flight byte cap whose
+credits return on ``region_staged`` (see ``docs/architecture.md``).
 
 Module map
 ----------

@@ -265,7 +265,9 @@ class ManagerEndpoint:
             self.proxies[wid] = proxy
             self._peer_worker[peer] = wid
             self._registered.notify_all()
-        self.manager.register_worker(proxy, address=proxy.data_address)
+        self.manager.register_worker(
+            proxy, address=proxy.data_address, rack=payload.get("rack")
+        )
         return {"ok": True, "window": self.manager.cfg.window}
 
     def _h_deregister(self, peer: Peer, payload: Any):
@@ -389,9 +391,14 @@ class WorkerClient:
         *,
         data_plane: bool = True,
         push_grace: Optional[float] = None,
+        rack: Any = None,
     ) -> None:
         self.runtime = runtime
         self.bus = bus
+        # Network topology identity (rack / leaf switch) announced at
+        # registration: the Manager's placement scoring can then prefer
+        # same-rack replicas (PlacementPolicy.rack_affinity).
+        self.rack = rack
         self._stop = threading.Event()
         # Sibling peer cache: data-plane address -> dialed Peer.
         self._siblings: dict[Any, Peer] = {}
@@ -454,6 +461,7 @@ class WorkerClient:
                 "worker_id": runtime.worker_id,
                 "has_agent": runtime.agent is not None,
                 "address": self.data_address,
+                "rack": rack,
             },
         )
         self.window = int(reply.get("window", 0)) if reply else 0
@@ -685,6 +693,7 @@ class WorkerSpec:
     staging: bool = True               # build a StagingConfig (prefetch agent)
     host_budget_bytes: Optional[int] = None
     data_plane: bool = True            # serve worker-to-worker transfers
+    rack: Optional[int] = None         # topology identity (rack_affinity)
     extra: dict[str, Any] = field(default_factory=dict)
 
 
@@ -719,7 +728,9 @@ def worker_main(address: str, spec: WorkerSpec) -> None:
     from .socketbus import SocketBus
 
     bus = SocketBus()
-    client = WorkerClient(runtime, bus, address, data_plane=spec.data_plane)
+    client = WorkerClient(
+        runtime, bus, address, data_plane=spec.data_plane, rack=spec.rack
+    )
     try:
         client.wait()
     finally:

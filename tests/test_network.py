@@ -1,0 +1,373 @@
+"""Per-link network topology model + data-plane flow control.
+
+Covers the NetworkModel contract (source/uplink/destination
+serialization, fat-tree oversubscription, rack bypass), the rack-aware
+placement scoring, the simulator parity runs (rack-aware >= rack-blind
+on a fat-tree; the push-cap mirror), and the Manager's push flow
+control: cap respected under a synthetic push storm, credits returned
+on ``region_staged``, no deadlock when the target dies mid-push.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+import repro.transport as T
+from repro.core import LaneSpec, Manager, ManagerConfig, WorkerRuntime
+from repro.core.network import (
+    FatTreeNetwork,
+    FlatNetwork,
+    build_network,
+)
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.workflow import AbstractWorkflow, Operation, Stage
+from repro.staging import DirectoryService, PlacementDirectory, StagingConfig
+from repro.staging.store import op_key
+from repro.transport.demo import demo_concrete, demo_registry
+
+GB = 2**30
+
+
+def _wait(predicate, timeout: float = 10.0) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+# --------------------------------------------------------------------------
+# NetworkModel: link serialization
+# --------------------------------------------------------------------------
+
+
+def test_flat_network_serializes_source_and_destination_nics():
+    net = FlatNetwork(4, 1.0)  # 1 GB/s per NIC: 1 GB takes 1 s per hop
+    # Store-and-forward across two links: egress then ingress.
+    assert net.transfer(0, 1, GB, 0.0) == pytest.approx(2.0)
+    # Same source, different destination: the shared egress NIC is the
+    # bottleneck — the second transfer queues behind the first.
+    assert net.transfer(0, 2, GB, 0.0) == pytest.approx(3.0)
+    # Unknown source (seed fallback): destination NIC only.
+    assert net.transfer(None, 3, GB, 0.0) == pytest.approx(1.0)
+    # Different source toward a busy destination: ingress serializes.
+    assert net.transfer(3, 2, GB, 0.0) == pytest.approx(4.0)
+    # A rack-less fabric books no rack accounting at all.
+    assert net.rack_local_bytes == 0 and net.cross_rack_bytes == 0
+
+
+def test_relay_route_pays_the_shared_coordinator_nic_twice():
+    net = FlatNetwork(4, 1.0)
+    # src egress (1 s) + coordinator 2x bytes (2 s) + dst ingress (1 s).
+    assert net.relay(0, 1, GB, 0.0) == pytest.approx(4.0)
+    # A second relayed transfer between disjoint node pairs still
+    # queues on the one coordinator NIC — the structural bottleneck.
+    assert net.relay(2, 3, GB, 0.0) == pytest.approx(6.0)
+
+
+def test_oversubscribed_uplink_slower_than_flat():
+    """Four concurrent cross-rack flows on a 4:1 fat-tree share one
+    rack_size*link/4 = 1-link-rate uplink; on the flat fabric every
+    flow has its own pair of NICs."""
+    flat = FlatNetwork(8, 1.0)
+    ft = build_network(
+        "fat_tree", 8, 1.0, rack_size=4, oversubscription=4.0
+    )
+    flat_done = [flat.transfer(i, 4 + i, GB, 0.0) for i in range(4)]
+    ft_done = [ft.transfer(i, 4 + i, GB, 0.0) for i in range(4)]
+    assert max(flat_done) == pytest.approx(2.0)
+    # The shared up/down links serialize the four flows.
+    assert max(ft_done) > max(flat_done)
+    assert ft.uplink_busy_s() > 0.0
+    assert ft.cross_rack_bytes == 4 * GB and ft.rack_local_bytes == 0
+
+
+def test_rack_local_transfer_bypasses_uplink():
+    ft = FatTreeNetwork(8, 1.0, rack_size=4, oversubscription=4.0)
+    # Nodes 0 and 1 share a rack: NICs only, same cost as flat.
+    assert ft.transfer(0, 1, GB, 0.0) == pytest.approx(2.0)
+    assert ft.uplink_busy_s() == 0.0
+    assert ft.rack_local_bytes == GB and ft.cross_rack_bytes == 0
+    # A full-bisection tree (oversubscription=1) carries the same
+    # cross-rack flows strictly faster than the 4:1 fabric.
+    full = FatTreeNetwork(8, 1.0, rack_size=4, oversubscription=1.0)
+    over = FatTreeNetwork(8, 1.0, rack_size=4, oversubscription=4.0)
+    full_done = [full.transfer(i, 4 + i, GB, 0.0) for i in range(4)]
+    over_done = [over.transfer(i, 4 + i, GB, 0.0) for i in range(4)]
+    assert max(full_done) < max(over_done)
+
+
+def test_build_network_aliases_and_unknown():
+    assert build_network("flat", 2, 1.0).kind == "flat"
+    for alias in ("fat_tree", "fat-tree", "FatTree".lower()):
+        assert build_network(alias, 2, 1.0).kind == "fat_tree"
+    with pytest.raises(ValueError):
+        build_network("torus", 2, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Rack-aware placement scoring
+# --------------------------------------------------------------------------
+
+
+def test_placement_score_rack_bonus():
+    d = PlacementDirectory()
+    for wid, rack in ((0, 0), (1, 0), (2, 1)):
+        d.set_rack(wid, rack)
+    key = op_key(7)
+    d.record(1, key, 100)  # held by worker 1 (rack 0)
+    # Worker 0 holds nothing locally but shares worker 1's rack.
+    assert d.local_fraction(0, [key]) == 0.0
+    assert d.rack_fraction(0, [key]) == pytest.approx(1.0)
+    assert d.placement_score(0, [key], 0.5) == pytest.approx(0.5)
+    # Worker 2 sits in the other rack: no bonus.
+    assert d.placement_score(2, [key], 0.5) == 0.0
+    # The holder itself: full local fraction, no self-bonus on top.
+    assert d.placement_score(1, [key], 0.5) == pytest.approx(1.0)
+    # Rack-blind scoring (affinity 0) is unchanged.
+    assert d.placement_score(0, [key], 0.0) == 0.0
+
+
+def test_journal_persists_racks(tmp_path):
+    path = str(tmp_path / "dir.wal")
+    svc = DirectoryService(path)
+    svc.set_rack(3, 1)
+    svc.record(3, op_key(1), 64)
+    svc.close()
+    # Replay from the journal tail.
+    svc2 = DirectoryService(path)
+    assert svc2.rack_of(3) == 1
+    svc2.checkpoint()  # racks must survive the snapshot too
+    svc2.close()
+    svc3 = DirectoryService(path)
+    assert svc3.rack_of(3) == 1
+    svc3.close()
+
+
+# --------------------------------------------------------------------------
+# Simulator parity: topology-aware placement + push-cap mirror
+# --------------------------------------------------------------------------
+
+
+def _fanin_builder():
+    return AbstractWorkflow(
+        "fanin",
+        (
+            Stage.single(Operation("rbc_detection")),
+            Stage.single(Operation("morph_open")),
+            Stage.single(Operation("haralick")),
+        ),
+        (("rbc_detection", "haralick"), ("morph_open", "haralick")),
+    )
+
+
+def _fanout_builder():
+    """One producer stage feeding four feature stages: the completion
+    burst leaves dependents pending, so nodes with slack genuinely
+    choose what to steal — the decision rack_affinity informs."""
+    feats = ("pixel_stats", "gradient_stats", "haralick", "canny_edge")
+    stages = [Stage.single(Operation("recon_to_nuclei"))] + [
+        Stage.single(Operation(f)) for f in feats
+    ]
+    return AbstractWorkflow(
+        "fanout",
+        tuple(stages),
+        tuple(("recon_to_nuclei", f) for f in feats),
+    )
+
+
+def test_sim_rack_aware_placement_beats_rack_blind_on_fat_tree():
+    """On an oversubscribed fat-tree in a transfer-bound regime,
+    scoring same-rack replicas into placement keeps region traffic off
+    the shared uplinks: rack-aware placement moves measurably fewer
+    cross-rack bytes and at least matches rack-blind throughput."""
+    base = dict(
+        n_nodes=8,
+        staging=True,
+        staging_locality=True,
+        window=2,
+        stage_output_mb=1024.0,
+        interconnect_gb_s=0.5,
+        network="fat_tree",
+        rack_size=2,
+        oversubscription=8.0,
+    )
+    blind = run_simulation(
+        32, SimConfig(**base, rack_affinity=0.0),
+        workflow_builder=_fanout_builder,
+    )
+    aware = run_simulation(
+        32, SimConfig(**base, rack_affinity=0.5),
+        workflow_builder=_fanout_builder,
+    )
+    assert blind.completed_ok and aware.completed_ok
+    assert aware.tiles_per_second >= blind.tiles_per_second
+    # The bonus converts cross-rack transfers into rack-local ones.
+    assert aware.cross_rack_bytes < blind.cross_rack_bytes
+    assert aware.rack_local_bytes > blind.rack_local_bytes
+    assert aware.uplink_busy_s < blind.uplink_busy_s
+
+
+def test_sim_push_cap_mirror_bounds_inflight_and_completes():
+    base = dict(
+        n_nodes=2,
+        staging=True,
+        staging_locality=True,
+        window=2,
+        stage_output_mb=256.0,
+        interconnect_gb_s=1.0,
+        predictive_push=True,
+    )
+    uncapped = run_simulation(
+        40, SimConfig(**base), workflow_builder=_fanin_builder
+    )
+    capped = run_simulation(
+        40,
+        SimConfig(**base, push_inflight_cap_bytes=300 * 2**20),
+        workflow_builder=_fanin_builder,
+    )
+    assert uncapped.completed_ok and capped.completed_ok
+    assert uncapped.pushes_capped == 0
+    # The cap admits one in-flight 256MB push per target and skips
+    # whatever would overflow it; skipped pushes degrade to the
+    # dependent's pull, so the run still completes.
+    assert capped.pushes_capped > 0
+
+
+# --------------------------------------------------------------------------
+# Manager flow control: storm, credits, target death
+# --------------------------------------------------------------------------
+
+_REGION = np.ones((512, 512), np.float32)  # 1 MB
+
+
+def _cluster(cap: int | None, n_workers: int = 2):
+    """Manager + InprocBus workers (WorkerClient bridges, so the
+    Manager routes pushes over the bus path, not the inline one)."""
+    mgr = Manager(
+        demo_concrete(1),
+        ManagerConfig(
+            window=1,
+            backup_tasks=False,
+            heartbeat_timeout=120.0,
+            push_inflight_cap_bytes=cap,
+        ),
+    )
+    endpoint = T.ManagerEndpoint(mgr, T.InprocBus())
+    workers, clients = [], []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=demo_registry(),
+            staging=StagingConfig(),
+        )
+        rt.start()
+        workers.append(rt)
+        clients.append(
+            T.WorkerClient(rt, T.InprocBus(), endpoint.address, rack=wid)
+        )
+    assert endpoint.wait_workers(n_workers, timeout=30.0)
+    return mgr, endpoint, workers, clients
+
+
+def _teardown(endpoint, workers, clients):
+    for rt in workers:
+        rt.stop()
+    for c in clients:
+        c.bus.close()
+    endpoint.bus.close()
+
+
+def test_push_storm_respects_cap_and_returns_credits():
+    """A storm of 8x 1MB pushes toward one worker: the Manager's
+    reserved in-flight bytes never exceed the cap, deferred pushes
+    drain as ``region_staged`` credits return, every region lands."""
+    cap = int(2.5 * _REGION.nbytes)
+    mgr, endpoint, workers, clients = _cluster(cap)
+    try:
+        keys = [op_key(1_000_000 + i) for i in range(8)]
+        for key in keys:
+            workers[0].store.put(key, _REGION)
+            mgr.directory.record(0, key, _REGION.nbytes)
+        for key in keys:
+            assert mgr.push_region_toward(key, 1)
+        assert _wait(lambda: all(k in workers[1].store for k in keys))
+        # Cap respected at every instant the ledger grew.
+        assert mgr.push_inflight_peak.get(1, 0) <= cap
+        # The storm exceeded the cap, so most directives waited.
+        assert mgr.pushes_deferred > 0
+        # Every landed replica returned its credit.
+        assert _wait(lambda: mgr._push_inflight_bytes.get(1, 0) == 0)
+        assert not mgr._push_deferred
+        # The directory learned all eight replicas (region_staged).
+        for key in keys:
+            assert mgr.directory.holders(key).get(1)
+    finally:
+        _teardown(endpoint, workers, clients)
+
+
+def test_push_uncapped_baseline_reserves_everything():
+    mgr, endpoint, workers, clients = _cluster(cap=None)
+    try:
+        keys = [op_key(2_000_000 + i) for i in range(4)]
+        for key in keys:
+            workers[0].store.put(key, _REGION)
+            mgr.directory.record(0, key, _REGION.nbytes)
+        for key in keys:
+            assert mgr.push_region_toward(key, 1)
+        assert _wait(lambda: all(k in workers[1].store for k in keys))
+        assert mgr.pushes_deferred == 0
+    finally:
+        _teardown(endpoint, workers, clients)
+
+
+def test_no_deadlock_when_target_dies_mid_push():
+    """Pushes stuck toward a dead target (reserved AND deferred) are
+    voided when the target leaves: credits release, the queue clears,
+    and pushes toward other targets still admit."""
+    cap = int(1.5 * _REGION.nbytes)
+    mgr, endpoint, workers, clients = _cluster(cap, n_workers=3)
+    try:
+        # Directory lies: worker 0 "holds" these keys but its store
+        # does not, so issued push directives never land and never
+        # produce a region_staged credit — the stuck-push worst case.
+        keys = [op_key(3_000_000 + i) for i in range(4)]
+        for key in keys:
+            mgr.directory.record(0, key, _REGION.nbytes)
+        for key in keys:
+            assert mgr.push_region_toward(key, 1)
+        assert mgr._push_inflight_bytes.get(1, 0) > 0
+        assert len(mgr._push_deferred.get(1, ())) > 0
+        # A duplicate request for an in-flight (or queued) key must not
+        # double-reserve its bytes against the cap.
+        before = mgr._push_inflight_bytes.get(1, 0)
+        assert mgr.push_region_toward(keys[0], 1)
+        assert mgr._push_inflight_bytes.get(1, 0) == before
+        # Target dies mid-push.
+        mgr.deregister_worker(1)
+        assert mgr._push_inflight_bytes.get(1, 0) == 0
+        assert 1 not in mgr._push_deferred
+        assert not any(twid == 1 for twid, _ in mgr._push_deferred_keys)
+        assert mgr.pushes_dropped > 0
+        # The cap ledger is clean: a push toward a live sibling admits.
+        live_key = op_key(3_100_000)
+        workers[0].store.put(live_key, _REGION)
+        mgr.directory.record(0, live_key, _REGION.nbytes)
+        assert mgr.push_region_toward(live_key, 2)
+        assert _wait(lambda: live_key in workers[2].store)
+    finally:
+        _teardown(endpoint, workers, clients)
+
+
+def test_rack_identity_registered_over_the_bus():
+    mgr, endpoint, workers, clients = _cluster(cap=None)
+    try:
+        assert mgr.directory.rack_of(0) == 0
+        assert mgr.directory.rack_of(1) == 1
+    finally:
+        _teardown(endpoint, workers, clients)
