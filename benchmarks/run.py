@@ -37,6 +37,8 @@ def main() -> None:
                     help="path for the pr4 bench JSON (default: BENCH_PR4.json)")
     ap.add_argument("--pr5-json", default=None,
                     help="path for the pr5 bench JSON (default: BENCH_PR5.json)")
+    ap.add_argument("--pr6-json", default=None,
+                    help="path for the pr6 bench JSON (default: BENCH_PR6.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -45,7 +47,7 @@ def main() -> None:
         args.only.split(",")
         if args.only
         else list(ALL_BENCHES)
-        + ["staging", "pr2", "pr3", "pr4", "pr5", "roofline"]
+        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -67,6 +69,10 @@ def main() -> None:
                 from benchmarks.network import bench_pr5
 
                 bench_rows = bench_pr5(args.pr5_json)
+            elif name == "pr6":
+                from benchmarks.serving import bench_pr6
+
+                bench_rows = bench_pr6(args.pr6_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

@@ -1,0 +1,226 @@
+"""PR6 bench: online serving front end — admission, fairness, elasticity.
+
+Four planes over the calibrated simulator's serving mode (open-loop
+Poisson arrivals over Zipf tile popularity, WFQ gateway, EDF tier),
+emitted as CSV rows and machine-readable ``BENCH_PR6.json``:
+
+* **saturation** — empirical capacity: offered load far beyond service
+  rate with admission off, completions per second inside the window is
+  the cluster's serving throughput mu.
+* **sweep** — offered load {0.5, 1.0, 1.5} x mu, admission off
+  (uncontrolled baseline) vs on (queue-depth cap).  Acceptance (a): at
+  1.5x mu the admitted stream's p99 stays <= 3x the half-load p99,
+  while the uncontrolled queue's p99 keeps growing with the backlog
+  (queueing collapse: every admitted request pays for the overload).
+* **fairness** — two tenants at 2:1 weights under sustained symmetric
+  overload.  Acceptance (b): completed-request split within 10% of the
+  configured weights.
+* **elastic** — drain one node mid-stream, join a fresh node later.
+  Acceptance (c): zero lost requests (every admitted request
+  completes; drained leases re-queue), with the throughput dip around
+  the membership events reported.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only pr6``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+Row = tuple[str, float, str]
+
+_NODES = 4
+_DURATION_S = 80.0
+_QUEUE_CAP = 16
+_INFLIGHT = 16
+
+
+def _serve_run(**overrides):
+    from repro.core.simulator import ClusterSim, SimConfig, segmentation_feature_workflow
+    from repro.core.workflow import ConcreteWorkflow
+
+    kwargs = dict(
+        n_nodes=_NODES,
+        serve_duration_s=_DURATION_S,
+        tenants={"t0": 1.0},
+        gateway_inflight=_INFLIGHT,
+        admission_queue_cap=None,
+        seed=17,
+    )
+    kwargs.update(overrides)
+    max_time = kwargs.pop("max_time", 10**9)
+    cfg = SimConfig(**kwargs)
+    cw = ConcreteWorkflow(segmentation_feature_workflow(cfg.fused_features))
+    return ClusterSim(cw, cfg).run(max_time=max_time)
+
+
+# --------------------------------------------------------------------------
+# saturation: measure the serving capacity empirically
+# --------------------------------------------------------------------------
+
+
+def _bench_saturation() -> dict[str, float]:
+    r = _serve_run(arrival_rate=50.0, admission_queue_cap=10_000,
+                   max_time=_DURATION_S)
+    mu = r.completed_requests / _DURATION_S
+    return {
+        "nodes": float(_NODES),
+        "window_s": _DURATION_S,
+        "completed_in_window": float(r.completed_requests),
+        "mu_req_per_s": mu,
+    }
+
+
+# --------------------------------------------------------------------------
+# sweep: offered load vs mu, admission off/on
+# --------------------------------------------------------------------------
+
+
+def _bench_sweep(mu: float) -> dict[str, dict[str, float]]:
+    out: dict[str, dict[str, float]] = {}
+    for frac in (0.5, 1.0, 1.5):
+        rate = frac * mu
+        for admission in (False, True):
+            cap = _QUEUE_CAP if admission else None
+            r = _serve_run(arrival_rate=rate, admission_queue_cap=cap)
+            key = f"{frac:g}x_{'on' if admission else 'off'}"
+            out[key] = {
+                "offered_req_per_s": rate,
+                "requests": float(r.requests),
+                "completed": float(r.completed_requests),
+                "shed": float(r.shed_requests),
+                "p50_s": r.latency_p50,
+                "p99_s": r.latency_p99,
+            }
+    return out
+
+
+# --------------------------------------------------------------------------
+# fairness: 2:1 weights under sustained overload
+# --------------------------------------------------------------------------
+
+
+def _bench_fairness(mu: float) -> dict[str, float]:
+    # Each tenant alone offers ~mu: together 2x saturation, so the WFQ
+    # window is the only thing deciding who gets the cluster.
+    r = _serve_run(
+        arrival_rate=mu,
+        serve_duration_s=60.0,
+        tenants={"a": 2.0, "b": 1.0},
+        admission_queue_cap=_QUEUE_CAP * 2,
+        max_time=60.0,
+        seed=3,
+    )
+    a = r.tenant_completed.get("a", 0)
+    b = r.tenant_completed.get("b", 0)
+    share = a / max(a + b, 1)
+    return {
+        "tenant_a_completed": float(a),
+        "tenant_b_completed": float(b),
+        "a_share": share,
+        "want_share": 2.0 / 3.0,
+        "share_err_rel": abs(share - 2.0 / 3.0) / (2.0 / 3.0),
+    }
+
+
+# --------------------------------------------------------------------------
+# elastic: drain + join mid-stream, zero lost requests
+# --------------------------------------------------------------------------
+
+
+def _bench_elastic(mu: float) -> dict[str, float]:
+    horizon = 20.0
+    drain_at, join_at = 6.0, 12.0
+    r = _serve_run(
+        arrival_rate=0.7 * mu,
+        serve_duration_s=horizon,
+        admission_queue_cap=256,
+        drain_node_at=(0, drain_at),
+        join_node_at=join_at,
+        seed=29,
+    )
+    steady = _serve_run(
+        arrival_rate=0.7 * mu,
+        serve_duration_s=horizon,
+        admission_queue_cap=256,
+        seed=29,
+    )
+    lost = r.requests - r.completed_requests - r.shed_requests
+    return {
+        "requests": float(r.requests),
+        "completed": float(r.completed_requests),
+        "shed": float(r.shed_requests),
+        "lost": float(lost),
+        "recovered_leases": float(r.recovered_leases),
+        "drain_at_s": drain_at,
+        "join_at_s": join_at,
+        "p99_s": r.latency_p99,
+        "steady_p99_s": steady.latency_p99,
+        # The membership churn's latency cost vs an undisturbed run.
+        "p99_dip_x": r.latency_p99 / max(steady.latency_p99, 1e-9),
+    }
+
+
+def bench_pr6(json_path: str | None = None) -> list[Row]:
+    sat = _bench_saturation()
+    mu = max(sat["mu_req_per_s"], 1e-6)
+    sweep = _bench_sweep(mu)
+    fair = _bench_fairness(mu)
+    elastic = _bench_elastic(mu)
+
+    half_p99 = sweep["0.5x_on"]["p99_s"]
+    over_on = sweep["1.5x_on"]
+    over_off = sweep["1.5x_off"]
+    report = {
+        "saturation": sat,
+        "sweep": sweep,
+        "fairness": fair,
+        "elastic": elastic,
+        "acceptance": {
+            # (a) admission bounds the admitted tail at overload.
+            "half_load_p99_s": half_p99,
+            "overload_admitted_p99_s": over_on["p99_s"],
+            "overload_uncontrolled_p99_s": over_off["p99_s"],
+            "admitted_p99_within_3x_half_load": (
+                over_on["p99_s"] <= 3.0 * half_p99
+            ),
+            "uncontrolled_degradation_x": over_off["p99_s"]
+            / max(half_p99, 1e-9),
+            # (b) throughput split tracks the 2:1 weights within 10%.
+            "fair_share_err_rel": fair["share_err_rel"],
+            "fairness_within_10pct": fair["share_err_rel"] <= 0.10,
+            # (c) elastic drain/join loses nothing.
+            "elastic_zero_lost": elastic["lost"] == 0.0,
+        },
+    }
+    out = Path(json_path) if json_path else (
+        Path(__file__).resolve().parents[1] / "BENCH_PR6.json"
+    )
+    out.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows: list[Row] = [
+        ("pr6/saturation/mu_req_per_s", mu,
+         f"{_NODES} nodes, admission off, {_DURATION_S:.0f}s window"),
+        ("pr6/sweep/half_on_p99_s", half_p99,
+         "0.5x mu, admission on: the healthy-tail baseline"),
+        ("pr6/sweep/sat_on_p99_s", sweep["1x_on"]["p99_s"],
+         "1.0x mu, admission on"),
+        ("pr6/sweep/over_on_p99_s", over_on["p99_s"],
+         f"1.5x mu, admission on (acceptance <= 3x half-load "
+         f"= {3 * half_p99:.2f}s)"),
+        ("pr6/sweep/over_off_p99_s", over_off["p99_s"],
+         "1.5x mu, admission OFF: queueing collapse"),
+        ("pr6/sweep/over_on_shed", over_on["shed"],
+         "requests shed (429) at 1.5x mu with the queue cap"),
+        ("pr6/fairness/a_share", fair["a_share"],
+         f"2:1 weights at 2x overload; want 0.667 "
+         f"(err {fair['share_err_rel'] * 100:.1f}%)"),
+        ("pr6/elastic/lost_requests", elastic["lost"],
+         "drain node 0 @6s + join @12s: acceptance exactly 0"),
+        ("pr6/elastic/recovered_leases", elastic["recovered_leases"],
+         "leases re-queued off the drained node"),
+        ("pr6/elastic/p99_dip_x", elastic["p99_dip_x"],
+         "p99 vs undisturbed run at the same offered load"),
+    ]
+    return rows

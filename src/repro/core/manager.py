@@ -71,6 +71,13 @@ class ManagerConfig:
     # *bytes* since the last snapshot (replay time is bounded by bytes
     # to parse, not append count) and snapshot_every is ignored.
     snapshot_bytes: Optional[int] = None
+    # Size-tiered (incremental) checkpoints: each trigger writes only
+    # the state that changed since the last checkpoint as a small delta
+    # run; deltas fold into a fresh full snapshot once their byte tier
+    # outgrows the base.  Keeps snapshot pauses bounded by churn, not
+    # directory size — load-bearing once a serving stream keeps the
+    # directory hot indefinitely.
+    incremental_snapshots: bool = False
     # Predictive push of sink outputs (coordinator-bypass data plane):
     # at stage completion the placement rule predicts the next holder
     # of each sink output and the completing worker pushes the bytes
@@ -133,6 +140,7 @@ class Manager:
                 self.cfg.directory,
                 snapshot_every=self.cfg.snapshot_every,
                 snapshot_bytes=self.cfg.snapshot_bytes,
+                incremental=self.cfg.incremental_snapshots,
             )
             for uid in self.directory.completed:
                 if uid in self.cw.stage_instances:
@@ -169,6 +177,17 @@ class Manager:
         self._done_event = threading.Event()
         self._monitor: Optional[threading.Thread] = None
         self._stop_monitor = False
+        # Serving front end (repro.serving): while a stream is open the
+        # workflow is never "done" — new stage instances keep arriving
+        # via submit_instances.  completion_hook (called outside the
+        # lock, once per completed primary stage) lets a gateway map
+        # completions back to requests.
+        self._streaming = False
+        self.completion_hook: Optional[Callable[[int], None]] = None
+        # Count of deadline-carrying instances in the pending queue:
+        # keeps the EDF insert on the serving path only (batch pushes
+        # stay O(1) appends).
+        self._pending_deadlines = 0
 
     # -- membership -------------------------------------------------------
 
@@ -246,25 +265,75 @@ class Manager:
                     st.dead = False
                     self._dispatch_all_locked()
 
-    def deregister_worker(self, worker_id: int) -> None:
-        """Elastic scale-down: return the worker's leases to the queue."""
+    def deregister_worker(self, worker_id: int) -> int:
+        """Elastic scale-down / drain: atomically release the worker's
+        in-flight push reservations AND re-queue its outstanding leases.
+
+        Everything happens under one lock hold so no dispatch can
+        observe the half-drained state (leases gone but ingress credit
+        still reserved, or vice versa).  In-flight ops on the draining
+        runtime are cancelled best-effort; a completion that races past
+        the cancel is dropped by ``_on_stage_complete`` (the worker is
+        no longer registered), so the re-queued twin is authoritative.
+        Returns the number of leases returned to the queue.
+        """
         with self._lock:
             st = self._workers.pop(worker_id, None)
             if st is None:
-                return
-            for uid in st.leases:
+                return 0
+            requeued = 0
+            for uid in sorted(st.leases):
                 if uid not in self._stage_done:
+                    try:
+                        st.runtime.cancel_stage(uid)
+                    except Exception:
+                        pass  # runtime may already be gone
                     self.recovered_leases += 1
+                    requeued += 1
                     self._push_pending_locked(self.cw.stage_instances[uid])
+            st.leases.clear()
             self.directory.drop_worker(worker_id)
+            # Pushes racing toward the drained worker are void: release
+            # their reserved ingress bytes and drop the deferred queue,
+            # else the credit leaks until the 10s expiry sweep (or
+            # forever, for deferred entries that never get admitted).
             self._abort_push_target_locked(worker_id)
             self._dispatch_all_locked()
+            return requeued
+
+    # ``drain`` is the serving-facing name for graceful scale-down; it
+    # is the same atomic operation as a deregistration.
+    drain_worker = deregister_worker
 
     def _push_pending_locked(self, si: StageInstance) -> None:
-        self._pending.append(si)
+        # EDF tier: deadline-carrying instances (serving requests) sort
+        # earliest-first at the head of the queue, ahead of deadline-free
+        # batch work.  The pending invariant is [deadlines ascending] +
+        # [batch FIFO]; batch pushes keep their O(1) append.
+        if getattr(si, "deadline", None) is None:
+            self._pending.append(si)
+        else:
+            i = 0
+            for p in self._pending:
+                d = getattr(p, "deadline", None)
+                if d is None or d > si.deadline:
+                    break
+                i += 1
+            self._pending.insert(i, si)
+            self._pending_deadlines += 1
         svc = self._journal_svc()
         if svc is not None:
             svc.note_pending(si.uid)
+
+    def _pop_pending_locked(self, idx: int = 0) -> StageInstance:
+        si = self._pending[idx] if idx else self._pending[0]
+        if idx:
+            del self._pending[idx]
+        else:
+            self._pending.popleft()
+        if getattr(si, "deadline", None) is not None:
+            self._pending_deadlines -= 1
+        return si
 
     # -- execution -----------------------------------------------------------
 
@@ -289,6 +358,56 @@ class Manager:
         self._stop_monitor = True
         self._monitor.join(timeout=2.0)
         return ok
+
+    # -- streaming (serving front end) ---------------------------------------
+
+    def open_stream(self) -> None:
+        """Switch to continuous-ingestion mode: the workflow is no
+        longer a fixed bag of tasks, so completion of everything
+        currently known must NOT fire the done event — more requests
+        may arrive.  Starts the heartbeat monitor so elastic membership
+        works without a blocking :meth:`run` call."""
+        with self._lock:
+            self._streaming = True
+            self._done_event.clear()
+        if self._monitor is None or not self._monitor.is_alive():
+            self._stop_monitor = False
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, daemon=True
+            )
+            self._monitor.start()
+
+    def close_stream(self, timeout: float = 120.0) -> bool:
+        """End continuous ingestion: wait for everything already
+        admitted to finish, then stop the monitor.  Returns False on
+        timeout."""
+        with self._lock:
+            self._streaming = False
+            self._dispatch_all_locked()
+            self._check_done_locked()
+        ok = self._done_event.wait(timeout=timeout)
+        self._stop_monitor = True
+        if self._monitor is not None:
+            self._monitor.join(timeout=2.0)
+        return ok
+
+    def submit_instances(self, sis: list[StageInstance]) -> None:
+        """Streamed submission: queue ready instances appended to the
+        live workflow (``ConcreteWorkflow.instantiate``) and dispatch.
+        Instances whose deps are not yet done unlock through the normal
+        ``_on_stage_complete`` path."""
+        with self._lock:
+            queued = {p.uid for p in self._pending}
+            queued.update(
+                uid for w in self._workers.values() for uid in w.leases
+            )
+            for si in sis:
+                if si.uid in self._stage_done or si.uid in queued:
+                    continue
+                if si.deps.issubset(self._stage_done):
+                    queued.add(si.uid)
+                    self._push_pending_locked(si)
+            self._dispatch_all_locked()
 
     def progress(self) -> tuple[int, int]:
         with self._lock:
@@ -315,10 +434,16 @@ class Manager:
     def _on_stage_complete(
         self, worker_id: int, si: StageInstance, outputs: dict[str, Any]
     ) -> None:
+        completed: Optional[int] = None
         with self._lock:
             st = self._workers.get(worker_id)
-            if st is not None:
-                st.last_heartbeat = time.monotonic()
+            if st is None:
+                # Completion racing past a drain/deregister: the lease
+                # was already re-queued and the worker's store is gone.
+                # Recording its outputs would point dependents at a
+                # holder nobody can dial; the re-leased twin wins.
+                return
+            st.last_heartbeat = time.monotonic()
             clones_of = self._clone_map()
             primary_uid = clones_of.get(si.uid, si.uid)
             if primary_uid in self._stage_done:
@@ -377,6 +502,11 @@ class Manager:
                 self._predict_pushes_locked(worker_id, primary, outputs)
             self._dispatch_all_locked()
             self._check_done_locked()
+            completed = primary_uid
+        # Outside the lock: the serving gateway's hook may re-enter the
+        # Manager (submit more instances when a request finishes).
+        if completed is not None and self.completion_hook is not None:
+            self.completion_hook(completed)
 
     def _dispatch_all_locked(self) -> None:
         live = {
@@ -389,7 +519,7 @@ class Manager:
         else:
             for wid, st in live.items():
                 while len(st.leases) < self.cfg.window and self._pending:
-                    self._lease_locked(wid, st, self._pending.popleft())
+                    self._lease_locked(wid, st, self._pop_pending_locked())
         if self.cfg.backup_tasks and not self._pending:
             self._issue_backups_locked()
 
@@ -427,8 +557,7 @@ class Manager:
                     )
                     if idx is None:
                         continue
-                    si = self._pending[idx]
-                    del self._pending[idx]
+                    si = self._pop_pending_locked(idx)
                     self._lease_locked(wid, st, si)
                     progress = True
 
@@ -502,11 +631,21 @@ class Manager:
         the landed bytes release their ingress-cap reservation and the
         target's deferred-push queue drains as far as the freed credit
         allows.
+
+        A confirmation racing in after the target drained (elastic
+        scale-down) must NOT resurrect the dead worker as a directory
+        holder — the bytes landed in a store nobody can dial anymore.
+        The reservation is still released either way so the ingress
+        ledger cannot leak.
         """
-        self.directory.record(worker_id, key, int(nbytes))
         with self._lock:
+            st = self._workers.get(worker_id)
+            live = st is not None and not st.dead and st.runtime.alive
+            if live:
+                self.directory.record(worker_id, key, int(nbytes))
             self._release_push_locked((worker_id, key))
-            self._drain_push_deferred_locked(worker_id)
+            if live:
+                self._drain_push_deferred_locked(worker_id)
 
     def push_region_toward(self, key: RegionKey, target_wid: int) -> bool:
         """Explicitly route one region push toward ``target_wid``
@@ -799,6 +938,9 @@ class Manager:
                 self._push_deferred_keys.discard((twid, key))
         for lkey in [k for k in self._push_inbound if k[0] == twid]:
             self._release_push_locked(lkey)
+        # Belt and braces: no ledger entry may outlive the target, so
+        # the raw byte counter must not either.
+        self._push_inflight_bytes.pop(twid, None)
 
     def _predict_assignment_locked(self, uids: list) -> dict[int, int]:
         """Which worker will the imminent dispatch lease each of
@@ -1030,6 +1172,8 @@ class Manager:
             st.runtime.submit_stage(clone)
 
     def _check_done_locked(self) -> None:
+        if self._streaming:
+            return  # open stream: more requests may still arrive
         clones = set(self._clone_map())
         for uid in self.cw.stage_instances:
             if uid in clones:

@@ -31,6 +31,17 @@ Two extensions for the device-resident fast path:
   ``limit`` ready instances of the *same operation* in one decision so
   an accelerator lane can execute them as a single batched kernel call
   and amortize its launch overhead.
+
+One extension for the serving front end (:mod:`repro.serving`):
+
+* **deadline tier (EDF)** — operation instances carrying a deadline
+  (inherited from their serving request) form a tier *above* the
+  FCFS/PATS order: an idle lane always takes the earliest-deadline
+  work first, and only falls back to the batch queue when no deadline
+  work is ready.  Within one deadline group (all ops of one request
+  share its deadline) the PATS rule still applies — accelerators take
+  the max-speedup member, host cores the min — so EDF decides *which
+  request* runs next and PATS decides *where* its ops run.
 """
 
 from __future__ import annotations
@@ -58,6 +69,8 @@ class SchedulerStats:
     # number of op instances dispatched inside those batches.
     batches: int = 0
     batched_ops: int = 0
+    # Serving: pops served from the deadline (EDF) tier.
+    deadline_pops: int = 0
 
     def record(self, op_name: str, lane_kind: str) -> None:
         key = (op_name, lane_kind)
@@ -122,11 +135,59 @@ class _SortedTasks:
         return iter(self._tasks)
 
 
+class _DeadlineTasks:
+    """Deadline-carrying tasks sorted by (deadline, speedup, seq).
+
+    The earliest-deadline *group* (ops sharing one request's deadline)
+    is served first; within the group an accelerator lane takes the
+    max-speedup member and a host lane the min — the PATS rule applied
+    inside the EDF tier.
+    """
+
+    def __init__(self) -> None:
+        self._keys: list[tuple[float, float, int]] = []
+        self._tasks: list[OperationInstance] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._tasks)
+
+    def __iter__(self) -> Iterable[OperationInstance]:
+        return iter(self._tasks)
+
+    def add(self, task: OperationInstance) -> None:
+        key = (float(task.deadline), task.speedup, self._seq)
+        self._seq += 1
+        i = bisect.bisect(self._keys, key)
+        self._keys.insert(i, key)
+        self._tasks.insert(i, task)
+
+    def pop_for(self, lane_kind: str) -> OperationInstance:
+        d0 = self._keys[0][0]
+        # End of the earliest-deadline group.
+        hi = bisect.bisect_right(self._keys, (d0, float("inf"), 1 << 62))
+        i = 0 if lane_kind == HOST_KIND else hi - 1
+        self._keys.pop(i)
+        return self._tasks.pop(i)
+
+    def remove(self, task: OperationInstance) -> None:
+        lo = bisect.bisect_left(
+            self._keys, (float(task.deadline), task.speedup, -1)
+        )
+        for i in range(lo, len(self._tasks)):
+            if self._tasks[i] is task:
+                del self._keys[i]
+                del self._tasks[i]
+                return
+        raise ValueError("task not in deadline queue")
+
+
 class ReadyScheduler:
     """Queue of ready ``(data chunk, operation)`` tuples + pop policy."""
 
     def __init__(self, policy: str = "fcfs", locality: bool = False,
-                 speedups_known: bool = True, chain_affinity: float = 0.0):
+                 speedups_known: bool = True, chain_affinity: float = 0.0,
+                 deadline_aware: bool = True):
         if policy not in ("fcfs", "pats"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
@@ -137,20 +198,28 @@ class ReadyScheduler:
         # Device-resident chaining recovers the dependent's own transfer
         # fraction on top of the classic DL rule (0 = plain DL).
         self.chain_affinity = chain_affinity
+        # Serving deadline tier: tasks with a deadline are popped EDF,
+        # ahead of the batch queue.  False = deadlines ignored (the
+        # FIFO baseline the serving benchmarks compare against).
+        self.deadline_aware = deadline_aware
         self.stats = SchedulerStats()
         self._fifo: deque[OperationInstance] = deque()
         self._sorted = _SortedTasks()
+        self._edf = _DeadlineTasks()
 
     # -- queue maintenance ---------------------------------------------------
 
     def push(self, task: OperationInstance) -> None:
-        if self.policy == "pats":
+        if self.deadline_aware and task.deadline is not None:
+            self._edf.add(task)
+        elif self.policy == "pats":
             self._sorted.add(task)
         else:
             self._fifo.append(task)
 
     def __len__(self) -> int:
-        return len(self._sorted) if self.policy == "pats" else len(self._fifo)
+        n = len(self._sorted) if self.policy == "pats" else len(self._fifo)
+        return n + len(self._edf)
 
     def __bool__(self) -> bool:
         return len(self) > 0
@@ -170,6 +239,13 @@ class ReadyScheduler:
         if not self:
             return None
         task: Optional[OperationInstance]
+        if self._edf:
+            # Deadline tier first: the most urgent request's ops beat
+            # any batch work, whatever its speedup or residency.
+            task = self._edf.pop_for(lane_kind)
+            self.stats.deadline_pops += 1
+            self.stats.record(task.op.name, lane_kind)
+            return task
         if self.locality and lane_kind != HOST_KIND and resident_producers:
             task = self._pop_locality(lane_kind, resident_producers)
         elif self.policy == "pats":
@@ -224,7 +300,10 @@ class ReadyScheduler:
             limit = min(limit, int(batchable(first)))
         if limit <= 1:
             return batch
-        pool = list(self._sorted) if self.policy == "pats" else list(self._fifo)
+        # Urgent (EDF-tier) members join the batch first: a batched
+        # launch that would run anyway should carry the deadline work.
+        pool = list(self._edf)
+        pool += list(self._sorted) if self.policy == "pats" else list(self._fifo)
         for task in pool:
             if len(batch) >= limit:
                 break
@@ -248,6 +327,16 @@ class ReadyScheduler:
         queue sorted by speedup, so already-queued instances must be
         re-keyed or the queue order goes stale against the estimates.
         """
+        if self._edf:
+            # Deadline keys embed the speedup (PATS-in-tier tie-break):
+            # re-key the EDF queue alongside the batch queue.
+            urgent = list(self._edf)
+            for task in urgent:
+                task.speedup = estimate(task)
+            fresh_edf = _DeadlineTasks()
+            for task in urgent:
+                fresh_edf.add(task)
+            self._edf = fresh_edf
         if self.policy != "pats":
             for task in self._fifo:
                 task.speedup = estimate(task)
@@ -310,7 +399,9 @@ class ReadyScheduler:
         return self._fifo.popleft()
 
     def _remove(self, task: OperationInstance) -> None:
-        if self.policy == "pats":
+        if self.deadline_aware and task.deadline is not None:
+            self._edf.remove(task)
+        elif self.policy == "pats":
             self._sorted.remove(task)
         else:
             self._fifo.remove(task)

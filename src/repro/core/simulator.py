@@ -220,6 +220,36 @@ class SimConfig:
     # one coalesced request (one rpc latency per batch) instead of one
     # request per key — the transport-level analog of micro-batching.
     batch_prefetch: bool = True
+    # -- serving mode (mirror of repro.serving) ---------------------------
+    # With arrival_rate set the sim runs open-loop: requests arrive on a
+    # Poisson clock (per tenant) over Zipf-popular tiles, flow through a
+    # simulated gateway (admission + weighted fair queueing) and are
+    # instantiated into the live workflow on dispatch — the batch
+    # seeding of ``run()`` is skipped.  Latency percentiles come out in
+    # SimResult.  ``None`` (default) keeps the batch behaviour.
+    arrival_rate: Optional[float] = None   # requests/second PER TENANT
+    serve_duration_s: float = 1.0          # arrival window length
+    tenants: dict[str, float] = field(default_factory=dict)  # name -> weight
+    # Relative deadline per request: one float for all tenants, or a
+    # ``{tenant: ms}`` dict for mixed deadline classes (urgent vs lax —
+    # the regime where EDF visibly beats FIFO).
+    deadline_ms: Optional[float | dict[str, float]] = None
+    zipf_alpha: float = 1.1
+    n_hot_tiles: int = 64
+    # Gateway admission: max queued (not yet dispatched) requests; None
+    # = uncontrolled ingestion (the queueing-collapse baseline).
+    admission_queue_cap: Optional[int] = None
+    # Requests concurrently released into the cluster (WFQ window).
+    gateway_inflight: int = 8
+    # Deadline-aware scheduling: EDF tier in the Manager's pending
+    # queue AND in every node's ReadyScheduler.  False = FIFO baseline
+    # (deadlines still measured, never enforced).
+    edf: bool = True
+    # Elastic membership under load: drain node ``(nid, t)`` gracefully
+    # (leases re-queued at once — no heartbeat wait, unlike
+    # fail_node_at), and/or have one extra node join at time ``t``.
+    drain_node_at: Optional[tuple[int, float]] = None
+    join_node_at: Optional[float] = None
 
     @property
     def dl(self) -> bool:
@@ -278,6 +308,17 @@ class SimResult:
     # crossed the Manager/Worker bus and the latency they exposed.
     control_messages: int = 0
     rpc_wait: float = 0.0
+    # Serving-mode accounting (cfg.arrival_rate): open-loop request
+    # stream through the simulated gateway.
+    requests: int = 0
+    completed_requests: int = 0
+    shed_requests: int = 0
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
+    deadline_misses: int = 0
+    tardiness_p99: float = 0.0
+    tenant_completed: dict[str, int] = field(default_factory=dict)
+    tenant_misses: dict[str, int] = field(default_factory=dict)
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -316,6 +357,30 @@ class _Lane:
     transfer_penalty: float = 1.0  # placement-dependent (§IV-A)
 
 
+def _pct(sorted_vals: list[float], q: float) -> float:
+    """Percentile of an ascending list (nearest-rank); 0.0 when empty."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[i]
+
+
+@dataclass
+class _SimRequest:
+    """One open-loop serving request inside the sim gateway."""
+
+    req_id: int
+    tenant: str
+    tile: int
+    arrival: float
+    deadline: Optional[float]        # absolute sim time, None = best effort
+    finish_tag: float = 0.0          # SFQ virtual finish (WFQ ordering)
+    start_tag: float = 0.0
+    remaining: int = 0               # terminal stages still outstanding
+    t_done: Optional[float] = None
+    shed: bool = False
+
+
 @dataclass
 class _Node:
     node_id: int
@@ -348,16 +413,21 @@ class ClusterSim:
         self.transfer_wait = 0.0
         # Data plane: per-link network topology (NICs, uplinks, the
         # relay route's coordinator NIC) and byte accounting.
+        # An elastic joiner is one extra node, built up front (the net
+        # topology is static) but dead until its join event fires.
+        self._n_total_nodes = cfg.n_nodes + (
+            1 if cfg.join_node_at is not None else 0
+        )
         self.net = build_network(
             cfg.network,
-            cfg.n_nodes,
+            self._n_total_nodes,
             cfg.interconnect_gb_s,
             rack_size=cfg.rack_size or cfg.node.rack_size,
             oversubscription=cfg.oversubscription,
         )
         # Topology identity flows into the placement directory so the
         # dispatch scoring can apply the rack-locality bonus.
-        for nid in range(cfg.n_nodes):
+        for nid in range(self._n_total_nodes):
             self.staging_dir.set_rack(nid, self.net.rack_of(nid))
         self.relay_region_bytes = 0
         self.direct_region_bytes = 0
@@ -378,7 +448,7 @@ class ClusterSim:
         self._region_ready: dict[tuple[int, int], float] = {}
 
         self.nodes: list[_Node] = []
-        for nid in range(cfg.n_nodes):
+        for nid in range(self._n_total_nodes):
             # Accelerator lanes first: when several lanes idle, the GPU
             # control threads win the race to the queue head.
             lanes = [_Lane(nid, ACCEL_KIND, i) for i in range(cfg.gpus)]
@@ -391,9 +461,12 @@ class ClusterSim:
                 locality=cfg.dl,
                 chain_affinity=1.0 if cfg.chaining else 0.0,
                 speedups_known=cfg.speedups_known,
+                deadline_aware=cfg.edf,
             )
             node = _Node(nid, lanes, sched)
             node.slow = cfg.straggler_factor.get(nid, 1.0)
+            if nid >= cfg.n_nodes:
+                node.alive = False  # elastic joiner, dead until its event
             self.nodes.append(node)
 
         # Manager state.
@@ -412,6 +485,29 @@ class ClusterSim:
 
         # Error-injected speedup estimates (§V-G protocol).
         self._est = self._make_estimates()
+
+        # Serving mode: the simulated gateway's state (mirrors
+        # repro.serving.RequestGateway — SFQ virtual time, per-tenant
+        # queues, admission, inflight window).
+        self.serving = cfg.arrival_rate is not None
+        self._serve_tenants = dict(cfg.tenants) or {"t0": 1.0}
+        self._serve_queues: dict[str, list[_SimRequest]] = {
+            t: [] for t in self._serve_tenants
+        }
+        self._serve_last_finish: dict[str, float] = {
+            t: 0.0 for t in self._serve_tenants
+        }
+        self._serve_vtime = 0.0
+        self._serve_queued = 0
+        self._serve_inflight = 0
+        self._serve_terminal: dict[int, _SimRequest] = {}
+        self._serve_reqs: list[_SimRequest] = []
+        self._serve_chunk_seq = itertools.count(10**7)  # clear of batch ids
+        self._tile_scale = (
+            np.random.default_rng(cfg.seed).uniform(0.8, 1.2, cfg.n_hot_tiles)
+            if self.serving
+            else None
+        )
 
     # -- calibrated cost model -------------------------------------------------
 
@@ -471,12 +567,20 @@ class ClusterSim:
         heapq.heappush(self._events, (t, next(self._seq), fn))
 
     def run(self, max_time: float = 10**9) -> SimResult:
-        self.pending.extend(self.cw.ready_stage_instances(self.stage_done))
-        for node in self.nodes:
-            self._fill_window(node)
+        if self.serving:
+            self._schedule_arrivals()
+        else:
+            self.pending.extend(self.cw.ready_stage_instances(self.stage_done))
+            for node in self.nodes:
+                self._fill_window(node)
         if self.cfg.fail_node_at is not None:
             nid, t = self.cfg.fail_node_at
             self._post(t, lambda: self._kill_node(nid))
+        if self.cfg.drain_node_at is not None:
+            nid, t = self.cfg.drain_node_at
+            self._post(t, lambda: self._drain_node(nid))
+        if self.cfg.join_node_at is not None:
+            self._post(self.cfg.join_node_at, self._join_node)
         while self._events:
             t, _, fn = heapq.heappop(self._events)
             if t > max_time:
@@ -513,6 +617,37 @@ class ClusterSim:
                 lane_busy[lane.kind] = (
                     lane_busy.get(lane.kind, 0.0) + lane.busy_total
                 )
+        serve_kwargs: dict = {}
+        if self.serving:
+            done_reqs = [
+                r for r in self._serve_reqs if not r.shed and r.t_done is not None
+            ]
+            lats = sorted(r.t_done - r.arrival for r in done_reqs)
+            tardy = sorted(
+                max(0.0, r.t_done - r.deadline)
+                for r in done_reqs
+                if r.deadline is not None
+            )
+            tenant_done: dict[str, int] = {}
+            tenant_miss: dict[str, int] = {}
+            for r in done_reqs:
+                tenant_done[r.tenant] = tenant_done.get(r.tenant, 0) + 1
+                if r.deadline is not None and r.t_done > r.deadline:
+                    tenant_miss[r.tenant] = tenant_miss.get(r.tenant, 0) + 1
+            completed = all(
+                r.shed or r.t_done is not None for r in self._serve_reqs
+            )
+            serve_kwargs = dict(
+                requests=len(self._serve_reqs),
+                completed_requests=len(done_reqs),
+                shed_requests=sum(1 for r in self._serve_reqs if r.shed),
+                latency_p50=_pct(lats, 0.50),
+                latency_p99=_pct(lats, 0.99),
+                deadline_misses=sum(1 for t in tardy if t > 0),
+                tardiness_p99=_pct(tardy, 0.99),
+                tenant_completed=tenant_done,
+                tenant_misses=tenant_miss,
+            )
         return SimResult(
             makespan=self.now,
             tiles=n_tiles,
@@ -541,7 +676,152 @@ class ClusterSim:
             batched_ops=batched_ops,
             control_messages=self.control_messages,
             rpc_wait=self.rpc_wait,
+            **serve_kwargs,
         )
+
+    # -- serving mode: open-loop gateway -----------------------------------------
+
+    def _schedule_arrivals(self) -> None:
+        from ..serving.workload import WorkloadConfig, generate_arrivals
+
+        dl = self.cfg.deadline_ms
+        dl_map = dl if isinstance(dl, dict) else None
+        arrivals = generate_arrivals(
+            WorkloadConfig(
+                arrival_rate=float(self.cfg.arrival_rate),
+                duration_s=self.cfg.serve_duration_s,
+                tenants=self._serve_tenants,
+                zipf_alpha=self.cfg.zipf_alpha,
+                n_tiles=self.cfg.n_hot_tiles,
+                deadline_ms=None if dl_map is not None else dl,
+                seed=self.cfg.seed,
+            )
+        )
+        for a in arrivals:
+            if dl_map is not None:
+                d_ms = dl_map.get(a.tenant)
+                deadline = a.t + d_ms / 1000.0 if d_ms else None
+            else:
+                deadline = (a.t + a.deadline_s) if a.deadline_s else None
+            req = _SimRequest(
+                req_id=len(self._serve_reqs),
+                tenant=a.tenant,
+                tile=a.tile,
+                arrival=a.t,
+                deadline=deadline,
+            )
+            self._serve_reqs.append(req)
+            self._post(a.t, lambda req=req: self._serve_arrival(req))
+
+    def _serve_arrival(self, req: _SimRequest) -> None:
+        """Gateway ingest: admit-or-shed, stamp SFQ tags, dispatch."""
+        cap = self.cfg.admission_queue_cap
+        if cap is not None and self._serve_queued >= cap:
+            req.shed = True
+            return
+        ts_w = self._serve_tenants.get(req.tenant, 1.0)
+        start = max(
+            self._serve_vtime, self._serve_last_finish.get(req.tenant, 0.0)
+        )
+        cost = 1.0  # uniform estimated cost: weights alone set the split
+        req.start_tag = start
+        req.finish_tag = start + cost / max(ts_w, 1e-9)
+        self._serve_last_finish[req.tenant] = req.finish_tag
+        self._serve_queues.setdefault(req.tenant, []).append(req)
+        self._serve_queued += 1
+        self._serve_dispatch()
+
+    def _serve_dispatch(self) -> None:
+        """WFQ release into the cluster: smallest head-of-line finish
+        tag wins, up to the gateway's inflight window."""
+        while self._serve_inflight < self.cfg.gateway_inflight:
+            best: Optional[str] = None
+            for tenant, q in self._serve_queues.items():
+                if q and (
+                    best is None
+                    or q[0].finish_tag
+                    < self._serve_queues[best][0].finish_tag
+                ):
+                    best = tenant
+            if best is None:
+                return
+            req = self._serve_queues[best].pop(0)
+            self._serve_vtime = max(self._serve_vtime, req.start_tag)
+            self._serve_queued -= 1
+            self._serve_inflight += 1
+            chunk = DataChunk(
+                chunk_id=next(self._serve_chunk_seq),
+                meta={
+                    "work_scale": float(self._tile_scale[req.tile]),
+                    "tile": req.tile,
+                },
+            )
+            # Deadline inheritance request -> stages (EDF plumbing);
+            # the FIFO baseline still *measures* deadlines but never
+            # stamps them into the schedulers.
+            deadline = req.deadline if self.cfg.edf else None
+            sis = self.cw.instantiate(chunk, deadline=deadline)
+            uids = {si.uid for si in sis}
+            terminals = [
+                si for si in sis if not (si.dependents & uids)
+            ] or sis[-1:]
+            req.remaining = len(terminals)
+            for si in terminals:
+                self._serve_terminal[si.uid] = req
+            self._n_primary_stages += len(sis)
+            for si in sis:
+                if si.deps.issubset(self.stage_done):
+                    self.pending.append(si)
+            for node in self.nodes:
+                self._fill_window(node)
+
+    def _serve_complete_stage(self, uid: int) -> None:
+        req = self._serve_terminal.pop(uid, None)
+        if req is None:
+            return
+        req.remaining -= 1
+        if req.remaining > 0:
+            return
+        req.t_done = self.now
+        self._serve_inflight -= 1
+        self._serve_dispatch()
+
+    # -- elastic membership -------------------------------------------------------
+
+    def _drain_node(self, nid: int) -> None:
+        """Graceful scale-down under load: unlike a crash (heartbeat
+        timeout, work on the node lost), a drain re-queues the node's
+        outstanding leases immediately and keeps completed op outputs
+        — zero lost requests is the contract."""
+        node = self.nodes[nid]
+        if not node.alive:
+            return
+        node.alive = False
+        self.staging_dir.drop_worker(nid)
+        for uid in sorted(node.leased):
+            if uid in self.stage_done:
+                continue
+            si = self.cw.stage_instances[uid]
+            # In-flight (incomplete) op work on the drained node is
+            # abandoned; finished ops re-run with the re-lease.
+            for oi in si.op_instances:
+                if (
+                    oi.uid in self.op_done
+                    and self.op_location.get(oi.uid, (None,))[0] == nid
+                ):
+                    self.op_done.discard(oi.uid)
+            self.recovered += 1
+            self.pending.append(si)
+        node.leased.clear()
+        for other in self.nodes:
+            self._fill_window(other)
+
+    def _join_node(self) -> None:
+        """Elastic scale-up: the pre-built extra node comes alive and
+        immediately pulls from the pending queue."""
+        node = self.nodes[-1]
+        node.alive = True
+        self._fill_window(node)
 
     # -- Manager: demand-driven assignment --------------------------------------
 
@@ -565,6 +845,17 @@ class ClusterSim:
     def _pick_for_node(self, node: _Node) -> StageInstance:
         """FIFO, with a locality preference: a stage whose upstream ran
         on this node keeps its data local (files / in-memory store)."""
+        if self.cfg.edf:
+            # EDF tier above the placement policies: the earliest
+            # deadline anywhere in the queue outranks locality and FIFO
+            # order — urgency first, affinity among the unhurried rest.
+            best_i, best_d = -1, None
+            for i, si in enumerate(self.pending):
+                d = si.deadline
+                if d is not None and (best_d is None or d < best_d):
+                    best_i, best_d = i, d
+            if best_i >= 0:
+                return self.pending.pop(best_i)
         if self.cfg.staging:
             if not self.cfg.staging_locality:
                 return self.pending.pop(0)  # pure demand-driven baseline
@@ -951,6 +1242,8 @@ class ClusterSim:
                 and dep_uid not in pending_now
             ):
                 self.pending.append(dsi)
+        if self.serving:
+            self._serve_complete_stage(effective.uid)
         self._fill_window(node)
 
     def _cancel_ops(self, si: StageInstance) -> None:
@@ -1131,6 +1424,11 @@ def run_simulation(
         builder = monolithic_workflow
     else:
         builder = lambda: segmentation_feature_workflow(cfg.fused_features)  # noqa: E731
+    if cfg.arrival_rate is not None:
+        # Serving mode: the gateway instantiates pipeline replicas per
+        # arrival; start from an empty concrete workflow.
+        cw = ConcreteWorkflow(builder())
+        return ClusterSim(cw, cfg).run()
     tiles = make_tiles(n_tiles, seed=cfg.seed)
     cw = ConcreteWorkflow.replicate(builder(), tiles)
     return ClusterSim(cw, cfg).run()

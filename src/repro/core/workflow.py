@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
 
 __all__ = [
     "Operation",
@@ -232,6 +232,11 @@ class OperationInstance:
     # Filled by the scheduler / cost model at enqueue time.
     speedup: float = 1.0          # estimated accelerator-vs-host-core speedup
     transfer_impact: float = 0.0  # fraction of exec time spent moving data
+    # Absolute completion deadline (serving front end).  Inherited from
+    # the request via the stage instance; None = batch work with no
+    # latency contract.  The ReadyScheduler's EDF tier orders deadline
+    # work ahead of the PATS speedup order.
+    deadline: Optional[float] = None
 
     def __hash__(self) -> int:
         return self.uid
@@ -247,6 +252,16 @@ class StageInstance:
     deps: set[int] = field(default_factory=set)  # uids of upstream stage insts
     dependents: set[int] = field(default_factory=set)
     op_instances: list[OperationInstance] = field(default_factory=list)
+    # Absolute completion deadline inherited from the serving request
+    # this instance belongs to (None = batch work).  The Manager's
+    # pending queue orders deadline work earliest-first (EDF tier).
+    deadline: Optional[float] = None
+
+    def set_deadline(self, deadline: Optional[float]) -> None:
+        """Deadline inheritance: request -> stage -> operations."""
+        self.deadline = deadline
+        for oi in self.op_instances:
+            oi.deadline = deadline
 
     def __hash__(self) -> int:
         return self.uid
@@ -268,18 +283,39 @@ class ConcreteWorkflow:
     ) -> "ConcreteWorkflow":
         """Replicate the full pipeline once per data chunk (Fig 3, top)."""
         cw = ConcreteWorkflow(abstract)
+        for chunk in chunks:
+            cw.instantiate(chunk)
+        return cw
+
+    def instantiate(
+        self, chunk: DataChunk, deadline: Optional[float] = None
+    ) -> list[StageInstance]:
+        """Replicate the abstract pipeline for ONE data chunk and return
+        the new stage instances (in topological stage order).
+
+        This is the continuous-ingestion entry point: a serving gateway
+        instantiates each admitted request against the live workflow
+        and hands the instances to a streaming Manager, instead of
+        building the whole ConcreteWorkflow up front.  ``deadline`` (an
+        absolute timestamp) is inherited by every stage and operation
+        instance created here (EDF scheduling tier).
+        """
+        abstract = self.abstract
         order = abstract.stage_order()
         preds: dict[str, list[str]] = {s: [] for s in order}
         for src, dst in abstract.edges:
             preds[dst].append(src)
-        for chunk in chunks:
-            per_stage: dict[str, StageInstance] = {}
-            for sname in order:
-                si = cw._new_stage_instance(chunk, abstract.stage(sname))
-                for p in preds[sname]:
-                    cw._link_stages(per_stage[p], si)
-                per_stage[sname] = si
-        return cw
+        per_stage: dict[str, StageInstance] = {}
+        created: list[StageInstance] = []
+        for sname in order:
+            si = self._new_stage_instance(chunk, abstract.stage(sname))
+            for p in preds[sname]:
+                self._link_stages(per_stage[p], si)
+            per_stage[sname] = si
+            if deadline is not None:
+                si.set_deadline(deadline)
+            created.append(si)
+        return created
 
     @staticmethod
     def stage_parallel(

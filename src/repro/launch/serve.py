@@ -13,6 +13,12 @@ Runs a reduced config on CPU::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
         --requests 16 --max-new 8
+
+Note: the cluster-level serving front end this framing seeded —
+continuous ingestion, admission control, per-tenant weighted fair
+queueing, EDF deadline scheduling, elastic membership — now lives in
+:mod:`repro.serving` (see ``docs/serving.md``).  This module keeps the
+single-node LLM prefill/decode demonstration of the PATS queue.
 """
 
 from __future__ import annotations

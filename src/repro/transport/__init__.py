@@ -48,6 +48,7 @@ from .bus import (
 from .codec import Codec, WireCodec, default_codec
 from .endpoint import (
     ManagerEndpoint,
+    ServingClient,
     WorkerClient,
     WorkerProxy,
     WorkerSpec,
@@ -67,6 +68,7 @@ __all__ = [
     "MessageBus",
     "Peer",
     "RemoteError",
+    "ServingClient",
     "SocketBus",
     "SocketPeer",
     "WireCodec",

@@ -58,12 +58,48 @@ from ..staging.tiers import sizeof as _sizeof
 
 __all__ = [
     "ManagerEndpoint",
+    "ServingClient",
     "WorkerProxy",
     "WorkerClient",
     "WorkerSpec",
     "spawn_worker",
     "worker_main",
 ]
+
+
+class ServingClient:
+    """Remote tenant's handle on a serving Manager endpoint.
+
+    Streams tile requests over the bus (``submit_request``) and polls
+    their fate (``request_status``) — the out-of-process face of
+    :class:`repro.serving.RequestGateway`.
+    """
+
+    def __init__(self, bus: "MessageBus", address: str) -> None:
+        self.peer = bus.connect(address, {})
+
+    def submit(
+        self,
+        chunk_id: int,
+        tenant: str = "default",
+        deadline_ms: Optional[float] = None,
+        cost_s: Optional[float] = None,
+    ) -> dict:
+        return self.peer.call(
+            "submit_request",
+            {
+                "chunk_id": int(chunk_id),
+                "tenant": tenant,
+                "deadline_ms": deadline_ms,
+                "cost_s": cost_s,
+            },
+        )
+
+    def status(self, req_id: int) -> dict:
+        return self.peer.call("request_status", int(req_id))
+
+    def close(self) -> None:
+        self.peer.close()
 
 
 class _ProxyStore:
@@ -190,9 +226,14 @@ class WorkerProxy:
 class ManagerEndpoint:
     """Serves a Manager's control plane on a MessageBus."""
 
-    def __init__(self, manager, bus: MessageBus) -> None:
+    def __init__(self, manager, bus: MessageBus, gateway=None) -> None:
         self.manager = manager
         self.bus = bus
+        # Optional serving front end (repro.serving.RequestGateway):
+        # when attached, clients can stream tile requests over the bus
+        # (submit_request / request_status) instead of calling the
+        # gateway in-process.
+        self.gateway = gateway
         self.proxies: dict[int, WorkerProxy] = {}
         self._peer_worker: dict[Peer, int] = {}
         self._lock = threading.Lock()
@@ -218,9 +259,15 @@ class ManagerEndpoint:
                 "resolve_regions": self._h_resolve_regions,
                 "region_staged": self._h_region_staged,
                 "region_drop": self._h_region_drop,
+                "submit_request": self._h_submit_request,
+                "request_status": self._h_request_status,
             },
             on_disconnect=self._on_disconnect,
         )
+
+    def attach_gateway(self, gateway) -> None:
+        """Late-bind the serving gateway (it needs the Manager first)."""
+        self.gateway = gateway
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -294,6 +341,39 @@ class ManagerEndpoint:
         si = self.manager.cw.stage_instances.get(uid)
         if si is not None:
             proxy.on_stage_complete(si, outputs)
+
+    # -- handlers (serving clients -> gateway) ------------------------------
+
+    def _h_submit_request(self, peer: Peer, payload: Any):
+        """Streamed request ingestion over the bus.  Payload names a
+        tile (``chunk_id``) plus tenant/deadline; a DataChunk is built
+        here so remote clients never serialize payload objects.  The
+        reply is the admission verdict — a shed request is the 429."""
+        if self.gateway is None:
+            return {"ok": False, "error": "no gateway attached"}
+        from ..core.workflow import DataChunk
+
+        req = self.gateway.submit(
+            str(payload.get("tenant", "default")),
+            DataChunk(int(payload["chunk_id"])),
+            deadline_ms=payload.get("deadline_ms"),
+            cost_s=payload.get("cost_s"),
+        )
+        return {"ok": True, "req_id": req.req_id, "accepted": req.accepted}
+
+    def _h_request_status(self, peer: Peer, payload: Any):
+        if self.gateway is None:
+            return {"ok": False, "error": "no gateway attached"}
+        req = self.gateway.request(int(payload))
+        if req is None:
+            return {"ok": False, "error": "unknown request"}
+        return {
+            "ok": True,
+            "req_id": req.req_id,
+            "state": req.state,
+            "tenant": req.tenant,
+            "latency": req.latency,
+        }
 
     def _h_fetch_region(self, peer: Peer, payload: Any):
         value = self.manager._fetch_region(_as_key(payload))  # noqa: SLF001
