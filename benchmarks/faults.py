@@ -1,0 +1,398 @@
+"""PR7 bench: fault injection — throughput under faults, failover, quarantine.
+
+Three planes over the real transport cluster (fan-in demo pipeline on
+``InprocBus`` wrapped in ``FaultyBus``), emitted as CSV rows and
+machine-readable ``BENCH_PR7.json``:
+
+* **throughput** — the same seeded cluster at 0% / 1% / 5% injected
+  fault rates (dropped + delayed notifies, failed calls, corrupted
+  region payloads, all at the given rate).  Acceptance: chunks/s at 1%
+  within 0.8x of the fault-free run — retry/backoff, CRC re-fetch and
+  heartbeat reaping absorb a realistic fault floor without collapsing
+  end-to-end throughput.
+* **failover** — coordinator killed with half the chunks wedged behind
+  a gate; a fresh coordinator rehydrates from the journal and finishes
+  the run.  Reports journal-replay time, total time from kill to
+  completion, and exactly-once output accounting across the failover.
+* **quarantine** — one deterministically-poisonous chunk on a healthy
+  cluster: the poison chunk's stages (and only those) must quarantine
+  after ``quarantine_after`` distinct workers, every healthy chunk must
+  complete, and the run must terminate instead of wedging.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only pr7``.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+Row = tuple[str, float, str]
+
+# Per-op service time: large enough that a single reap-recovered lease
+# (bounded by heartbeat_timeout) is small next to the run, small enough
+# that the three-rate sweep stays in bench territory.
+_OP_S = 0.15
+_N_CHUNKS = 48
+_N_WORKERS = 4
+_HEARTBEAT_S = 0.5
+_RATES = (0.0, 0.01, 0.05)
+
+
+def _build_cluster(plan, cw, reg, *, n_workers, hook=None, **cfg_kwargs):
+    import repro.transport as T
+    from repro.core import LaneSpec, Manager, ManagerConfig, WorkerRuntime
+    from repro.faults import FaultyBus
+    from repro.staging import StagingConfig
+
+    cfg = dict(
+        window=2,
+        locality_aware=True,
+        backup_tasks=False,
+        heartbeat_timeout=_HEARTBEAT_S,
+        poll_interval=0.05,
+        rpc_timeout=2.0,
+    )
+    cfg.update(cfg_kwargs)
+    mgr = Manager(cw, ManagerConfig(**cfg))
+    endpoint = T.ManagerEndpoint(mgr, FaultyBus(T.InprocBus(), plan))
+    workers, clients = [], []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=reg,
+            staging=StagingConfig(),
+        )
+        if hook is not None:
+            rt.on_op_start = hook
+        rt.start()
+        workers.append(rt)
+        clients.append(
+            T.WorkerClient(
+                rt, FaultyBus(T.InprocBus(), plan), endpoint.address
+            )
+        )
+    return mgr, endpoint, workers, clients
+
+
+def _teardown(endpoint, workers) -> None:
+    for rt in workers:
+        rt.stop()
+    endpoint.bus.close()
+
+
+def _combine_outputs(mgr, cw, done=None) -> list:
+    clones = mgr._clone_map()  # noqa: SLF001
+    outs = (
+        mgr.stage_outputs(si.uid).get("combine")
+        for si in cw.stage_instances.values()
+        if si.stage.name == "combine"
+        and si.uid not in clones
+        and (done is None or si.uid in done)
+    )
+    return sorted(v for v in outs if v is not None)
+
+
+# --------------------------------------------------------------------------
+# throughput: 0 / 1 / 5 % injected fault rate, same seeded harness
+# --------------------------------------------------------------------------
+
+
+def _bench_throughput_at(rate: float) -> dict[str, float]:
+    from repro.faults import FaultPlan
+    from repro.transport.demo import expected_combine, fanin_concrete, fanin_registry
+
+    plan = FaultPlan(
+        seed=71,
+        drop_notify=rate,
+        delay_notify=rate,
+        delay_s=0.005,
+        fail_call=rate,
+        corrupt_rate=rate,
+    )
+    cw = fanin_concrete(_N_CHUNKS)
+    mgr, endpoint, workers, clients = _build_cluster(
+        plan,
+        cw,
+        fanin_registry(),
+        n_workers=_N_WORKERS,
+        hook=plan.op_hook(slow_factor=_OP_S),
+        # This plane measures throughput, not quarantine: no chunk is
+        # poisonous, so coincidental lease losses at the 5% rate must
+        # retry rather than quarantine (the quarantine plane below
+        # measures the budget on a deterministic poison chunk).
+        quarantine_after=10_000,
+    )
+    try:
+        assert endpoint.wait_workers(_N_WORKERS, timeout=30.0)
+        plan.start()
+        t0 = time.monotonic()
+        ok = mgr.run(timeout=300.0)
+        wall = time.monotonic() - t0
+        correct = ok and _combine_outputs(mgr, cw) == sorted(
+            expected_combine(i) for i in range(_N_CHUNKS)
+        )
+        buses = [endpoint.bus] + [c.bus for c in clients]
+        return {
+            "rate": rate,
+            "wall_s": wall,
+            "chunks_per_s": _N_CHUNKS / wall,
+            "completed_ok": float(correct),
+            "quarantined": float(len(mgr.quarantined())),
+            "injected_drops": float(sum(b.injected_drops for b in buses)),
+            "injected_call_failures": float(
+                sum(b.injected_call_failures for b in buses)
+            ),
+            "injected_corrupted": float(sum(b.corrupted for b in buses)),
+            "crc_rejects": float(sum(c.crc_rejects for c in clients)),
+            "lease_retries": float(mgr.lease_retries),
+        }
+    finally:
+        _teardown(endpoint, workers)
+
+
+# --------------------------------------------------------------------------
+# failover: kill the coordinator mid-run, rehydrate from the journal
+# --------------------------------------------------------------------------
+
+
+def _bench_failover() -> dict[str, float]:
+    import numpy as np
+
+    import repro.transport as T
+    from repro.core import LaneSpec, Manager, ManagerConfig, WorkerRuntime
+    from repro.staging import StagingConfig
+    from repro.transport.demo import expected_combine, fanin_concrete, fanin_registry
+
+    n_chunks, n_workers, gate_from = 8, 2, 4
+    release = threading.Event()
+    reg = fanin_registry()
+
+    def gated_combine(ctx):
+        # The back half of the run wedges until after the failover.
+        if ctx.chunk.chunk_id >= gate_from:
+            assert release.wait(timeout=60.0)
+        a = np.asarray(ctx.inputs["produce_a"])
+        b = np.asarray(ctx.inputs["produce_b"])
+        return float(a.sum() + b.sum())
+
+    reg.register("combine", "cpu", gated_combine)
+    cw = fanin_concrete(n_chunks)
+
+    workers = []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=reg,
+            staging=StagingConfig(),
+        )
+        rt.start()
+        workers.append(rt)
+
+    with tempfile.TemporaryDirectory() as td:
+        journal = str(td) + "/manager.wal"
+        cfg = dict(
+            window=2,
+            locality_aware=True,
+            backup_tasks=False,
+            heartbeat_timeout=120.0,
+            journal_path=journal,
+        )
+        try:
+            mgr1 = Manager(cw, ManagerConfig(**cfg))
+            endpoint1 = T.ManagerEndpoint(mgr1, T.InprocBus())
+            clients1 = [
+                T.WorkerClient(rt, T.InprocBus(), endpoint1.address)
+                for rt in workers
+            ]
+            assert endpoint1.wait_workers(n_workers, timeout=30.0)
+            # Front half completes; the gated back half wedges the run.
+            assert not mgr1.run(timeout=5.0)
+            done_before = mgr1.progress()[0]
+            # The journal replays completion facts, not output bytes:
+            # capture the pre-kill combine values from the dying
+            # coordinator so exactly-once can be checked end to end.
+            outs1 = {
+                si.uid: mgr1.stage_outputs(si.uid).get("combine")
+                for si in cw.stage_instances.values()
+                if si.stage.name == "combine"
+                and mgr1.stage_outputs(si.uid).get("combine") is not None
+            }
+            mgr1.directory.close()  # the coordinator dies
+            endpoint1.bus.close()
+            del clients1
+
+            t_kill = time.monotonic()
+            mgr2 = Manager(cw, ManagerConfig(**cfg))
+            rehydrate_s = time.monotonic() - t_kill
+            endpoint2 = T.ManagerEndpoint(mgr2, T.InprocBus())
+            clients2 = [
+                T.WorkerClient(rt, T.InprocBus(), endpoint2.address)
+                for rt in workers
+            ]
+            assert endpoint2.wait_workers(n_workers, timeout=30.0)
+            release.set()
+            ok = mgr2.run(timeout=60.0)
+            total_s = time.monotonic() - t_kill
+            outs2 = {
+                si.uid: mgr2.stage_outputs(si.uid).get("combine")
+                for si in cw.stage_instances.values()
+                if si.stage.name == "combine"
+                and mgr2.stage_outputs(si.uid).get("combine") is not None
+            }
+            re_executed = len(outs1.keys() & outs2.keys())
+            merged = sorted({**outs1, **outs2}.values())
+            correct = (
+                ok
+                and re_executed == 0
+                and merged
+                == sorted(expected_combine(i) for i in range(n_chunks))
+            )
+            endpoint2.bus.close()
+            del clients2
+            return {
+                "chunks": float(n_chunks),
+                "done_before_kill": float(done_before),
+                "rehydrate_s": rehydrate_s,
+                "kill_to_done_s": total_s,
+                "re_executed_after_failover": float(re_executed),
+                "exactly_once": float(correct),
+            }
+        finally:
+            release.set()
+            for rt in workers:
+                rt.stop()
+
+
+# --------------------------------------------------------------------------
+# quarantine: one poison chunk must not wedge (or widen) the run
+# --------------------------------------------------------------------------
+
+
+def _bench_quarantine() -> dict[str, float]:
+    from repro.faults import FaultPlan
+    from repro.transport.demo import expected_combine, fanin_concrete, fanin_registry
+
+    n_chunks, poison_cid, q_after = 8, 3, 2
+    plan = FaultPlan()
+    cw = fanin_concrete(n_chunks)
+    mgr, endpoint, workers, clients = _build_cluster(
+        plan,
+        cw,
+        fanin_registry(),
+        n_workers=2,
+        hook=plan.op_hook(poison_chunks=(poison_cid,)),
+        quarantine_after=q_after,
+        heartbeat_timeout=120.0,
+    )
+    try:
+        assert endpoint.wait_workers(2, timeout=30.0)
+        t0 = time.monotonic()
+        ok = mgr.run(timeout=120.0)
+        wall = time.monotonic() - t0
+        q = set(mgr.quarantined())
+        clones = mgr._clone_map()  # noqa: SLF001
+        poison_uids = {
+            si.uid
+            for si in cw.stage_instances.values()
+            if si.chunk.chunk_id == poison_cid and si.uid not in clones
+        }
+        wrong = len(q - poison_uids)
+        missed = len(poison_uids - q)
+        done = mgr.progress()[0]
+        healthy_ok = _combine_outputs(
+            mgr, cw, done=set(mgr._stage_done)  # noqa: SLF001
+        ) == sorted(
+            expected_combine(i) for i in range(n_chunks) if i != poison_cid
+        )
+        return {
+            "chunks": float(n_chunks),
+            "quarantine_after": float(q_after),
+            "run_terminated": float(ok),
+            "wall_s": wall,
+            "quarantined_stages": float(len(q)),
+            "wrong_quarantines": float(wrong),
+            "missed_quarantines": float(missed),
+            "healthy_completed": float(done),
+            "healthy_outputs_correct": float(healthy_ok),
+            "stage_failures": float(mgr.stage_failures),
+        }
+    finally:
+        _teardown(endpoint, workers)
+
+
+def bench_pr7(json_path: str | None = None) -> list[Row]:
+    thr = {f"{r:g}": _bench_throughput_at(r) for r in _RATES}
+    failover = _bench_failover()
+    quarantine = _bench_quarantine()
+
+    clean = thr["0"]["chunks_per_s"]
+    ratio_1 = thr["0.01"]["chunks_per_s"] / max(clean, 1e-9)
+    ratio_5 = thr["0.05"]["chunks_per_s"] / max(clean, 1e-9)
+    report = {
+        "throughput": thr,
+        "failover": failover,
+        "quarantine": quarantine,
+        "acceptance": {
+            # (a) a 1% fault floor costs <= 20% end-to-end throughput.
+            "faulty_1pct_ratio": ratio_1,
+            "faulty_1pct_within_0.8x": ratio_1 >= 0.8,
+            "faulty_5pct_ratio": ratio_5,
+            # (b) failover loses nothing and duplicates nothing.
+            "failover_exactly_once": failover["exactly_once"] == 1.0,
+            # (c) quarantine hits the poison chunk's stages exactly.
+            "quarantine_correct": (
+                quarantine["wrong_quarantines"] == 0.0
+                and quarantine["missed_quarantines"] == 0.0
+                and quarantine["run_terminated"] == 1.0
+                and quarantine["healthy_outputs_correct"] == 1.0
+            ),
+        },
+    }
+    out = Path(json_path) if json_path else (
+        Path(__file__).resolve().parents[1] / "BENCH_PR7.json"
+    )
+    out.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows: list[Row] = [
+        ("pr7/throughput/clean_chunks_per_s", clean,
+         f"{_N_CHUNKS} chunks, {_N_WORKERS} workers, 0% faults"),
+        ("pr7/throughput/1pct_chunks_per_s", thr["0.01"]["chunks_per_s"],
+         f"1% drop/delay/fail/corrupt (acceptance >= 0.8x clean "
+         f"= {0.8 * clean:.3g})"),
+        ("pr7/throughput/1pct_ratio", ratio_1,
+         "1% faulty vs fault-free (acceptance >= 0.8)"),
+        ("pr7/throughput/5pct_chunks_per_s", thr["0.05"]["chunks_per_s"],
+         f"5% fault rate ({ratio_5:.2f}x clean; reported, not gated)"),
+        ("pr7/throughput/1pct_injected",
+         thr["0.01"]["injected_drops"]
+         + thr["0.01"]["injected_call_failures"]
+         + thr["0.01"]["injected_corrupted"],
+         "faults actually injected at 1% (not a vacuous pass)"),
+        ("pr7/failover/rehydrate_s", failover["rehydrate_s"],
+         "journal replay on the replacement coordinator"),
+        ("pr7/failover/kill_to_done_s", failover["kill_to_done_s"],
+         f"coordinator kill -> run complete "
+         f"({failover['done_before_kill']:.0f}/"
+         f"{failover['chunks'] * 3:.0f} stages were already done)"),
+        ("pr7/failover/exactly_once", failover["exactly_once"],
+         "every chunk's output present and bit-correct after failover"),
+        ("pr7/quarantine/wrong_quarantines",
+         quarantine["wrong_quarantines"],
+         "healthy stages quarantined (acceptance exactly 0)"),
+        ("pr7/quarantine/missed_quarantines",
+         quarantine["missed_quarantines"],
+         "poison stages NOT quarantined (acceptance exactly 0)"),
+        ("pr7/quarantine/healthy_completed",
+         quarantine["healthy_completed"],
+         f"stages completed around the poison chunk "
+         f"(of {quarantine['chunks'] * 3 - 3:.0f})"),
+        ("pr7/quarantine/wall_s", quarantine["wall_s"],
+         "the poison chunk terminates the run instead of wedging it"),
+    ]
+    return rows

@@ -39,6 +39,8 @@ def main() -> None:
                     help="path for the pr5 bench JSON (default: BENCH_PR5.json)")
     ap.add_argument("--pr6-json", default=None,
                     help="path for the pr6 bench JSON (default: BENCH_PR6.json)")
+    ap.add_argument("--pr7-json", default=None,
+                    help="path for the pr7 bench JSON (default: BENCH_PR7.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -47,7 +49,7 @@ def main() -> None:
         args.only.split(",")
         if args.only
         else list(ALL_BENCHES)
-        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "roofline"]
+        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -73,6 +75,10 @@ def main() -> None:
                 from benchmarks.serving import bench_pr6
 
                 bench_rows = bench_pr6(args.pr6_json)
+            elif name == "pr7":
+                from benchmarks.faults import bench_pr7
+
+                bench_rows = bench_pr7(args.pr7_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

@@ -97,6 +97,18 @@ class ManagerConfig:
     # the target's ingress).  The simulator mirrors this knob as
     # ``SimConfig.push_inflight_cap_bytes``.
     push_inflight_cap_bytes: Optional[int] = None
+    # Control-plane RPC timeout (seconds) the bus endpoints use for
+    # manager->worker calls; the register reply hands it to workers for
+    # their worker->manager calls.  Tight by design: a hung peer must
+    # surface as BusTimeoutError fast, not stall the caller for the bus
+    # default 30s.
+    rpc_timeout: float = 10.0
+    # Poison-chunk quarantine: a stage instance that fails on (or takes
+    # down) this many *distinct* workers is quarantined — it and its
+    # dependents become terminal failed state (surfaced through
+    # ``failure_hook`` / the serving gateway) instead of being re-leased
+    # forever and wedging the run.
+    quarantine_after: int = 3
 
 
 @dataclass
@@ -130,6 +142,20 @@ class Manager:
         self._dup_issued: set[int] = set()
         self.recovered_leases = 0
         self.duplicated_leases = 0
+        # Per-lease attempt budget: primary uid -> distinct workers that
+        # failed (or died) while holding it.  Crossing
+        # ``cfg.quarantine_after`` quarantines the stage and its
+        # dependents: terminal failed state, not an eternal re-lease.
+        # Deliberately NOT journaled: after a failover the chunk re-runs,
+        # re-fails, and re-quarantines — slower, never wrong.
+        self._attempts: dict[int, set[int]] = {}
+        self._quarantined: dict[int, str] = {}
+        self.stage_failures = 0   # explicit worker failure reports
+        self.lease_retries = 0    # failed leases re-queued elsewhere
+        # Called outside the lock, once per newly-quarantined primary
+        # uid, as hook(uid, error) — the serving gateway maps these to
+        # terminal ``failed`` request state.
+        self.failure_hook: Optional[Callable[[int, str], None]] = None
         # Cluster placement metadata + locality accounting.  With a
         # journal path the directory becomes a DirectoryService whose
         # mutations are write-ahead logged; opening an existing journal
@@ -198,6 +224,7 @@ class Manager:
         rack: Any = None,
     ) -> None:
         runtime.on_stage_complete = self._make_completion_cb(runtime.worker_id)
+        runtime.on_stage_failed = self._make_failure_cb(runtime.worker_id)
         runtime.on_heartbeat = self._heartbeat  # per-op liveness pings
         # Region pull path: the StagingAgent prefetches completed
         # upstream outputs, and lanes re-pull inputs evicted under soft
@@ -226,15 +253,23 @@ class Manager:
                         _wid, key
                     )
                 )
+        newly_q: list[int] = []
         with self._lock:
             # A relaunched worker re-registering its id must not orphan
             # the old incarnation's in-flight leases: recover them first
             # (chunk processing is idempotent), and drop the dead
-            # incarnation's replicas from the directory.
+            # incarnation's replicas from the directory.  Each lost
+            # lease charges the dead incarnation against the chunk's
+            # attempt budget — a chunk that keeps taking workers down
+            # quarantines instead of cycling through the fleet.
             old = self._workers.get(wid)
             if old is not None:
-                for uid in old.leases:
-                    if uid not in self._stage_done:
+                # Snapshot: crossing the attempt budget cancels leases
+                # (mutates this set mid-iteration otherwise).
+                for uid in list(old.leases):
+                    if uid not in self._stage_done and self._charge_attempt_locked(
+                        wid, uid, "worker lost mid-lease", newly_q
+                    ):
                         self.recovered_leases += 1
                         self._push_pending_locked(self.cw.stage_instances[uid])
                 self.directory.drop_worker(wid)
@@ -251,6 +286,8 @@ class Manager:
                 # same-rack replicas (PlacementPolicy.rack_affinity).
                 self.directory.set_rack(wid, rack)
             self._dispatch_all_locked()
+            self._check_done_locked()
+        self._fire_failure_hooks(newly_q)
 
     def _heartbeat(self, worker_id: int) -> None:
         with self._lock:
@@ -402,7 +439,11 @@ class Manager:
                 uid for w in self._workers.values() for uid in w.leases
             )
             for si in sis:
-                if si.uid in self._stage_done or si.uid in queued:
+                if (
+                    si.uid in self._stage_done
+                    or si.uid in self._quarantined
+                    or si.uid in queued
+                ):
                     continue
                 if si.deps.issubset(self._stage_done):
                     queued.add(si.uid)
@@ -448,6 +489,11 @@ class Manager:
             primary_uid = clones_of.get(si.uid, si.uid)
             if primary_uid in self._stage_done:
                 return  # a backup twin already completed this lease
+            if primary_uid in self._quarantined:
+                # Completion racing past a quarantine decision: the
+                # stage is already terminally accounted as failed —
+                # recording it done too would double-count the tile.
+                return
             self._stage_done.add(primary_uid)
             if si.uid != primary_uid:
                 self._stage_done.add(si.uid)
@@ -508,6 +554,131 @@ class Manager:
         if completed is not None and self.completion_hook is not None:
             self.completion_hook(completed)
 
+    # -- failure handling / poison-chunk quarantine --------------------------
+
+    def _make_failure_cb(self, worker_id: int):
+        def cb(si: Any, error: str) -> None:
+            uid = si if isinstance(si, int) else si.uid
+            self.stage_failed(worker_id, uid, str(error))
+
+        return cb
+
+    def stage_failed(self, worker_id: int, uid: int, error: str) -> None:
+        """A worker reports a lease whose op raised (the worker itself
+        is healthy and keeps serving).  The lease is charged against the
+        chunk's attempt budget and re-queued elsewhere; a chunk that
+        fails on ``cfg.quarantine_after`` distinct workers is poison —
+        quarantined together with its dependents instead of being
+        re-leased forever.  Idempotent per (stage, worker): retried
+        ``stage_failed`` RPCs re-add the same worker to the same set."""
+        newly_q: list[int] = []
+        with self._lock:
+            st = self._workers.get(worker_id)
+            if st is not None:
+                st.last_heartbeat = time.monotonic()
+                st.leases.discard(uid)
+            pu = self._clone_map().get(uid, uid)
+            if pu in self._stage_done or pu in self._quarantined:
+                return  # a twin completed, or already terminal
+            self.stage_failures += 1
+            if self._charge_attempt_locked(worker_id, uid, error, newly_q):
+                # Not (yet) poison: retry elsewhere — unless a backup
+                # twin of the same primary is still running or queued.
+                clone_uids = {
+                    c for c, p in self._clone_map().items() if p == pu
+                }
+                active = {pu} | clone_uids
+                already = any(
+                    active & w.leases for w in self._workers.values()
+                ) or any(p.uid in active for p in self._pending)
+                if not already:
+                    self.lease_retries += 1
+                    self._push_pending_locked(self.cw.stage_instances[pu])
+            self._dispatch_all_locked()
+            self._check_done_locked()
+        self._fire_failure_hooks(newly_q)
+
+    def _charge_attempt_locked(
+        self, worker_id: int, uid: int, error: str, quarantined_out: list[int]
+    ) -> bool:
+        """Charge one failed attempt of ``uid`` to ``worker_id``.
+        Returns True when the caller should re-queue the lease; False
+        when the stage is already terminal or just crossed the budget
+        (newly-quarantined primary uids are appended to
+        ``quarantined_out`` for hook delivery outside the lock)."""
+        pu = self._clone_map().get(uid, uid)
+        if pu in self._stage_done or pu in self._quarantined:
+            return False
+        tried = self._attempts.setdefault(pu, set())
+        tried.add(worker_id)
+        # Terminal when the distinct-worker budget fills, OR when every
+        # live worker has already tried the stage — re-leasing can only
+        # cycle through workers that already failed it, so the budget
+        # could never fill (the effective budget on a small cluster is
+        # min(quarantine_after, live width)).  An empty live set (total
+        # outage) does not quarantine: workers may come back.
+        live = {
+            w
+            for w, ws in self._workers.items()
+            if not ws.dead and ws.runtime.alive
+        }
+        if len(tried) >= max(self.cfg.quarantine_after, 1) or (
+            live and live <= tried
+        ):
+            quarantined_out.extend(self._quarantine_locked(pu, error))
+            return False
+        return True
+
+    def _quarantine_locked(self, uid: int, error: str) -> list[int]:
+        """Quarantine ``uid`` and cascade over its dependents (a stage
+        downstream of a quarantined input can never run).  Pending
+        entries are removed, live leases (and backup twins) cancelled.
+        Returns the newly-quarantined primary uids."""
+        newly: list[int] = []
+        stack: list[tuple[int, str]] = [(uid, error)]
+        while stack:
+            u, err = stack.pop()
+            pu = self._clone_map().get(u, u)
+            if pu in self._quarantined or pu in self._stage_done:
+                continue
+            self._quarantined[pu] = err
+            newly.append(pu)
+            for i, p in enumerate(self._pending):
+                if self._clone_map().get(p.uid, p.uid) == pu:
+                    self._pop_pending_locked(i)
+                    break
+            clone_uids = {c for c, p in self._clone_map().items() if p == pu}
+            active = {pu} | clone_uids
+            for wst in self._workers.values():
+                for cu in active & wst.leases:
+                    try:
+                        wst.runtime.cancel_stage(cu)
+                    except Exception:
+                        pass  # runtime may already be gone
+                    wst.leases.discard(cu)
+            si = self.cw.stage_instances.get(pu)
+            if si is not None:
+                stack.extend(
+                    (d, f"upstream stage {pu} quarantined: {err}")
+                    for d in si.dependents
+                )
+        return newly
+
+    def _fire_failure_hooks(self, uids: list[int]) -> None:
+        hook = self.failure_hook
+        if hook is None or not uids:
+            return
+        for uid in uids:
+            try:
+                hook(uid, self._quarantined.get(uid, "quarantined"))
+            except Exception:
+                pass  # surfacing is best-effort; accounting already done
+
+    def quarantined(self) -> dict[int, str]:
+        """Snapshot of quarantined primary stage uids -> error."""
+        with self._lock:
+            return dict(self._quarantined)
+
     def _dispatch_all_locked(self) -> None:
         live = {
             wid: st
@@ -519,7 +690,17 @@ class Manager:
         else:
             for wid, st in live.items():
                 while len(st.leases) < self.cfg.window and self._pending:
-                    self._lease_locked(wid, st, self._pop_pending_locked())
+                    idx = next(
+                        (
+                            i
+                            for i, p in enumerate(self._pending)
+                            if not self._avoid_lease_locked(wid, p.uid, live)
+                        ),
+                        None,
+                    )
+                    if idx is None:
+                        break
+                    self._lease_locked(wid, st, self._pop_pending_locked(idx))
         if self.cfg.backup_tasks and not self._pending:
             self._issue_backups_locked()
 
@@ -557,9 +738,30 @@ class Manager:
                     )
                     if idx is None:
                         continue
+                    if self._avoid_lease_locked(
+                        wid, self._pending[idx].uid, live
+                    ):
+                        continue  # an untried worker must take this one
                     si = self._pop_pending_locked(idx)
                     self._lease_locked(wid, st, si)
                     progress = True
+
+    def _avoid_lease_locked(
+        self, wid: int, uid: int, live: dict[int, _WorkerState]
+    ) -> bool:
+        """Soft anti-affinity for charged retries: never re-lease a
+        stage to a worker that already failed it while an untried live
+        worker exists.  Without this the distinct-worker quarantine
+        budget can starve — a poison chunk ping-pongs on whichever
+        worker frees a slot first and is re-leased forever.  When every
+        live worker has tried the stage the check stands down (work
+        conservation beats affinity; the budget decides from there)."""
+        if not self._attempts:
+            return False
+        tried = self._attempts.get(self._clone_map().get(uid, uid))
+        if not tried or wid not in tried:
+            return False
+        return any(w not in tried for w in live)
 
     def _lease_locked(
         self, wid: int, st: _WorkerState, si: StageInstance
@@ -1178,7 +1380,10 @@ class Manager:
         for uid in self.cw.stage_instances:
             if uid in clones:
                 continue
-            if uid not in self._stage_done:
+            # A quarantined stage is terminally accounted: completed-or-
+            # quarantined is the exactly-once invariant, and a poison
+            # chunk must not wedge the run.
+            if uid not in self._stage_done and uid not in self._quarantined:
                 return
         self._done_event.set()
 
@@ -1187,6 +1392,7 @@ class Manager:
         while not self._stop_monitor and not self._done_event.is_set():
             time.sleep(self.cfg.poll_interval)
             now = time.monotonic()
+            newly_q: list[int] = []
             with self._lock:
                 # Reclaim lost-push reservations even when no further
                 # stage completion would run the predictor's sweep.
@@ -1221,8 +1427,18 @@ class Manager:
                         # Pushes toward the corpse are void: release
                         # their credits, drop its deferred queue.
                         self._abort_push_target_locked(wid)
-                        for uid in st.leases:
-                            if uid not in self._stage_done:
+                        # Each lost lease charges the dead worker against
+                        # the chunk's attempt budget: a chunk that keeps
+                        # killing workers quarantines instead of being
+                        # re-leased forever.  Snapshot: crossing the
+                        # budget cancels leases (mutates this set).
+                        for uid in list(st.leases):
+                            if uid not in self._stage_done and (
+                                self._charge_attempt_locked(
+                                    wid, uid, "worker lost mid-lease",
+                                    newly_q,
+                                )
+                            ):
                                 self.recovered_leases += 1
                                 self._push_pending_locked(
                                     self.cw.stage_instances[uid]
@@ -1230,3 +1446,4 @@ class Manager:
                         st.leases.clear()
                 self._dispatch_all_locked()
                 self._check_done_locked()
+            self._fire_failure_hooks(newly_q)

@@ -169,6 +169,23 @@ class SimConfig:
     heartbeat_timeout: float = 5.0
     straggler_factor: dict[int, float] = field(default_factory=dict)
     backup_tasks: bool = False         # duplicate tail leases
+    # -- fault-injection mirror (repro.faults) ----------------------------
+    # The same knobs the runtime's FaultPlan exposes, so a schedule
+    # validated in simulation transfers to the threaded runtime.
+    # ``crash_at`` is the runtime-named alias of ``fail_node_at``.
+    crash_at: Optional[tuple[int, float]] = None
+    # Probability a control-plane message is lost in flight; the sender
+    # retransmits after a RetryPolicy-style backoff (counted in
+    # SimResult.msg_retries, latency charged to rpc_wait).
+    msg_drop_rate: float = 0.0
+    # Probability a cross-node region copy lands corrupted; the CRC
+    # check catches it and the copy is re-issued once (counted in
+    # SimResult.corrupt_detected, latency doubles for that transfer).
+    corrupt_rate: float = 0.0
+    # Control-plane partition: ``(node_ids, t_start, t_end)`` — the
+    # named nodes receive no new leases while the window is open (their
+    # running work continues; heals at ``t_end``).
+    partition: Optional[tuple[tuple[int, ...], float, float]] = None
     # Hierarchical data staging (repro.staging): model inter-node tier
     # copy costs; optionally consult the placement directory so leases
     # go where the input bytes already live.  Off by default (the seed
@@ -251,6 +268,10 @@ class SimConfig:
     drain_node_at: Optional[tuple[int, float]] = None
     join_node_at: Optional[float] = None
 
+    def __post_init__(self) -> None:
+        if self.crash_at is not None and self.fail_node_at is None:
+            self.fail_node_at = self.crash_at
+
     @property
     def dl(self) -> bool:
         """Effective data-locality flag (chaining implies DL)."""
@@ -308,6 +329,11 @@ class SimResult:
     # crossed the Manager/Worker bus and the latency they exposed.
     control_messages: int = 0
     rpc_wait: float = 0.0
+    # Fault-injection accounting (cfg.msg_drop_rate / corrupt_rate):
+    # control messages retransmitted after an injected loss, and region
+    # copies re-issued after an injected CRC mismatch.
+    msg_retries: int = 0
+    corrupt_detected: int = 0
     # Serving-mode accounting (cfg.arrival_rate): open-loop request
     # stream through the simulated gateway.
     requests: int = 0
@@ -442,6 +468,12 @@ class ClusterSim:
         self.control_messages = 0
         self.rpc_wait = 0.0
         self._rpc_s = cfg.rpc_latency_us * 1e-6
+        # Fault-injection mirror: dedicated seeded stream so fault
+        # decisions never perturb the workload RNG draws.
+        self._fault_rng = np.random.default_rng(cfg.seed + 1009)
+        self.msg_retries = 0
+        self.corrupt_detected = 0
+        self._retry_backoff_s = 0.05  # mirror of RetryPolicy.base_delay
         self._stage_bytes = int(cfg.stage_output_mb * 2**20)
         # (node_id, stage uid) -> time its replica finishes landing; a
         # replica recorded in the directory may still be in flight.
@@ -581,6 +613,13 @@ class ClusterSim:
             self._post(t, lambda: self._drain_node(nid))
         if self.cfg.join_node_at is not None:
             self._post(self.cfg.join_node_at, self._join_node)
+        if self.cfg.partition is not None:
+            # Heal event: partitioned nodes resume pulling leases.
+            _, _, t_end = self.cfg.partition
+            self._post(
+                t_end,
+                lambda: [self._fill_window(n) for n in self.nodes],
+            )
         while self._events:
             t, _, fn = heapq.heappop(self._events)
             if t > max_time:
@@ -676,6 +715,8 @@ class ClusterSim:
             batched_ops=batched_ops,
             control_messages=self.control_messages,
             rpc_wait=self.rpc_wait,
+            msg_retries=self.msg_retries,
+            corrupt_detected=self.corrupt_detected,
             **serve_kwargs,
         )
 
@@ -825,19 +866,39 @@ class ClusterSim:
 
     # -- Manager: demand-driven assignment --------------------------------------
 
+    def _partitioned(self, nid: int) -> bool:
+        p = self.cfg.partition
+        if p is None:
+            return False
+        nids, t0, t1 = p
+        return nid in nids and t0 <= self.now < t1
+
+    def _control_rtt(self) -> float:
+        """One control-plane round-trip's exposed latency, with
+        injected message loss: each lost copy is retransmitted after a
+        backoff (the sim mirror of RetryPolicy over BusTimeoutError)."""
+        self.control_messages += 1
+        t = self._rpc_s
+        rate = self.cfg.msg_drop_rate
+        while rate > 0.0 and self._fault_rng.random() < rate:
+            self.msg_retries += 1
+            t += self._retry_backoff_s + self._rpc_s
+        return t
+
     def _fill_window(self, node: _Node) -> None:
-        if not node.alive:
+        if not node.alive or self._partitioned(node.node_id):
             return
         while len(node.leased) < self.cfg.window and self.pending:
             si = self._pick_for_node(node)
             node.leased.add(si.uid)
             self.stage_node[si.uid] = node.node_id
             # A lease is one Manager->Worker message: the dispatch pays
-            # the bus round-trip on top of the protocol latency.
-            self.control_messages += 1
-            self.rpc_wait += self._rpc_s
+            # the bus round-trip (plus any injected-loss retransmits)
+            # on top of the protocol latency.
+            rtt = self._control_rtt()
+            self.rpc_wait += rtt
             self._post(
-                self.now + self.cfg.dispatch_latency + self._rpc_s,
+                self.now + self.cfg.dispatch_latency + rtt,
                 lambda si=si, node=node: self._start_stage(node, si),
             )
         self._maybe_backup_tasks()
@@ -937,9 +998,9 @@ class ClusterSim:
             # otherwise every key pays its own round-trip before its
             # copy can start.
             n_msgs = 1 if self.cfg.batch_prefetch else len(remote)
-            self.control_messages += n_msgs
-            self.rpc_wait += n_msgs * self._rpc_s
-            copies_start = self.now + n_msgs * self._rpc_s
+            rtt = sum(self._control_rtt() for _ in range(n_msgs))
+            self.rpc_wait += rtt
+            copies_start = self.now + rtt
             for d in remote:
                 key = ("stage", d)
                 n = self._stage_bytes
@@ -983,6 +1044,21 @@ class ClusterSim:
         traffic — the structural bottleneck the coordinator-bypass
         removes.
         """
+        done = self._raw_transfer(node, earliest, n, src)
+        if (
+            self.cfg.corrupt_rate > 0.0
+            and self._fault_rng.random() < self.cfg.corrupt_rate
+        ):
+            # CRC mismatch on landing: the copy is re-issued once (the
+            # sim mirror of the runtime's alternate-holder re-fetch).
+            self.corrupt_detected += 1
+            self.cross_node_bytes += n
+            done = self._raw_transfer(node, done, n, src)
+        return done
+
+    def _raw_transfer(
+        self, node: _Node, earliest: float, n: int, src: Optional[int]
+    ) -> float:
         if self.cfg.direct_transfer:
             self.direct_region_bytes += n
             return self.net.transfer(src, node.node_id, n, earliest)
@@ -1204,8 +1280,9 @@ class ClusterSim:
         node.leased.discard(si.uid)
         # Completion notification: one Worker->Manager message (its
         # latency overlaps the next lease's dispatch round-trip, so it
-        # is counted but not serialized onto the critical path).
-        self.control_messages += 1
+        # is counted — retransmits included — but not serialized onto
+        # the critical path).
+        self._control_rtt()
         if self.cfg.staging:
             # This node now holds the stage's output region (host tier).
             primary_uid = self._clone_of.get(si.uid, si.uid)

@@ -219,6 +219,18 @@ class WorkerRuntime:
         self._stages: dict[int, StageInstance] = {}
         self.completion_order: list[int] = []
         self.errors: list[tuple[int, BaseException]] = []
+        # Failure reporting: a stage whose op raised is reported upstream
+        # exactly once (remaining ops cancelled), via the same callback
+        # seam as completions.  ``on_op_start`` is a generic
+        # instrumentation hook called as ``hook(runtime, op_instance)``
+        # right before an op executes; raising from it routes into the
+        # normal per-op failure path (fault harnesses plug in here — no
+        # production code branches on "testing").
+        self.on_stage_failed: Callable[[StageInstance, str], None] | None = None
+        self.on_op_start: (
+            Callable[["WorkerRuntime", OperationInstance], None] | None
+        ) = None
+        self._failed_stages: set[int] = set()
         # Device-resident chaining: op uid -> lane whose DeviceMemory
         # holds the *only* copy of its output (host write-back deferred
         # until a host-side consumer actually needs the bytes).
@@ -572,10 +584,7 @@ class WorkerRuntime:
             try:
                 self._run_batch(lane, ois)
             except BaseException as exc:  # noqa: BLE001 - recorded, not raised
-                with self._lock:
-                    for oi in ois:
-                        self.errors.append((oi.uid, exc))
-                    self._work_ready.notify_all()
+                self._record_failures([(oi, exc) for oi in ois])
 
     def _batch_limit(self, oi: OperationInstance) -> int:
         """pop_batch cap: the variant's declared max batch (1 = scalar).
@@ -625,6 +634,8 @@ class WorkerRuntime:
         )
         failures: list[tuple[OperationInstance, BaseException]] = []
         if batch_fn is not None:
+            for oi in ois:
+                self._hook_op_start(oi)
             outs = batch_fn(ctxs)
             if len(outs) != len(ctxs):
                 raise RuntimeError(
@@ -639,6 +650,7 @@ class WorkerRuntime:
             pairs = []
             for oi, ctx in zip(ois, ctxs):
                 try:
+                    self._hook_op_start(oi)
                     pairs.append((oi, impl(ctx)))
                 except BaseException as exc:  # noqa: BLE001 - recorded
                     failures.append((oi, exc))
@@ -661,10 +673,44 @@ class WorkerRuntime:
                         self.scheduler.reestimate(self._estimate_of)
         for oi, out in pairs:
             self._commit(lane, oi, out)
-        if failures:
-            with self._lock:
-                self.errors.extend((oi.uid, exc) for oi, exc in failures)
-                self._work_ready.notify_all()
+        self._record_failures(failures)
+
+    def _hook_op_start(self, oi: OperationInstance) -> None:
+        hook = self.on_op_start
+        if hook is not None:
+            hook(self, oi)
+
+    def _record_failures(
+        self, failures: list[tuple[OperationInstance, BaseException]]
+    ) -> None:
+        """Record op failures and report each newly-failed stage upstream
+        exactly once.  The stage's remaining ops are cancelled — a failed
+        stage can never complete, so leaving them queued only wastes
+        lanes — and ``on_stage_failed`` fires with the worker lock
+        released (lock order is manager -> worker).  A killed worker does
+        not report: death attribution is the Manager's job."""
+        if not failures:
+            return
+        report: list[tuple[StageInstance, BaseException]] = []
+        with self._lock:
+            for oi, exc in failures:
+                self.errors.append((oi.uid, exc))
+                si = oi.stage_instance
+                if si.uid in self._failed_stages:
+                    continue
+                self._failed_stages.add(si.uid)
+                for o in si.op_instances:
+                    if o.uid not in self._op_done:
+                        self._cancelled.add(o.uid)
+                report.append((si, exc))
+            self._work_ready.notify_all()
+        if not self.alive or self.on_stage_failed is None:
+            return
+        for si, exc in report:
+            try:
+                self.on_stage_failed(si, f"{type(exc).__name__}: {exc}")
+            except Exception:  # noqa: BLE001 - reporting is best-effort
+                pass
 
     def _gather_inputs(self, lane: _LaneState, oi: OperationInstance) -> dict[str, Any]:
         """Upload phase: pull dep outputs into this lane's memory.

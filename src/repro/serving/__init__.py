@@ -16,12 +16,13 @@ discrete-event simulator replay.
 """
 
 from .gateway import GatewayConfig, GatewayStats, RequestGateway
-from .request import DONE, QUEUED, RUNNING, SHED, ServeRequest
+from .request import DONE, FAILED, QUEUED, RUNNING, SHED, ServeRequest
 from .workload import Arrival, WorkloadConfig, generate_arrivals, zipf_weights
 
 __all__ = [
     "Arrival",
     "DONE",
+    "FAILED",
     "GatewayConfig",
     "GatewayStats",
     "QUEUED",

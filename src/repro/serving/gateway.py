@@ -42,7 +42,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional
 
-from .request import DONE, QUEUED, RUNNING, SHED, ServeRequest
+from .request import DONE, FAILED, QUEUED, RUNNING, SHED, ServeRequest
 
 __all__ = ["GatewayConfig", "GatewayStats", "RequestGateway"]
 
@@ -72,9 +72,12 @@ class GatewayStats:
     admitted: int = 0
     shed: int = 0
     completed: int = 0
+    #: requests that terminated in FAILED (pipeline quarantined).
+    failed: int = 0
     #: per-tenant completed counts (fairness accounting).
     tenant_completed: dict[str, int] = field(default_factory=dict)
     tenant_shed: dict[str, int] = field(default_factory=dict)
+    tenant_failed: dict[str, int] = field(default_factory=dict)
     #: arrival-to-done latencies of completed requests (seconds).
     latencies: list[float] = field(default_factory=list)
     deadline_misses: int = 0
@@ -126,6 +129,8 @@ class RequestGateway:
         #: req_id -> request (status lookups, e.g. over the bus).
         self._requests: dict[int, ServeRequest] = {}
         manager.completion_hook = self._on_stage_done
+        if hasattr(manager, "failure_hook"):
+            manager.failure_hook = self._on_stage_failed
         manager.open_stream()
 
     # -- ingestion ---------------------------------------------------------
@@ -247,6 +252,37 @@ class RequestGateway:
                 obs = max(req.t_done - req.t_dispatch, 1e-6)
                 a = self.cfg.cost_ema
                 self._service_est = (1 - a) * self._service_est + a * obs
+            self._dispatch_locked()
+            if self._queued == 0 and self._inflight == 0:
+                self._idle.set()
+        req._done_event.set()
+
+    def _on_stage_failed(self, uid: int, error: str) -> None:
+        """Manager ``failure_hook``: a stage of ours was quarantined.
+
+        The Manager cascades quarantine over dependents, so the
+        request's terminal stage(s) always land here.  The first
+        terminal failure decides the request: it goes FAILED, its
+        remaining terminal fan-in entries are cleared, and the tenant
+        gets a verdict (``error``) instead of a hung request.
+        """
+        with self._lock:
+            req = self._terminal.pop(uid, None)
+            if req is None or req.state in (DONE, FAILED):
+                return
+            # Drop the request's other terminal entries — the verdict
+            # is already decided and later hooks must not double-count.
+            for other in [u for u, r in self._terminal.items() if r is req]:
+                del self._terminal[other]
+            req.remaining = 0
+            req.state = FAILED
+            req.error = error
+            req.t_done = self.clock()
+            self._inflight -= 1
+            self.stats.failed += 1
+            self.stats.tenant_failed[req.tenant] = (
+                self.stats.tenant_failed.get(req.tenant, 0) + 1
+            )
             self._dispatch_locked()
             if self._queued == 0 and self._inflight == 0:
                 self._idle.set()

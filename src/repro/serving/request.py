@@ -16,12 +16,16 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-__all__ = ["ServeRequest", "QUEUED", "RUNNING", "DONE", "SHED"]
+__all__ = ["ServeRequest", "QUEUED", "RUNNING", "DONE", "SHED", "FAILED"]
 
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 SHED = "shed"
+#: Terminal failure: the request's pipeline was quarantined (poison
+#: chunk / attempt budget exhausted) — it will never complete, and the
+#: tenant gets a verdict instead of a hang.
+FAILED = "failed"
 
 
 @dataclass
@@ -46,6 +50,8 @@ class ServeRequest:
     remaining: int = 0
     #: uids of the stage instances backing this request.
     stage_uids: tuple[int, ...] = ()
+    #: terminal error detail (FAILED requests only).
+    error: Optional[str] = None
     _done_event: threading.Event = field(
         default_factory=threading.Event, repr=False
     )

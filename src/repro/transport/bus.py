@@ -119,3 +119,11 @@ class MessageBus(ABC):
     def coalesce_ratio(self) -> float:
         """Messages per frame actually sent (1.0 = no batching)."""
         return self.messages_sent / max(self.frames_sent, 1)
+
+    def stats(self) -> dict[str, Any]:
+        """Aggregate transport counters; backends extend with their own
+        (e.g. per-peer send failures on :class:`SocketBus`)."""
+        return {
+            "messages_sent": self.messages_sent,
+            "frames_sent": self.frames_sent,
+        }

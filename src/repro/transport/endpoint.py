@@ -53,6 +53,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .bus import BusClosedError, BusError, BusTimeoutError, MessageBus, Peer
+from ..faults.integrity import seal as _seal, unseal as _unseal
+from ..faults.retry import RetryPolicy
 from ..staging.journal import decode_key as _as_key
 from ..staging.tiers import sizeof as _sizeof
 
@@ -75,8 +77,11 @@ class ServingClient:
     :class:`repro.serving.RequestGateway`.
     """
 
-    def __init__(self, bus: "MessageBus", address: str) -> None:
+    def __init__(
+        self, bus: "MessageBus", address: str, *, timeout: float = 10.0
+    ) -> None:
         self.peer = bus.connect(address, {})
+        self.timeout = timeout
 
     def submit(
         self,
@@ -93,10 +98,11 @@ class ServingClient:
                 "deadline_ms": deadline_ms,
                 "cost_s": cost_s,
             },
+            timeout=self.timeout,
         )
 
     def status(self, req_id: int) -> dict:
-        return self.peer.call("request_status", int(req_id))
+        return self.peer.call("request_status", int(req_id), timeout=self.timeout)
 
     def close(self) -> None:
         self.peer.close()
@@ -130,9 +136,14 @@ class WorkerProxy:
         *,
         has_agent: bool,
         data_address: Any = None,
+        rpc_timeout: float = 10.0,
     ) -> None:
         self.worker_id = worker_id
         self.peer = peer
+        # Tight per-call budget (ManagerConfig.rpc_timeout): a hung
+        # worker must surface as BusTimeoutError fast, not hold the
+        # Manager's dispatch path for the bus default 30s.
+        self.rpc_timeout = rpc_timeout
         # Manager checks ``getattr(rt, "agent", None) is not None`` to
         # pick push vs agent-pull input forwarding.
         self.agent = True if has_agent else None
@@ -143,6 +154,7 @@ class WorkerProxy:
         # Assigned by Manager.register_worker; the endpoint routes
         # incoming notifies through these.
         self.on_stage_complete: Optional[Callable] = None
+        self.on_stage_failed: Optional[Callable] = None
         self.on_heartbeat: Optional[Callable] = None
         self.fetch_region: Optional[Callable] = None   # unused remotely
         self.fetch_regions: Optional[Callable] = None  # (worker pulls via bus)
@@ -174,7 +186,13 @@ class WorkerProxy:
         """One batched round-trip: mark already-staged inputs, push the
         rest.  Returns the uids that were already staged remotely."""
         try:
-            return set(self.peer.call("forward_inputs", tuple(items)))
+            return set(
+                self.peer.call(
+                    "forward_inputs", tuple(items), timeout=self.rpc_timeout
+                )
+            )
+        except BusTimeoutError:
+            return set()  # slow, not dead: inputs re-pull via the agent
         except BusError:
             self._dead = True
             return set()
@@ -183,7 +201,7 @@ class WorkerProxy:
         try:
             # Short timeout: a region pull may run on the Manager's
             # dispatch path, so a hung holder must fail fast.
-            return self.peer.call("pull_region", key, timeout=10.0)
+            return self.peer.call("pull_region", key, timeout=self.rpc_timeout)
         except BusTimeoutError:
             return None  # slow, not dead: the heartbeat monitor decides
         except BusError:
@@ -205,7 +223,7 @@ class WorkerProxy:
     def stats(self) -> dict:
         """Remote runtime + transport counters (benchmarks/tests)."""
         try:
-            return dict(self.peer.call("get_stats", timeout=10.0))
+            return dict(self.peer.call("get_stats", timeout=self.rpc_timeout))
         except BusError:
             return {}
 
@@ -254,6 +272,7 @@ class ManagerEndpoint:
                 "deregister_worker": self._h_deregister,
                 "heartbeat": self._h_heartbeat,
                 "stage_complete": self._h_stage_complete,
+                "stage_failed": self._h_stage_failed,
                 "fetch_region": self._h_fetch_region,
                 "fetch_regions": self._h_fetch_regions,
                 "resolve_regions": self._h_resolve_regions,
@@ -301,6 +320,7 @@ class ManagerEndpoint:
             peer,
             has_agent=bool(payload.get("has_agent")),
             data_address=payload.get("address"),
+            rpc_timeout=getattr(self.manager.cfg, "rpc_timeout", 10.0),
         )
         with self._registered:
             # A relaunched worker reuses its id: forget the dead peer's
@@ -315,7 +335,13 @@ class ManagerEndpoint:
         self.manager.register_worker(
             proxy, address=proxy.data_address, rack=payload.get("rack")
         )
-        return {"ok": True, "window": self.manager.cfg.window}
+        return {
+            "ok": True,
+            "window": self.manager.cfg.window,
+            # Workers adopt the Manager's RPC budget for their own
+            # worker->manager calls: one knob governs the control plane.
+            "rpc_timeout": getattr(self.manager.cfg, "rpc_timeout", 10.0),
+        }
 
     def _h_deregister(self, peer: Peer, payload: Any):
         wid = int(payload)
@@ -341,6 +367,18 @@ class ManagerEndpoint:
         si = self.manager.cw.stage_instances.get(uid)
         if si is not None:
             proxy.on_stage_complete(si, outputs)
+        return True  # workers retry this call until acknowledged
+
+    def _h_stage_failed(self, peer: Peer, payload: Any):
+        """Failure ingest: a healthy worker reports a lease whose op
+        raised.  Retried (idempotent per stage+worker) — losing this
+        message would leave the lease wedged until a heartbeat reap."""
+        proxy = self._proxy_of(peer)
+        if proxy is None or proxy.on_stage_failed is None:
+            return True
+        uid, error = int(payload[0]), str(payload[1])
+        proxy.on_stage_failed(uid, error)
+        return True
 
     # -- handlers (serving clients -> gateway) ------------------------------
 
@@ -373,6 +411,9 @@ class ManagerEndpoint:
             "state": req.state,
             "tenant": req.tenant,
             "latency": req.latency,
+            # Terminal failure verdict (quarantined pipeline): the
+            # tenant polls this instead of waiting forever.
+            "error": req.error,
         }
 
     def _h_fetch_region(self, peer: Peer, payload: Any):
@@ -489,6 +530,16 @@ class WorkerClient:
         self.push_ingests = 0
         self.served_regions = 0
         self.served_bytes = 0
+        # Payload integrity: region bytes rejected by the CRC envelope
+        # (re-fetched from an alternate holder via the stale-holder path).
+        self.crc_rejects = 0
+        self.push_crc_rejects = 0
+        # Control-plane hardening: completion/failure reports are calls
+        # retried under this policy (the Manager dedups on stage uid), so
+        # one lost frame cannot wedge a lease forever.  Rebuilt after
+        # registration with the Manager's rpc_timeout.
+        self.rpc_timeout = 10.0
+        self.retry = RetryPolicy(attempts=4, base_delay=0.05, timeout=self.rpc_timeout)
         self.data_address: Optional[str] = None
         if data_plane:
             self.data_address = bus.serve(
@@ -524,6 +575,7 @@ class WorkerClient:
         )
         # Outbound control plane: runtime hooks -> bus messages.
         runtime.on_stage_complete = self._stage_complete
+        runtime.on_stage_failed = self._stage_failed
         runtime.on_heartbeat = lambda wid: self._notify("heartbeat", wid)
         runtime.fetch_region = self._fetch_region
         runtime.fetch_regions = self._fetch_regions
@@ -535,7 +587,8 @@ class WorkerClient:
             runtime.agent.dial = self._dial_fetch
             if push_grace is not None:
                 runtime.agent.push_grace = push_grace
-        reply = self.peer.call(
+        reply = self.retry.call(
+            self.peer,
             "register_worker",
             {
                 "worker_id": runtime.worker_id,
@@ -545,13 +598,32 @@ class WorkerClient:
             },
         )
         self.window = int(reply.get("window", 0)) if reply else 0
+        if reply and reply.get("rpc_timeout"):
+            self.rpc_timeout = float(reply["rpc_timeout"])
+            self.retry = RetryPolicy(
+                attempts=4, base_delay=0.05, timeout=self.rpc_timeout
+            )
 
     # -- runtime -> manager ------------------------------------------------
 
     def _stage_complete(self, si, outputs: dict[str, Any]) -> None:
         # The Manager answers with push_request notifies (predictive
         # push) racing ahead of the dependent leases it dispatches.
-        self._notify("stage_complete", (si.uid, outputs))
+        # Delivered as a *retried call*: a lost completion wedges the
+        # lease until a heartbeat reap, so the worker re-sends until the
+        # Manager acknowledges (idempotent — ``_stage_done`` dedups).
+        self._acked("stage_complete", (si.uid, outputs))
+
+    def _stage_failed(self, si, error: str) -> None:
+        self._acked("stage_failed", (si.uid, str(error)))
+
+    def _acked(self, method: str, payload: Any) -> None:
+        try:
+            self.retry.call(self.peer, method, payload)
+        except BusError:
+            # Manager unreachable after the whole retry budget: the
+            # heartbeat reap / failover re-registration recovers.
+            pass
 
     def _push_loop(self) -> None:
         """Drain queued pushes off the critical path (lane threads only
@@ -569,8 +641,11 @@ class WorkerClient:
             if peer is None:
                 continue
             try:
+                # CRC-sealed: the receiver drops a corrupted push and
+                # its pull backstop re-fetches from a clean holder.
                 peer.notify(
-                    "push_region", (self.runtime.worker_id, key, value)
+                    "push_region",
+                    (self.runtime.worker_id, key, _seal(value)),
                 )
             except BusError:
                 self._drop_sibling(addr)
@@ -583,13 +658,13 @@ class WorkerClient:
         # miss: the caller treats None as "not available yet" and the
         # Manager re-feeds or the agent retries on the next lease.
         try:
-            return self.peer.call("fetch_region", key)
+            return self.retry.call(self.peer, "fetch_region", key)
         except BusError:
             return None
 
     def _fetch_regions(self, keys):
         try:
-            values = self.peer.call("fetch_regions", tuple(keys))
+            values = self.retry.call(self.peer, "fetch_regions", tuple(keys))
         except BusError:
             return [None for _ in keys]
         return list(values)
@@ -604,22 +679,39 @@ class WorkerClient:
 
     def _resolve_holders(self, keys) -> Optional[list]:
         try:
-            out = self.peer.call("resolve_regions", tuple(keys))
+            out = self.retry.call(self.peer, "resolve_regions", tuple(keys))
         except BusError:
             return None  # coordinator unreachable: agent uses the relay
         return [tuple(h) if h is not None else None for h in out]
 
     def _dial_fetch(self, holder, keys) -> Optional[list]:
-        """Pull ``keys`` straight from sibling ``holder=(wid, addr)``."""
+        """Pull ``keys`` straight from sibling ``holder=(wid, addr)``.
+
+        One timeout retry, then give up: the agent's stale-holder path
+        (forget holder, fall back to the coordinator relay) is the
+        better second opinion than hammering a hung sibling.  Each
+        payload crosses CRC-sealed; a corrupt region is dropped (counted)
+        and the caller re-fetches it from an alternate holder."""
         _, addr = holder
         peer = self._sibling(addr)
         if peer is None:
             return None
+        dial_retry = RetryPolicy(
+            attempts=2, base_delay=0.02, timeout=self.rpc_timeout
+        )
         try:
-            return list(peer.call("pull_regions", tuple(keys)))
+            values = list(dial_retry.call(peer, "pull_regions", tuple(keys)))
         except BusError:
             self._drop_sibling(addr)
             return None
+        out = []
+        for sealed in values:
+            value, ok = _unseal(sealed)
+            if not ok:
+                self.crc_rejects += 1
+                value = None  # stale-holder semantics: re-fetch elsewhere
+            out.append(value)
+        return out
 
     def _sibling(self, addr) -> Optional[Peer]:
         if addr is None or addr == self.data_address:
@@ -662,18 +754,26 @@ class WorkerClient:
         return value
 
     def _h_peer_pull_batch(self, peer: Peer, payload: Any):
-        values = tuple(
-            self.runtime.pull_region(_as_key(k)) for k in payload
-        )
+        values = [self.runtime.pull_region(_as_key(k)) for k in payload]
+        out = []
         for value in values:
             if value is not None:
                 self.served_regions += 1
                 self.served_bytes += _sizeof(value)
-        return values
+                out.append(_seal(value))
+            else:
+                out.append(None)
+        return tuple(out)
 
     def _h_peer_push(self, peer: Peer, payload: Any) -> None:
         src_wid, key, value = payload
         key = _as_key(key)
+        value, ok = _unseal(value)
+        if not ok:
+            # Corrupted in transit: drop it — the target's expect_push
+            # grace expires and the pull backstop re-fetches clean bytes.
+            self.push_crc_rejects += 1
+            return
         nbytes = self.runtime.ingest_push(key, value)
         if nbytes:
             self.push_ingests += 1
@@ -726,6 +826,8 @@ class WorkerClient:
             "push_ingests": self.push_ingests,
             "served_regions": self.served_regions,
             "served_bytes": self.served_bytes,
+            "crc_rejects": self.crc_rejects,
+            "push_crc_rejects": self.push_crc_rejects,
         }
         return stats
 

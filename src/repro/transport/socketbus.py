@@ -118,6 +118,13 @@ class SocketPeer(Peer):
         self.recv_messages = 0
         self.recv_frames = 0
         self.recv_segments = 0
+        # Delivery-failure counters: ``notify`` enqueues and forgets, so
+        # without these a dead peer's lost sends vanish silently.
+        # ``send_errors`` counts failed socket sends (whole frames);
+        # ``dropped_notifies`` counts NTF messages that were queued but
+        # never made it onto the wire (failed frame + teardown leftovers).
+        self.send_errors = 0
+        self.dropped_notifies = 0
         self._threads = [
             threading.Thread(target=fn, daemon=True, name=f"{name}-{tag}")
             for tag, fn in (
@@ -171,6 +178,12 @@ class SocketPeer(Peer):
             if self._closed:
                 return
             self._closed = True
+            # Queued-but-never-sent notifies die here: count them so
+            # chaos tests and operators can assert on delivery failure.
+            self.dropped_notifies += sum(
+                1 for m in self._outgoing if m[0] == NTF
+            )
+            self._outgoing.clear()
             err = BusClosedError(f"{self.name}: connection closed")
             for pending in self._pending.values():
                 pending.error = err
@@ -252,6 +265,13 @@ class SocketPeer(Peer):
                     self.bus.frames_sent += 1
                 self._sock.sendall(_LEN.pack(len(data)) + data)
             except (OSError, ConnectionError):
+                with self._send_lock:
+                    self.send_errors += 1
+                    # The frame that failed carried these notifies; the
+                    # teardown below accounts whatever is still queued.
+                    self.dropped_notifies += sum(
+                        1 for m in batch if m[0] == NTF
+                    )
                 self._teardown()
                 return
 
@@ -388,6 +408,26 @@ class SocketBus(MessageBus):
         with self._lock:
             self._peers.append(peer)
         return peer
+
+    def stats(self) -> dict[str, Any]:
+        """Aggregate + per-peer delivery counters.  ``send_errors`` /
+        ``dropped_notifies`` surface fire-and-forget losses that would
+        otherwise vanish silently with the dead peer."""
+        out = super().stats()
+        with self._lock:
+            peers = list(self._peers)
+        out["send_errors"] = sum(p.send_errors for p in peers)
+        out["dropped_notifies"] = sum(p.dropped_notifies for p in peers)
+        out["peers"] = {
+            p.name: {
+                "sent_messages": p.sent_messages,
+                "recv_messages": p.recv_messages,
+                "send_errors": p.send_errors,
+                "dropped_notifies": p.dropped_notifies,
+            }
+            for p in peers
+        }
+        return out
 
     def close(self) -> None:
         self._closed = True

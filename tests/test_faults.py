@@ -1,0 +1,930 @@
+"""Deterministic fault injection + end-to-end failure hardening.
+
+Unit layer: FaultPlan (seeded schedule), FaultyBus (drop/dup/delay/
+fail/kill/partition/corrupt), RetryPolicy (bounded backoff), CRC32
+envelope.  Integration layer: poison-chunk quarantine (Manager attempt
+budget + cascade), gateway FAILED surfacing, CRC rejects with
+alternate-route re-fetch, simulator fault knobs.  Acceptance layer
+(``chaos`` marker): the fan-in pipeline on both buses under a seeded
+fault schedule — worker crash, dropped/duplicated/delayed messages,
+corrupted regions, one poison chunk — with every tile completed or
+quarantined exactly once.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.transport as T
+from repro.core import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    LaneSpec,
+    Manager,
+    ManagerConfig,
+    Operation,
+    Stage,
+    VariantRegistry,
+    WorkerRuntime,
+)
+from repro.core.simulator import SimConfig, run_simulation
+from repro.faults import FaultPlan, FaultyBus, FaultyPeer, RetryPolicy, region_crc, seal, unseal
+from repro.serving import DONE, FAILED, GatewayConfig, RequestGateway
+from repro.staging import StagingConfig
+from repro.staging.store import op_key
+from repro.transport.bus import BusClosedError, BusError, BusTimeoutError
+from repro.transport.demo import expected_combine, fanin_concrete, fanin_registry
+
+
+def _wait(predicate, timeout: float = 10.0) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: seeded schedule
+# --------------------------------------------------------------------------
+
+
+def test_fault_plan_same_seed_same_schedule():
+    mk = lambda s: FaultPlan(seed=s, drop_notify=0.3, dup_notify=0.2)
+    a, b, c = mk(5), mk(5), mk(6)
+    seq = lambda p: [
+        (p.should_drop("m"), p.should_dup("m")) for _ in range(300)
+    ]
+    sa = seq(a)
+    assert sa == seq(b)          # deterministic replay
+    assert sa != seq(c)          # a different seed is a different run
+    assert any(x[0] for x in sa) and not all(x[0] for x in sa)
+
+
+def test_fault_plan_immune_methods_never_faulted():
+    p = FaultPlan(seed=1, drop_notify=1.0, fail_call=1.0)
+    assert not p.should_drop("shutdown")
+    assert not p.should_fail_call("stop")
+    assert p.should_drop("submit_stage")
+
+
+def test_fault_plan_kill_fires_once_and_partition_windows():
+    p = FaultPlan().kill_at("worker0", 0.0).partition("mgr", 0.0, 0.2)
+    p.start()
+    assert p.kill_due("worker0-peer")      # due now
+    assert not p.kill_due("worker0-peer")  # exactly once
+    assert not p.kill_due("worker1-peer")  # name must match
+    assert p.partitioned("mgr-ctl")
+    assert not p.partitioned("worker0")
+    assert _wait(lambda: not p.partitioned("mgr-ctl"), timeout=5.0)
+
+
+def test_fault_plan_corrupts_a_copy_of_data_payloads_only():
+    p = FaultPlan(seed=3, corrupt_rate=1.0)
+    arr = np.zeros((4, 4), np.float32)
+    out = p.maybe_corrupt("pull_regions", arr)
+    assert out is not arr                  # original untouched
+    assert not np.array_equal(out, arr)    # one byte flipped
+    assert float(arr.sum()) == 0.0
+    # Control-plane methods are never corrupted.
+    same = p.maybe_corrupt("stage_complete", arr)
+    assert same is arr
+    # Envelopes are corrupted inside (after sealing).
+    env = p.maybe_corrupt("push_region", seal(arr))
+    value, ok = unseal(env)
+    assert not ok
+
+
+def test_fault_plan_op_hook_poison_and_crash():
+    p = FaultPlan()
+    hook = p.op_hook(poison_chunks=(7,), crash_worker_at_op={1: 2})
+
+    class _Rt:
+        worker_id = 1
+        killed = False
+
+        def kill(self):
+            self.killed = True
+
+    class _Oi:
+        def __init__(self, cid):
+            self.stage_instance = type(
+                "S", (), {"chunk": type("C", (), {"chunk_id": cid})()}
+            )()
+
+    rt = _Rt()
+    with pytest.raises(RuntimeError, match="poison chunk 7"):
+        hook(rt, _Oi(7))
+    assert not rt.killed               # poison does not kill the worker
+    hook(rt, _Oi(0))                   # first op: survives
+    with pytest.raises(RuntimeError, match="injected crash"):
+        hook(rt, _Oi(0))               # second op: the scheduled crash
+    assert rt.killed
+
+
+def test_fault_plan_staging_seams():
+    p = FaultPlan(seed=2)
+    fetch = p.wrap_fetch(lambda k: "v", error_rate=1.0)
+    with pytest.raises(IOError):
+        fetch("k")
+    ok_fetch = p.wrap_fetch(lambda k: "v", error_rate=0.0)
+    assert ok_fetch("k") == "v"
+    corrupting = FaultPlan(seed=2, corrupt_rate=1.0)
+    dial = corrupting.wrap_dial(
+        lambda holder, keys: [seal(np.ones(8, np.float32)) for _ in keys]
+    )
+    (env,) = dial((1, "addr"), [op_key(0)])
+    _, valid = unseal(env)
+    assert not valid
+
+
+# --------------------------------------------------------------------------
+# RetryPolicy
+# --------------------------------------------------------------------------
+
+
+def test_retry_policy_backoff_is_bounded():
+    pol = RetryPolicy(attempts=5, base_delay=0.05, max_delay=0.4, jitter=0.25)
+    rng = random.Random(0)
+    for attempt in range(1, 10):
+        d = pol.delay(attempt, rng)
+        assert 0.0 < d <= 0.4 * 1.25  # capped even deep into the budget
+
+
+def test_retry_policy_retries_timeouts_only():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise BusTimeoutError("transient")
+        return "ok"
+
+    pol = RetryPolicy(attempts=4, base_delay=0.001, max_delay=0.002)
+    assert pol.run(flaky) == "ok"
+    assert calls["n"] == 3
+
+    def wrong():
+        calls["n"] += 1
+        raise ValueError("handler bug")
+
+    calls["n"] = 0
+    with pytest.raises(ValueError):
+        pol.run(wrong)
+    assert calls["n"] == 1  # non-timeout errors are not retried
+
+
+def test_retry_policy_exhausts_budget_then_raises():
+    calls = {"n": 0}
+
+    def dead():
+        calls["n"] += 1
+        raise BusTimeoutError("gone")
+
+    pol = RetryPolicy(attempts=3, base_delay=0.001, max_delay=0.002)
+    with pytest.raises(BusTimeoutError):
+        pol.run(dead)
+    assert calls["n"] == 3
+
+
+# --------------------------------------------------------------------------
+# CRC32 envelope
+# --------------------------------------------------------------------------
+
+
+def test_crc_envelope_roundtrip_detects_flips_and_passes_legacy():
+    arr = np.arange(64, dtype=np.float32).reshape(8, 8)
+    value, ok = unseal(seal(arr))
+    assert ok and np.array_equal(value, arr)
+    # One flipped byte is caught.
+    tag, crc, payload = seal(arr)
+    bad = payload.copy()
+    bad.view(np.uint8).reshape(-1)[5] ^= 0xFF
+    _, ok = unseal((tag, crc, bad))
+    assert not ok
+    # Unsealed legacy payloads pass through as valid (no flag day).
+    value, ok = unseal(arr)
+    assert ok and value is arr
+    # Non-array payloads use the pickle fallback.
+    assert region_crc({"a": 1}) == region_crc({"a": 1})
+    assert region_crc({"a": 1}) != region_crc({"a": 2})
+    # dtype/shape are part of the checksum, not just raw bytes.
+    assert region_crc(np.zeros(4, np.float32)) != region_crc(
+        np.zeros(2, np.float64)
+    )
+
+
+# --------------------------------------------------------------------------
+# FaultyBus over InprocBus
+# --------------------------------------------------------------------------
+
+
+def _serve_counter():
+    inner = T.InprocBus()
+    seen: list = []
+    address = inner.serve(
+        {
+            "evt": lambda peer, p: seen.append(p),
+            "echo": lambda peer, p: p,
+        }
+    )
+    return inner, address, seen
+
+
+def test_faulty_bus_drops_and_duplicates_notifies():
+    inner, address, seen = _serve_counter()
+    try:
+        drop = FaultyBus(T.InprocBus(), FaultPlan(drop_notify=1.0))
+        peer = drop.connect(address)
+        for i in range(5):
+            peer.notify("evt", i)
+        assert seen == []
+        assert drop.injected_drops == 5
+
+        dup = FaultyBus(T.InprocBus(), FaultPlan(dup_notify=1.0))
+        peer = dup.connect(address)
+        peer.notify("evt", "x")
+        assert _wait(lambda: len(seen) == 2)
+        assert dup.injected_dups == 1
+        assert dup.stats()["injected_dups"] == 1
+    finally:
+        inner.close()
+
+
+def test_faulty_bus_fails_calls_and_respects_immunity():
+    inner, address, _ = _serve_counter()
+    try:
+        bus = FaultyBus(
+            T.InprocBus(),
+            FaultPlan(fail_call=1.0, immune=frozenset({"echo"})),
+        )
+        peer = bus.connect(address)
+        assert peer.call("echo", 7) == 7   # immune method still works
+        with pytest.raises(BusTimeoutError):
+            peer.call("evt", 1)
+        assert bus.injected_call_failures == 1
+    finally:
+        inner.close()
+
+
+def test_faulty_bus_scheduled_kill_closes_the_peer():
+    inner, address, seen = _serve_counter()
+    try:
+        bus = FaultyBus(T.InprocBus(), FaultPlan().kill_at("", 0.0))
+        bus.plan.start()
+        peer = bus.connect(address)
+        with pytest.raises(BusError):
+            peer.call("echo", 1)          # the kill fires on first send
+        assert bus.injected_kills == 1
+        peer.notify("evt", 2)             # dead peer: silently dropped
+        assert seen == []
+    finally:
+        inner.close()
+
+
+def test_faulty_bus_partition_blackholes_notifies_and_times_out_calls():
+    inner, address, seen = _serve_counter()
+    try:
+        bus = FaultyBus(T.InprocBus(), FaultPlan().partition("", 0.0))
+        bus.plan.start()
+        peer = bus.connect(address)
+        peer.notify("evt", 1)
+        assert seen == []
+        assert bus.injected_drops == 1
+        with pytest.raises(BusTimeoutError):
+            peer.call("echo", 1)
+    finally:
+        inner.close()
+
+
+def test_faulty_bus_server_side_wrapping_is_identity_stable():
+    """Handlers must see the SAME wrapper object across messages:
+    endpoints key routing tables by peer identity and compare with
+    ``is`` on disconnect."""
+    peers: list = []
+    server = FaultyBus(T.InprocBus(), FaultPlan())
+    address = server.serve({"evt": lambda peer, p: peers.append(peer)})
+    client = T.InprocBus()
+    try:
+        p = client.connect(address)
+        p.notify("evt", 1)
+        p.notify("evt", 2)
+        assert _wait(lambda: len(peers) == 2)
+        assert isinstance(peers[0], FaultyPeer)
+        assert peers[0] is peers[1]
+    finally:
+        server.close()
+        client.close()
+
+
+# --------------------------------------------------------------------------
+# SocketBus delivery-failure counters (satellite: per-peer stats)
+# --------------------------------------------------------------------------
+
+
+def test_socketbus_counts_send_errors_and_dropped_notifies():
+    server = T.SocketBus()
+    address = server.serve({"echo": lambda peer, p: p})
+    client = T.SocketBus()
+    try:
+        peer = client.connect(address)
+        assert peer.call("echo", 1) == 1
+        stats = client.stats()
+        assert stats["send_errors"] == 0 and stats["dropped_notifies"] == 0
+        assert stats["peers"]  # per-peer breakdown exposed
+        # Cut the wire under the sender: the next notify's frame dies in
+        # sendall and both counters must record the loss.
+        class _BrokenSock:
+            def __init__(self, inner):
+                self._inner = inner
+
+            def sendall(self, data):
+                raise OSError("injected wire cut")
+
+            def __getattr__(self, name):
+                return getattr(self._inner, name)
+
+        peer._sock = _BrokenSock(peer._sock)  # noqa: SLF001
+        peer.notify("evt", 2)
+        assert _wait(
+            lambda: client.stats()["send_errors"] >= 1
+            and client.stats()["dropped_notifies"] >= 1
+        )
+    finally:
+        client.close()
+        server.close()
+
+
+# --------------------------------------------------------------------------
+# Manager: poison-chunk quarantine (attempt budget + cascade)
+# --------------------------------------------------------------------------
+
+
+def _pipe_registry():
+    reg = VariantRegistry()
+    reg.register(
+        "produce",
+        "cpu",
+        lambda ctx: np.full((8, 8), float(ctx.chunk.chunk_id + 1), np.float32),
+    )
+    reg.register(
+        "consume", "cpu", lambda ctx: float(np.asarray(ctx.sole_input()).sum())
+    )
+    return reg
+
+
+def test_poison_chunk_quarantined_on_distinct_workers_with_cascade():
+    plan = FaultPlan()
+    hook = plan.op_hook(poison_chunks=(2,))
+    wf = AbstractWorkflow.chain(
+        "pipe",
+        [Stage.single(Operation("produce")), Stage.single(Operation("consume"))],
+    )
+    cw = ConcreteWorkflow.replicate(wf, [DataChunk(i) for i in range(4)])
+    mgr = Manager(
+        cw, ManagerConfig(window=2, backup_tasks=False, quarantine_after=2)
+    )
+    reported: list = []
+    mgr.failure_hook = lambda uid, err: reported.append((uid, err))
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(
+            wid, lanes=(LaneSpec("cpu", 0),), variant_registry=_pipe_registry()
+        )
+        rt.on_op_start = hook
+        rt.start()
+        mgr.register_worker(rt)
+        workers.append(rt)
+    try:
+        assert mgr.run(timeout=60.0)
+        by_chunk = {}
+        for si in cw.stage_instances.values():
+            by_chunk.setdefault(si.chunk.chunk_id, {})[si.stage.name] = si.uid
+        q = mgr.quarantined()
+        # Both stages of the poison chunk are terminal: the produce by
+        # its own attempt budget, the consume by cascade.
+        assert set(q) == {by_chunk[2]["produce"], by_chunk[2]["consume"]}
+        assert "poison chunk 2" in q[by_chunk[2]["produce"]]
+        assert "upstream stage" in q[by_chunk[2]["consume"]]
+        # The budget counted DISTINCT workers (anti-affinity re-lease).
+        assert mgr._attempts[by_chunk[2]["produce"]] == {0, 1}  # noqa: SLF001
+        assert mgr.stage_failures >= 2
+        assert mgr.lease_retries >= 1
+        # Exactly-once accounting: everything else completed, correctly.
+        done, total = mgr.progress()
+        assert (done, total) == (len(cw.stage_instances) - 2, len(cw.stage_instances))
+        for cid in (0, 1, 3):
+            out = mgr.stage_outputs(by_chunk[cid]["consume"])["consume"]
+            assert out == float(cid + 1) * 64
+        # The failure hook surfaced both quarantined stages, once each.
+        assert sorted(uid for uid, _ in reported) == sorted(q)
+    finally:
+        for rt in workers:
+            rt.stop()
+
+
+def test_gateway_surfaces_quarantine_as_failed_request():
+    reg = VariantRegistry()
+
+    def work(ctx):
+        if ctx.chunk.chunk_id == 13:
+            raise RuntimeError("poison tile")
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    wf = AbstractWorkflow.chain("serve", [Stage.single(Operation("work"))])
+    mgr = Manager(
+        ConcreteWorkflow(wf),
+        ManagerConfig(window=4, backup_tasks=False, quarantine_after=2),
+    )
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(wid, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+        rt.start()
+        mgr.register_worker(rt)
+        workers.append(rt)
+    gw = RequestGateway(mgr, GatewayConfig(max_queue=64), tenants={"t": 1.0})
+    try:
+        good1 = gw.submit("t", DataChunk(1))
+        bad = gw.submit("t", DataChunk(13))
+        good2 = gw.submit("t", DataChunk(2))
+        assert bad.wait(timeout=60.0)  # a verdict, not a hung request
+        assert gw.close(timeout=60.0)
+        assert good1.state == DONE and good2.state == DONE
+        assert bad.state == FAILED and bad.accepted
+        assert "poison tile" in bad.error
+        assert bad.t_done is not None and bad.remaining == 0
+        assert gw.stats.completed == 2 and gw.stats.failed == 1
+        assert gw.stats.tenant_failed == {"t": 1}
+        assert len(mgr.quarantined()) == 1
+    finally:
+        for rt in workers:
+            rt.stop()
+
+
+def test_serving_client_sees_failed_state_and_error_over_bus():
+    reg = VariantRegistry()
+
+    def work(ctx):
+        if ctx.chunk.chunk_id == 13:
+            raise RuntimeError("poison tile")
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    wf = AbstractWorkflow.chain("serve", [Stage.single(Operation("work"))])
+    mgr = Manager(
+        ConcreteWorkflow(wf),
+        ManagerConfig(window=4, backup_tasks=False, quarantine_after=2),
+    )
+    endpoint = T.ManagerEndpoint(mgr, T.InprocBus())
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(wid, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+        rt.start()
+        workers.append(rt)
+        T.WorkerClient(rt, T.InprocBus(), endpoint.address)
+    assert endpoint.wait_workers(2, timeout=30.0)
+    gw = RequestGateway(mgr, GatewayConfig(max_queue=64), tenants={"t": 1.0})
+    endpoint.attach_gateway(gw)
+    client = T.ServingClient(T.InprocBus(), endpoint.address)
+    try:
+        ok_ack = client.submit(1, tenant="t")
+        bad_ack = client.submit(13, tenant="t")
+        assert ok_ack["ok"] and bad_ack["ok"]
+        assert gw.drain(timeout=60.0)
+        st = client.status(bad_ack["req_id"])
+        assert st["ok"] and st["state"] == FAILED
+        assert "poison tile" in st["error"]
+        st_ok = client.status(ok_ack["req_id"])
+        assert st_ok["state"] == DONE and st_ok["error"] is None
+    finally:
+        client.close()
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
+
+
+# --------------------------------------------------------------------------
+# CRC rejects + alternate-route re-fetch over the bus
+# --------------------------------------------------------------------------
+
+
+def _fanin_cluster(
+    bus_factory,
+    plan,
+    *,
+    n_workers: int = 2,
+    n_chunks: int = 2,
+    push: bool = False,
+    push_grace=None,
+    hook=None,
+    **cfg_kwargs,
+):
+    cfg = dict(
+        window=2,
+        locality_aware=True,
+        backup_tasks=False,
+        heartbeat_timeout=120.0,
+        predictive_push=push,
+    )
+    cfg.update(cfg_kwargs)
+    cw = fanin_concrete(n_chunks)
+    mgr = Manager(cw, ManagerConfig(**cfg))
+    endpoint = T.ManagerEndpoint(mgr, FaultyBus(bus_factory(), plan))
+    workers, clients = [], []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=fanin_registry(),
+            staging=StagingConfig(),
+        )
+        if hook is not None:
+            rt.on_op_start = hook
+        rt.start()
+        workers.append(rt)
+        kw = {} if push_grace is None else {"push_grace": push_grace}
+        clients.append(
+            T.WorkerClient(
+                rt, FaultyBus(bus_factory(), plan), endpoint.address, **kw
+            )
+        )
+    return cw, mgr, endpoint, workers, clients
+
+
+def _combine_outputs(mgr: Manager, cw, done=None) -> list:
+    clones = mgr._clone_map()  # noqa: SLF001
+    return sorted(
+        mgr.stage_outputs(si.uid).get("combine")
+        for si in cw.stage_instances.values()
+        if si.stage.name == "combine"
+        and si.uid not in clones
+        and (done is None or si.uid in done)
+    )
+
+
+def test_corrupted_pull_is_rejected_and_refetched_via_relay():
+    """Every direct dial corrupted in transit: CRC rejects the bytes and
+    the puller degrades to the (unsealed, uncorrupted) coordinator relay
+    — the answer is never wrong, only slower."""
+    plan = FaultPlan(seed=9, corrupt_rate=1.0)
+    cw, mgr, endpoint, workers, clients = _fanin_cluster(
+        T.InprocBus, plan, n_chunks=2
+    )
+    try:
+        assert endpoint.wait_workers(2, timeout=30.0)
+        assert mgr.run(timeout=120.0)
+        assert _combine_outputs(mgr, cw) == sorted(
+            expected_combine(i) for i in range(2)
+        )
+        assert sum(c.crc_rejects for c in clients) >= 1
+        assert mgr.relay_regions > 0  # the alternate route carried bytes
+    finally:
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
+
+
+def test_corrupted_push_is_rejected_then_pull_backstop_recovers():
+    """A corrupted predictive push must not poison the target's store:
+    the ingest CRC rejects it, the expected push never 'lands', and the
+    lost-push backstop re-pulls the bytes after the grace period."""
+    plan = FaultPlan(seed=11, corrupt_rate=1.0)
+    cw, mgr, endpoint, workers, clients = _fanin_cluster(
+        T.InprocBus, plan, n_chunks=1, push=True, push_grace=0.3
+    )
+    try:
+        assert endpoint.wait_workers(2, timeout=30.0)
+        assert mgr.run(timeout=120.0)
+        assert _combine_outputs(mgr, cw) == [expected_combine(0)]
+        assert sum(c.push_crc_rejects for c in clients) >= 1
+        assert sum(rt.push_ingested for rt in workers) == 0
+    finally:
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
+
+
+# --------------------------------------------------------------------------
+# Regression: coordinator crash mid-predictive-push (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_coordinator_crash_mid_push_lost_push_repulled_exactly_once(tmp_path):
+    """The push directive is issued, but the worker-to-worker
+    ``push_region`` frame is lost and the coordinator dies before any
+    ``region_staged`` confirmation could be journaled.  The lost-push
+    backstop re-pulls the region; after failover the journal names only
+    the true producer as holder (no phantom replica from the lost push)
+    and the workflow completes exactly once."""
+    release = threading.Event()
+    reg = fanin_registry()
+
+    def gated_combine(ctx):
+        assert release.wait(timeout=60.0)
+        a = np.asarray(ctx.inputs["produce_a"])
+        b = np.asarray(ctx.inputs["produce_b"])
+        return float(a.sum() + b.sum())
+
+    reg.register("combine", "cpu", gated_combine)
+    cw = fanin_concrete(1)
+    journal = str(tmp_path / "manager.wal")
+    plan = FaultPlan()
+    plan.should_drop = lambda method: method == "push_region"  # type: ignore[method-assign]
+
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=reg,
+            staging=StagingConfig(),
+        )
+        rt.start()
+        workers.append(rt)
+    b_sink = next(
+        oi.uid
+        for si in cw.stage_instances.values()
+        if si.stage.name == "produce_b"
+        for oi in si.op_instances
+    )
+    try:
+        # -- phase 1: b's output is pushed w1 -> w0 but the frame is
+        # dropped on the wire; combine wedges on the gate.
+        mgr1 = Manager(
+            cw,
+            ManagerConfig(
+                window=1,
+                locality_aware=True,
+                backup_tasks=False,
+                heartbeat_timeout=120.0,
+                predictive_push=True,
+                journal_path=journal,
+            ),
+        )
+        endpoint1 = T.ManagerEndpoint(mgr1, T.InprocBus())
+        clients1 = [
+            T.WorkerClient(
+                rt, FaultyBus(T.InprocBus(), plan), endpoint1.address,
+                push_grace=0.3,
+            )
+            for rt in workers
+        ]
+        assert endpoint1.wait_workers(2, timeout=30.0)
+        assert not mgr1.run(timeout=3.0)  # combine is gated: must time out
+        assert mgr1.push_directives >= 1
+        assert sum(c.pushes for c in clients1) >= 1  # the push was SENT...
+        assert workers[0].push_ingested == 0         # ...but never landed
+        agent = workers[0].agent
+        assert agent.pushes_expected >= 1 and agent.pushes_landed == 0
+        # Lost-push backstop: after the grace period the expected key is
+        # re-pulled, so the gated combine has its inputs.
+        assert _wait(lambda: op_key(b_sink) in workers[0].store, timeout=15.0)
+        # Holder accounting: the lost push left NO phantom replica.
+        assert set(mgr1.directory.holders(op_key(b_sink))) == {1}
+        mgr1.directory.close()  # the coordinator dies
+        endpoint1.bus.close()
+
+        # -- phase 2: rehydrate from the journal; still exactly one
+        # holder; the run completes exactly once on a fresh coordinator.
+        mgr2 = Manager(
+            cw,
+            ManagerConfig(
+                window=1,
+                locality_aware=True,
+                backup_tasks=False,
+                heartbeat_timeout=120.0,
+                predictive_push=True,
+                journal_path=journal,
+            ),
+        )
+        assert set(mgr2.directory.holders(op_key(b_sink))) == {1}
+        endpoint2 = T.ManagerEndpoint(mgr2, T.InprocBus())
+        clients2 = [
+            T.WorkerClient(rt, T.InprocBus(), endpoint2.address)
+            for rt in workers
+        ]
+        assert endpoint2.wait_workers(2, timeout=30.0)
+        release.set()
+        assert mgr2.run(timeout=60.0)
+        assert _combine_outputs(mgr2, cw) == [expected_combine(0)]
+        assert set(mgr2.directory.holders(op_key(b_sink))) == {1}
+        endpoint2.bus.close()
+        del clients2
+    finally:
+        release.set()
+        for rt in workers:
+            rt.stop()
+
+
+# --------------------------------------------------------------------------
+# Simulator fault knobs (mirror of the runtime failure model)
+# --------------------------------------------------------------------------
+
+
+def _sim_fanin_builder():
+    return AbstractWorkflow(
+        "fanin",
+        (
+            Stage.single(Operation("rbc_detection")),
+            Stage.single(Operation("morph_open")),
+            Stage.single(Operation("haralick")),
+        ),
+        (("rbc_detection", "haralick"), ("morph_open", "haralick")),
+    )
+
+
+def test_sim_crash_at_aliases_fail_node_at():
+    cfg = SimConfig(crash_at=(1, 5.0))
+    assert cfg.fail_node_at == (1, 5.0)
+    # An explicit fail_node_at wins over the alias.
+    cfg = SimConfig(crash_at=(1, 5.0), fail_node_at=(2, 3.0))
+    assert cfg.fail_node_at == (2, 3.0)
+
+
+def test_sim_msg_drop_rate_adds_retries_not_failures():
+    base = dict(rpc_latency_us=200.0, seed=3)
+    clean = run_simulation(16, SimConfig(**base))
+    faulty = run_simulation(16, SimConfig(**base, msg_drop_rate=0.4))
+    assert clean.completed_ok and faulty.completed_ok
+    assert clean.msg_retries == 0
+    assert faulty.msg_retries > 0
+    # Retransmits cost control-plane wait, never correctness.  (Makespan
+    # is NOT asserted monotone: shifted lease arrivals can perturb the
+    # discrete schedule either way.)
+    assert faulty.rpc_wait > clean.rpc_wait
+    assert faulty.tiles == clean.tiles
+
+
+def test_sim_corrupt_rate_reissues_transfers():
+    base = dict(
+        n_nodes=2, staging=True, staging_locality=False,
+        stage_output_mb=64.0, seed=5,
+    )
+    clean = run_simulation(
+        12, SimConfig(**base), workflow_builder=_sim_fanin_builder
+    )
+    faulty = run_simulation(
+        12, SimConfig(**base, corrupt_rate=0.5),
+        workflow_builder=_sim_fanin_builder,
+    )
+    assert clean.completed_ok and faulty.completed_ok
+    assert clean.corrupt_detected == 0
+    assert faulty.corrupt_detected > 0
+    # Each detected corruption re-issues the transfer: extra bytes move.
+    assert faulty.cross_node_bytes > clean.cross_node_bytes
+
+
+def test_sim_partition_heals_and_run_completes():
+    r = run_simulation(
+        12, SimConfig(n_nodes=2, partition=((1,), 0.5, 1.5), seed=2)
+    )
+    assert r.completed_ok
+
+
+# --------------------------------------------------------------------------
+# Chaos acceptance: the pipeline under a seeded fault schedule
+# --------------------------------------------------------------------------
+
+_CHAOS_POISON = 3
+
+
+def _chaos_plan(seed: int) -> FaultPlan:
+    return FaultPlan(
+        seed=seed,
+        drop_notify=0.05,
+        dup_notify=0.05,
+        delay_notify=0.08,
+        delay_s=0.01,
+        fail_call=0.03,
+        corrupt_rate=0.2,
+    )
+
+
+def _assert_exactly_once(mgr, cw, n_chunks, poison_cid):
+    """Every primary stage instance is completed XOR quarantined, the
+    quarantine set is exactly the poison chunk's stages, and every
+    completed combine has the right value."""
+    clones = mgr._clone_map()  # noqa: SLF001
+    primaries = {u for u in cw.stage_instances if u not in clones}
+    done = {u for u in mgr._stage_done if u in primaries}  # noqa: SLF001
+    q = set(mgr.quarantined())
+    assert done & q == set()
+    assert done | q == primaries
+    assert q == {
+        si.uid
+        for si in cw.stage_instances.values()
+        if si.chunk.chunk_id == poison_cid and si.uid not in clones
+    }
+    expected = sorted(
+        expected_combine(i) for i in range(n_chunks) if i != poison_cid
+    )
+    assert _combine_outputs(mgr, cw, done=done) == expected
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("bus_cls", [T.InprocBus, T.SocketBus])
+def test_chaos_pipeline_exactly_once_under_seeded_schedule(bus_cls):
+    """Acceptance: fan-in pipeline on a 4-worker cluster under the
+    seeded chaos schedule — one worker crash, dropped/duplicated/
+    delayed notifies, failed calls, corrupted regions, one poison chunk
+    — every tile is completed or quarantined exactly once and every
+    completed output is bit-correct."""
+    n_chunks = 6
+    plan = _chaos_plan(seed=1234)
+    # Crash on the *second* op: worker 1's initial window fill hands it
+    # two leases straight away, so the crash fires regardless of how
+    # the scheduler spreads the remaining ops across four workers (a
+    # higher threshold is not guaranteed to be reached before the run
+    # drains).
+    hook = plan.op_hook(
+        poison_chunks=(_CHAOS_POISON,), crash_worker_at_op={1: 2}
+    )
+    cw, mgr, endpoint, workers, clients = _fanin_cluster(
+        bus_cls,
+        plan,
+        n_workers=4,
+        n_chunks=n_chunks,
+        hook=hook,
+        heartbeat_timeout=3.0,
+        poll_interval=0.05,
+        # 3, not 2: with injected lease-message drops a *healthy* chunk
+        # can coincidentally collect two distinct-worker reap charges
+        # (the scheduled crash plus one slander-reap).  Three distinct
+        # survivors exist after the crash, and re-lease anti-affinity
+        # walks the poison chunk across all of them.
+        quarantine_after=3,
+        rpc_timeout=2.0,
+    )
+    try:
+        assert endpoint.wait_workers(4, timeout=30.0)
+        plan.start()
+        assert mgr.run(timeout=120.0)
+        _assert_exactly_once(mgr, cw, n_chunks, _CHAOS_POISON)
+        assert not workers[1].alive  # the scheduled crash really fired
+        # The schedule actually injected faults (not a vacuous pass).
+        buses = [endpoint.bus] + [c.bus for c in clients]
+        injected = sum(
+            b.injected_drops + b.injected_dups + b.injected_call_failures
+            for b in buses
+        )
+        assert injected > 0
+    finally:
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_chaos_randomized_sweep(seed):
+    """Multi-seed randomized sweep (slow tier): same exactly-once
+    invariant under fault rates drawn from the seed itself."""
+    rng = random.Random(seed)
+    n_chunks = 4
+    plan = FaultPlan(
+        seed=seed,
+        drop_notify=rng.uniform(0.0, 0.1),
+        dup_notify=rng.uniform(0.0, 0.1),
+        delay_notify=rng.uniform(0.0, 0.15),
+        delay_s=0.01,
+        fail_call=rng.uniform(0.0, 0.05),
+        corrupt_rate=rng.uniform(0.0, 0.4),
+    )
+    hook = plan.op_hook(
+        poison_chunks=(_CHAOS_POISON,),
+        crash_worker_at_op={1: rng.randint(2, 8)},
+    )
+    cw, mgr, endpoint, workers, clients = _fanin_cluster(
+        T.InprocBus,
+        plan,
+        n_workers=4,
+        n_chunks=n_chunks,
+        hook=hook,
+        heartbeat_timeout=3.0,
+        poll_interval=0.05,
+        # 3, not 2: with injected lease-message drops a *healthy* chunk
+        # can coincidentally collect two distinct-worker reap charges
+        # (the scheduled crash plus one slander-reap).  Three distinct
+        # survivors exist after the crash, and re-lease anti-affinity
+        # walks the poison chunk across all of them.
+        quarantine_after=3,
+        rpc_timeout=2.0,
+    )
+    try:
+        assert endpoint.wait_workers(4, timeout=30.0)
+        plan.start()
+        assert mgr.run(timeout=120.0)
+        _assert_exactly_once(mgr, cw, n_chunks, _CHAOS_POISON)
+    finally:
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
