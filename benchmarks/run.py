@@ -41,6 +41,8 @@ def main() -> None:
                     help="path for the pr6 bench JSON (default: BENCH_PR6.json)")
     ap.add_argument("--pr7-json", default=None,
                     help="path for the pr7 bench JSON (default: BENCH_PR7.json)")
+    ap.add_argument("--pr8-json", default=None,
+                    help="path for the pr8 bench JSON (default: BENCH_PR8.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -49,11 +51,11 @@ def main() -> None:
         args.only.split(",")
         if args.only
         else list(ALL_BENCHES)
-        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "roofline"]
+        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "pr8", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             if name == "pr2":
                 from benchmarks.pr2 import bench_pr2
@@ -79,6 +81,10 @@ def main() -> None:
                 from benchmarks.faults import bench_pr7
 
                 bench_rows = bench_pr7(args.pr7_json)
+            elif name == "pr8":
+                from benchmarks.telemetry import bench_pr8
+
+                bench_rows = bench_pr8(args.pr8_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 
@@ -101,7 +107,7 @@ def main() -> None:
             continue
         for row_name, value, derived in bench_rows:
             print(f"{row_name},{value:.6g},{derived}")
-        print(f"{name}/bench_wall_s,{time.time() - t0:.1f},harness timing")
+        print(f"{name}/bench_wall_s,{time.perf_counter() - t0:.1f},harness timing")
 
 
 if __name__ == "__main__":

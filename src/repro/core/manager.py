@@ -36,6 +36,8 @@ from typing import Any, Callable, Optional
 
 from .workflow import ConcreteWorkflow, StageInstance
 from .worker import WorkerRuntime
+from ..telemetry.metrics import MetricsRegistry
+from ..telemetry.tracing import SpanContext, current_context, use_context
 from ..staging import (
     DirectoryService,
     PlacementDirectory,
@@ -131,17 +133,39 @@ class _PushInFlight:
 
 
 class Manager:
-    def __init__(self, workflow: ConcreteWorkflow, cfg: ManagerConfig | None = None):
+    def __init__(
+        self,
+        workflow: ConcreteWorkflow,
+        cfg: ManagerConfig | None = None,
+        *,
+        registry: MetricsRegistry | None = None,
+        tracer=None,
+        recorder=None,
+    ):
         self.cw = workflow
         self.cfg = cfg or ManagerConfig()
+        # Coordinator-side observability: every counter below is an
+        # int-like cell in this registry (``manager.*``), so one
+        # ``metrics.snapshot()`` covers what used to be scattered
+        # attributes; ``stats()`` stays the thin compatibility view.
+        self.metrics = registry or MetricsRegistry("manager")
+        self.tracer = tracer          # telemetry.Tracer (optional)
+        self.recorder = recorder      # telemetry.FlightRecorder (optional)
+        c = lambda name: self.metrics.counter(f"manager.{name}")  # noqa: E731
         self._lock = threading.RLock()
         self._workers: dict[int, _WorkerState] = {}
         self._pending: deque[StageInstance] = deque()
         self._stage_done: set[int] = set()
         self._stage_outputs: dict[int, dict[str, Any]] = {}
         self._dup_issued: set[int] = set()
-        self.recovered_leases = 0
-        self.duplicated_leases = 0
+        # Trace context per queued stage instance: captured when the
+        # instance enters the pending queue (the submitting thread —
+        # gateway or stage-complete handler — carries the request's
+        # context) and re-installed around the lease so the trace
+        # follows the stage to whichever worker wins it.
+        self._trace_ctx: dict[int, SpanContext] = {}
+        self.recovered_leases = c("recovered_leases")
+        self.duplicated_leases = c("duplicated_leases")
         # Per-lease attempt budget: primary uid -> distinct workers that
         # failed (or died) while holding it.  Crossing
         # ``cfg.quarantine_after`` quarantines the stage and its
@@ -150,8 +174,8 @@ class Manager:
         # re-fails, and re-quarantines — slower, never wrong.
         self._attempts: dict[int, set[int]] = {}
         self._quarantined: dict[int, str] = {}
-        self.stage_failures = 0   # explicit worker failure reports
-        self.lease_retries = 0    # failed leases re-queued elsewhere
+        self.stage_failures = c("stage_failures")  # explicit worker failure reports
+        self.lease_retries = c("lease_retries")    # failed leases re-queued elsewhere
         # Called outside the lock, once per newly-quarantined primary
         # uid, as hook(uid, error) — the serving gateway maps these to
         # terminal ``failed`` request state.
@@ -167,22 +191,23 @@ class Manager:
                 snapshot_every=self.cfg.snapshot_every,
                 snapshot_bytes=self.cfg.snapshot_bytes,
                 incremental=self.cfg.incremental_snapshots,
+                registry=self.metrics,
             )
             for uid in self.directory.completed:
                 if uid in self.cw.stage_instances:
                     self._stage_done.add(uid)
         else:
             self.directory = self.cfg.directory or PlacementDirectory()
-        self.placement_local = 0       # dependent leased where its data is
-        self.placement_remote = 0      # dependent leased elsewhere
-        self.staged_bytes_avoided = 0  # inputs not re-sent: already staged
+        self.placement_local = c("placement_local")    # dependent leased where its data is
+        self.placement_remote = c("placement_remote")  # dependent leased elsewhere
+        self.staged_bytes_avoided = c("staged_bytes_avoided")  # inputs not re-sent
         # Coordinator data-plane accounting: region payloads this
         # coordinator relayed (fetch_region(s) serving worker pulls) vs
         # push work it only *directed* (bytes flowed worker-to-worker).
-        self.relay_regions = 0
-        self.relay_bytes = 0
-        self.push_directives = 0       # pushes delegated to a WorkerClient
-        self.pushes_inline = 0         # in-process targets injected directly
+        self.relay_regions = c("relay_regions")
+        self.relay_bytes = c("relay_bytes")
+        self.push_directives = c("push_directives")  # delegated to a WorkerClient
+        self.pushes_inline = c("pushes_inline")      # in-process targets injected directly
         # (target worker, region key) -> in-flight push ledger.  One
         # structure serves three roles: predictor dedup (a push already
         # racing toward the target is not re-sent), ingress byte
@@ -197,8 +222,8 @@ class Manager:
         # drained oldest-first as region_staged credits return.
         self._push_deferred: dict[int, deque] = {}
         self._push_deferred_keys: set[tuple[int, Any]] = set()
-        self.pushes_deferred = 0       # directives that waited for credit
-        self.pushes_dropped = 0        # deferred directives voided (death)
+        self.pushes_deferred = c("pushes_deferred")  # directives that waited for credit
+        self.pushes_dropped = c("pushes_dropped")    # deferred directives voided (death)
         self.push_inflight_peak: dict[int, int] = {}  # max reserved/target
         self._done_event = threading.Event()
         self._monitor: Optional[threading.Thread] = None
@@ -347,6 +372,12 @@ class Manager:
         # earliest-first at the head of the queue, ahead of deadline-free
         # batch work.  The pending invariant is [deadlines ascending] +
         # [batch FIFO]; batch pushes keep their O(1) append.
+        ctx = current_context()
+        if ctx is not None and ctx.sampled:
+            # First queueing wins: a recovery re-queue from the monitor
+            # thread (no ambient context) must not clobber the request's
+            # context, and neither must an unrelated caller's.
+            self._trace_ctx.setdefault(si.uid, ctx)
         if getattr(si, "deadline", None) is None:
             self._pending.append(si)
         else:
@@ -497,6 +528,8 @@ class Manager:
             self._stage_done.add(primary_uid)
             if si.uid != primary_uid:
                 self._stage_done.add(si.uid)
+            self._trace_ctx.pop(primary_uid, None)
+            self._trace_ctx.pop(si.uid, None)
             self._stage_outputs[primary_uid] = outputs
             for wst in self._workers.values():
                 wst.leases.discard(si.uid)
@@ -642,6 +675,7 @@ class Manager:
             if pu in self._quarantined or pu in self._stage_done:
                 continue
             self._quarantined[pu] = err
+            self._trace_ctx.pop(pu, None)
             newly.append(pu)
             for i, p in enumerate(self._pending):
                 if self._clone_map().get(p.uid, p.uid) == pu:
@@ -665,8 +699,23 @@ class Manager:
         return newly
 
     def _fire_failure_hooks(self, uids: list[int]) -> None:
+        if not uids:
+            return
+        if self.recorder is not None:
+            # A quarantine is a postmortem moment: freeze the recent
+            # span/event ring before the hooks mutate downstream state.
+            self.recorder.dump(
+                "quarantine",
+                detail={
+                    "uids": list(uids),
+                    "errors": {
+                        u: self._quarantined.get(u, "quarantined")
+                        for u in uids
+                    },
+                },
+            )
         hook = self.failure_hook
-        if hook is None or not uids:
+        if hook is None:
             return
         for uid in uids:
             try:
@@ -678,6 +727,38 @@ class Manager:
         """Snapshot of quarantined primary stage uids -> error."""
         with self._lock:
             return dict(self._quarantined)
+
+    def stats(self) -> dict[str, Any]:
+        """Wire-safe coordinator stats: a thin view over the
+        ``manager.*`` registry cells plus live queue/membership gauges
+        (served over the bus by the ``get_stats`` RPC)."""
+        with self._lock:
+            out: dict[str, Any] = {
+                "recovered_leases": int(self.recovered_leases),
+                "duplicated_leases": int(self.duplicated_leases),
+                "stage_failures": int(self.stage_failures),
+                "lease_retries": int(self.lease_retries),
+                "placement_local": int(self.placement_local),
+                "placement_remote": int(self.placement_remote),
+                "staged_bytes_avoided": int(self.staged_bytes_avoided),
+                "relay_regions": int(self.relay_regions),
+                "relay_bytes": int(self.relay_bytes),
+                "push_directives": int(self.push_directives),
+                "pushes_inline": int(self.pushes_inline),
+                "pushes_deferred": int(self.pushes_deferred),
+                "pushes_dropped": int(self.pushes_dropped),
+                "push_inflight_peak": dict(self.push_inflight_peak),
+                "workers": len(self._workers),
+                "pending": len(self._pending),
+                "stages_done": len(self._stage_done),
+                "quarantined": len(self._quarantined),
+            }
+        svc = self._journal_svc()
+        if svc is not None:
+            out["directory"] = svc.stats()
+        if self.tracer is not None:
+            out["tracing"] = self.tracer.stats()
+        return out
 
     def _dispatch_all_locked(self) -> None:
         live = {
@@ -778,8 +859,26 @@ class Manager:
         svc = self._journal_svc()
         if svc is not None:
             svc.note_lease(si.uid, wid)
-        self._forward_upstream_outputs(st.runtime, si)
-        st.runtime.submit_stage(si)
+        ctx = self._trace_ctx.get(si.uid)
+        if ctx is not None:
+            # Re-install the request's context around the dispatch: the
+            # submit_stage call (direct or over a TracingBus) carries it
+            # to the worker, and the lease itself becomes a span.
+            with use_context(ctx):
+                if self.tracer is not None:
+                    with self.tracer.span(
+                        "stage:lease",
+                        cat="sched",
+                        args={"uid": si.uid, "worker": wid},
+                    ):
+                        self._forward_upstream_outputs(st.runtime, si)
+                        st.runtime.submit_stage(si)
+                else:
+                    self._forward_upstream_outputs(st.runtime, si)
+                    st.runtime.submit_stage(si)
+        else:
+            self._forward_upstream_outputs(st.runtime, si)
+            st.runtime.submit_stage(si)
 
     def _journal_svc(self) -> Optional[DirectoryService]:
         d = self.directory

@@ -89,6 +89,24 @@ class SchedulerStats:
             for op, kinds in prof.items()
         }
 
+    def bind(self, registry, prefix: str = "scheduler") -> "SchedulerStats":
+        """Serve the scalar counters from a shared ``MetricsRegistry``.
+
+        The int fields are replaced with the registry's int-like
+        counter cells (same ``+=`` call sites, comparisons, and reads
+        — see :mod:`repro.telemetry.metrics`); ``assigned`` stays a
+        plain dict (its per-(op, lane) keys are a profile, not a
+        scalar metric).  Unbound (the default, e.g. the thousands of
+        per-node schedulers inside a simulation) nothing changes and
+        increments stay plain-int cheap.
+        """
+        for name in ("reuse_hits", "reuse_misses", "batches",
+                     "batched_ops", "deadline_pops"):
+            cell = registry.counter(f"{prefix}.{name}")
+            cell.inc(int(getattr(self, name)))
+            setattr(self, name, cell)
+        return self
+
 
 class _SortedTasks:
     """Tasks kept sorted by (speedup, seq).  O(log n) insert/remove."""
@@ -187,7 +205,7 @@ class ReadyScheduler:
 
     def __init__(self, policy: str = "fcfs", locality: bool = False,
                  speedups_known: bool = True, chain_affinity: float = 0.0,
-                 deadline_aware: bool = True):
+                 deadline_aware: bool = True, registry=None):
         if policy not in ("fcfs", "pats"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
@@ -203,6 +221,8 @@ class ReadyScheduler:
         # FIFO baseline the serving benchmarks compare against).
         self.deadline_aware = deadline_aware
         self.stats = SchedulerStats()
+        if registry is not None:
+            self.stats.bind(registry)
         self._fifo: deque[OperationInstance] = deque()
         self._sorted = _SortedTasks()
         self._edf = _DeadlineTasks()

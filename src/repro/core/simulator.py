@@ -26,7 +26,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -267,6 +267,13 @@ class SimConfig:
     # fail_node_at), and/or have one extra node join at time ``t``.
     drain_node_at: Optional[tuple[int, float]] = None
     join_node_at: Optional[float] = None
+    # -- telemetry mirror (repro.telemetry) -------------------------------
+    # Emit the runtime's span schema from the simulated seams — gateway
+    # admission, stage lease, per-lane op execution, region pull/push,
+    # request completion — with sim-clock timestamps, so trace tooling
+    # (Chrome trace export, tests) works identically on both engines.
+    telemetry: bool = False
+    trace_sample_rate: float = 1.0
 
     def __post_init__(self) -> None:
         if self.crash_at is not None and self.fail_node_at is None:
@@ -345,6 +352,9 @@ class SimResult:
     tardiness_p99: float = 0.0
     tenant_completed: dict[str, int] = field(default_factory=dict)
     tenant_misses: dict[str, int] = field(default_factory=dict)
+    # Telemetry mirror (cfg.telemetry): spans in the runtime Tracer's
+    # schema, timestamped on the sim clock (seconds, not epoch).
+    spans: list = field(default_factory=list)
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -541,6 +551,25 @@ class ClusterSim:
             else None
         )
 
+        # Telemetry mirror (cfg.telemetry): the runtime Tracer with
+        # sim-clock timestamps.  Stage uid -> trace context (the
+        # request's root in serving mode; a per-tile root in batch
+        # mode), so one request's lease/op/pull/push spans stitch under
+        # one trace exactly like the threaded runtime's.
+        self.tracer = None
+        self._trace_ctx: dict[int, Any] = {}
+        self._chunk_ctx: dict[int, Any] = {}
+        self._req_ctx: dict[int, Any] = {}
+        if cfg.telemetry:
+            from ..telemetry.tracing import Tracer
+
+            self.tracer = Tracer(
+                "sim",
+                sample_rate=cfg.trace_sample_rate,
+                capacity=1 << 16,
+                seed=cfg.seed,
+            )
+
     # -- calibrated cost model -------------------------------------------------
 
     def _make_estimates(self) -> dict[str, float]:
@@ -717,6 +746,7 @@ class ClusterSim:
             rpc_wait=self.rpc_wait,
             msg_retries=self.msg_retries,
             corrupt_detected=self.corrupt_detected,
+            spans=self.tracer.spans() if self.tracer is not None else [],
             **serve_kwargs,
         )
 
@@ -770,6 +800,16 @@ class ClusterSim:
         self._serve_last_finish[req.tenant] = req.finish_tag
         self._serve_queues.setdefault(req.tenant, []).append(req)
         self._serve_queued += 1
+        if self.tracer is not None:
+            root = self.tracer.start_trace()
+            self._req_ctx[req.req_id] = root
+            self._t_span(
+                "gateway:admit",
+                root,
+                cat="request",
+                tid="gateway",
+                args={"req_id": req.req_id, "tenant": req.tenant},
+            )
         self._serve_dispatch()
 
     def _serve_dispatch(self) -> None:
@@ -809,6 +849,10 @@ class ClusterSim:
             req.remaining = len(terminals)
             for si in terminals:
                 self._serve_terminal[si.uid] = req
+            root = self._req_ctx.get(req.req_id)
+            if root is not None:
+                for si in sis:
+                    self._trace_ctx[si.uid] = root
             self._n_primary_stages += len(sis)
             for si in sis:
                 if si.deps.issubset(self.stage_done):
@@ -824,6 +868,22 @@ class ClusterSim:
         if req.remaining > 0:
             return
         req.t_done = self.now
+        root = self._req_ctx.pop(req.req_id, None)
+        if root is not None and root.sampled and self.tracer is not None:
+            missed = req.deadline is not None and req.t_done > req.deadline
+            self.tracer.record_span(
+                "request",
+                ctx=root,
+                cat="request",
+                ts=req.arrival,
+                dur=req.t_done - req.arrival,
+                tid="gateway",
+                args={
+                    "req_id": req.req_id,
+                    "tenant": req.tenant,
+                    "deadline_miss": missed,
+                },
+            )
         self._serve_inflight -= 1
         self._serve_dispatch()
 
@@ -864,6 +924,51 @@ class ClusterSim:
         node.alive = True
         self._fill_window(node)
 
+    # -- telemetry mirror ---------------------------------------------------------
+
+    def _t_ctx(self, si: StageInstance):
+        """Trace context for a stage: the owning request's root
+        (serving), else a lazily-rooted per-tile trace (batch)."""
+        if self.tracer is None:
+            return None
+        ctx = self._trace_ctx.get(si.uid)
+        if ctx is not None:
+            return ctx
+        cid = si.chunk.chunk_id
+        ctx = self._chunk_ctx.get(cid)
+        if ctx is None:
+            ctx = self.tracer.start_trace()
+            self._chunk_ctx[cid] = ctx
+        self._trace_ctx[si.uid] = ctx
+        return ctx
+
+    def _t_span(
+        self,
+        name: str,
+        ctx,
+        *,
+        cat: str,
+        dur: float = 0.0,
+        tid: str = "manager",
+        args: Optional[dict] = None,
+        ts: Optional[float] = None,
+    ) -> None:
+        """Record one child span under ``ctx`` at sim time (no wall
+        clock ever leaks into a simulated trace)."""
+        if self.tracer is None or ctx is None or not ctx.sampled:
+            return
+        sub = self.tracer.child(ctx)
+        self.tracer.record_span(
+            name,
+            ctx=sub,
+            parent=ctx.span_id,
+            cat=cat,
+            ts=self.now if ts is None else ts,
+            dur=dur,
+            tid=tid,
+            args=args,
+        )
+
     # -- Manager: demand-driven assignment --------------------------------------
 
     def _partitioned(self, nid: int) -> bool:
@@ -897,6 +1002,13 @@ class ClusterSim:
             # on top of the protocol latency.
             rtt = self._control_rtt()
             self.rpc_wait += rtt
+            self._t_span(
+                "stage:lease",
+                self._t_ctx(si),
+                cat="sched",
+                dur=self.cfg.dispatch_latency + rtt,
+                args={"uid": si.uid, "worker": node.node_id},
+            )
             self._post(
                 self.now + self.cfg.dispatch_latency + rtt,
                 lambda si=si, node=node: self._start_stage(node, si),
@@ -959,6 +1071,14 @@ class ClusterSim:
             # before the stage's source ops can run (async with respect
             # to the node's lanes — only this stage waits).
             self.transfer_wait += delay
+            self._t_span(
+                "region:pull",
+                self._t_ctx(si),
+                cat="region",
+                dur=delay,
+                tid=f"n{node.node_id}",
+                args={"uid": si.uid, "deps": len(si.deps)},
+            )
             self._post(
                 self.now + delay,
                 lambda node=node, si=si: self._start_stage_ops(node, si),
@@ -1178,6 +1298,17 @@ class ClusterSim:
         lane.busy = True
         lane.busy_total += duration
         node.inflight_ops += len(ois)
+        if self.tracer is not None:
+            tid = f"n{node.node_id}/{lane.kind}{lane.lane_id}"
+            for oi in ois:
+                self._t_span(
+                    f"op:{oi.op.name}",
+                    self._t_ctx(oi.stage_instance),
+                    cat="op",
+                    dur=duration,
+                    tid=tid,
+                    args={"uid": oi.uid, "batch": len(ois)},
+                )
 
         def finish() -> None:
             # The lane is released only with the batch's last member, so
@@ -1405,6 +1536,14 @@ class ClusterSim:
                     ).append((done_t, n))
                 self.pushes += 1
                 self.pushed_bytes += n
+                self._t_span(
+                    "region:push",
+                    self._t_ctx(si),
+                    cat="region",
+                    dur=done_t - self.now,
+                    tid=f"n{src}" if src is not None else "manager",
+                    args={"key": d, "target": target.node_id, "bytes": n},
+                )
 
     def _push_admit(self, target_nid: int, nbytes: int) -> bool:
         """Flow-control admit rule, mirroring the Manager's: a push is

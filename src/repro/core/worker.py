@@ -53,6 +53,8 @@ from .variants import VariantRegistry, registry as global_registry
 from .workflow import OperationInstance, StageInstance
 from ..staging import RegionStore, StagingAgent, StagingConfig, op_key
 from ..staging.tiers import HostTier
+from ..telemetry.metrics import MetricsRegistry
+from ..telemetry.tracing import SpanContext, current_context, use_context
 
 __all__ = ["DeviceMemory", "LaneSpec", "OpContext", "WorkerRuntime"]
 
@@ -152,10 +154,20 @@ class WorkerRuntime:
         on_stage_complete: Callable[[StageInstance, dict[str, Any]], None] | None = None,
         observe_runtimes: bool = True,
         on_heartbeat=None,
+        registry: MetricsRegistry | None = None,
+        tracer=None,
+        recorder=None,
     ) -> None:
         self.worker_id = worker_id
         self.on_heartbeat = on_heartbeat
         self.registry = variant_registry or global_registry
+        # One metrics registry per worker process: the scheduler, region
+        # store, staging agent, and this runtime's own counters all
+        # register into it, so ``stats()`` (and the ``get_stats`` RPC)
+        # are thin views over a single place.
+        self.metrics = registry or MetricsRegistry(f"worker{worker_id}")
+        self.tracer = tracer          # telemetry.Tracer (optional)
+        self.recorder = recorder      # telemetry.FlightRecorder (optional)
         # Device-resident chaining needs the DL pop (residency-aware) to
         # actually route dependents onto the holding lane.
         self.chaining = chaining
@@ -171,6 +183,7 @@ class WorkerRuntime:
             locality=self.locality,
             speedups_known=speedups_known,
             chain_affinity=1.0 if chaining else 0.0,
+            registry=self.metrics,
         )
         self.prefetch = prefetch
         self.observe_runtimes = observe_runtimes
@@ -192,9 +205,9 @@ class WorkerRuntime:
         # ad-hoc output dict; disk/global tiers come from ``staging``.
         self.staging = staging
         self.store: RegionStore = (
-            staging.build_store()
+            staging.build_store(registry=self.metrics)
             if staging is not None
-            else RegionStore([HostTier()])
+            else RegionStore([HostTier()], registry=self.metrics)
         )
         # Cross-worker pull hooks, wired by the Manager (direct mode) or
         # a transport WorkerClient (bus mode).  ``fetch_regions`` is the
@@ -211,6 +224,7 @@ class WorkerRuntime:
                 fetch_batch=self._fetch_regions,
                 on_staged=self._input_staged,
                 watermark=staging.watermark,
+                registry=self.metrics,
             )
 
         # Execution state.
@@ -235,24 +249,36 @@ class WorkerRuntime:
         # holds the *only* copy of its output (host write-back deferred
         # until a host-side consumer actually needs the bytes).
         self._device_only: dict[int, _LaneState] = {}
-        self.chain_hits = 0        # inputs served device-resident
-        self.chain_deferred = 0    # outputs whose host copy was skipped
-        self.chain_writebacks = 0  # lazy downloads that became necessary
+        c = lambda name: self.metrics.counter(f"worker.{name}")  # noqa: E731
+        self.chain_hits = c("chain_hits")              # inputs served device-resident
+        self.chain_deferred = c("chain_deferred")      # host copies skipped
+        self.chain_writebacks = c("chain_writebacks")  # lazy downloads forced
         # Host-lane chaining: a CPU-produced intermediate whose consumers
         # are all known locally skips the region-store round-trip (lock +
         # tier accounting + pin/unpin churn) and is served by reference.
         self._host_chained: dict[int, Any] = {}
-        self.host_chain_hits = 0       # inputs served from the chain dict
-        self.host_chain_deferred = 0   # outputs that skipped the store
-        self.host_chain_writebacks = 0 # store puts that became necessary
+        self.host_chain_hits = c("host_chain_hits")             # served by reference
+        self.host_chain_deferred = c("host_chain_deferred")     # store puts skipped
+        self.host_chain_writebacks = c("host_chain_writebacks") # puts forced after all
         # Last speedup estimate a queue reorder was based on, per
         # variant: reestimate (O(queue)) only runs when the online EMA
         # actually moved an estimate, not on every completion.
         self._reorder_est: dict[str, float] = {}
         # Coordinator-bypass data plane: regions pushed here by siblings
         # (predictive push of sink outputs) before the lease's own pull.
-        self.push_ingested = 0
-        self.push_ingested_bytes = 0
+        self.push_ingested = c("push_ingested")
+        self.push_ingested_bytes = c("push_ingested_bytes")
+        # Trace context per leased stage: captured at submit time (the
+        # TracingBus installs the sender's context around the handler)
+        # and re-installed around op execution and the completion
+        # callback, so a request's spans chain across the lane threads.
+        self._stage_ctx: dict[int, SpanContext] = {}
+        # Async-pull attribution: region key -> (ctx, perf t0, wall t0)
+        # seeded when a traced lease requests prefetch, consumed when
+        # the StagingAgent lands the region — the pull's true latency
+        # shows up as a ``region:pull`` span on the request's trace
+        # even though the transfer ran on the agent thread.
+        self._pull_ctx: dict[Any, tuple[SpanContext, float, float]] = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -283,6 +309,12 @@ class WorkerRuntime:
             self._failed = True
             self._stop = True
             self._work_ready.notify_all()
+        if self.recorder is not None:
+            # Postmortem: freeze the last N spans/events before the
+            # process (or harness) tears the worker down.
+            self.recorder.dump(
+                "worker_crash", detail={"worker_id": self.worker_id}
+            )
         if self.agent is not None:
             # A dead node must not keep pulling regions or mutating
             # execution state behind the Manager's back.
@@ -302,9 +334,17 @@ class WorkerRuntime:
         recovered leases) must not push duplicate op instances next to
         the queued/in-flight originals.
         """
+        ctx = current_context()
         with self._lock:
             known = si.uid in self._stages
             self._stages[si.uid] = si
+            if ctx is not None and ctx.sampled:
+                sctx = self._stage_ctx.setdefault(si.uid, ctx)
+                # Tag each op with its stage's context here, under the
+                # lock, so the lane thread can read it without taking
+                # the (contended) worker lock on the batch hot path.
+                for oi in si.op_instances:
+                    oi._trace_ctx = sctx  # type: ignore[attr-defined]
             local = {o.uid for o in si.op_instances}
             if not known:
                 for oi in si.op_instances:
@@ -318,6 +358,16 @@ class WorkerRuntime:
                 for dep in oi.deps
                 if dep not in self._op_done and dep not in local
             ]
+            if (
+                missing
+                and ctx is not None
+                and ctx.sampled
+                and self.tracer is not None
+                and len(self._pull_ctx) < 4096
+            ):
+                now_p, now_w = time.perf_counter(), time.time()
+                for key in missing:
+                    self._pull_ctx.setdefault(key, (ctx, now_p, now_w))
         # Leased but not started: ask the staging agent to pull the
         # cross-stage inputs into the host tier ahead of execution.
         if self.agent is not None and missing:
@@ -434,10 +484,25 @@ class WorkerRuntime:
             return
         uid = key[1]
         with self._lock:
+            pulled = self._pull_ctx.pop(key, None)
             if uid in self._op_done:
-                return
-            self._op_done.add(uid)
-            self._release_dependents_locked(uid)
+                pulled = None  # duplicate landing: already accounted
+            else:
+                self._op_done.add(uid)
+                self._release_dependents_locked(uid)
+        if pulled is not None and self.tracer is not None:
+            ctx, t0_perf, t0_wall = pulled
+            sub = self.tracer.child(ctx)
+            self.tracer.record_span(
+                "region:pull",
+                ctx=sub,
+                parent=ctx.span_id,
+                cat="region",
+                ts=t0_wall,
+                dur=time.perf_counter() - t0_perf,
+                tid="staging",
+                args={"key": uid, "bytes": int(nbytes)},
+            )
 
     def _release_dependents_locked(self, produced_uid: int) -> None:
         for s in self._stages.values():
@@ -503,8 +568,8 @@ class WorkerRuntime:
     def stats(self) -> dict[str, Any]:
         return {
             "profile": self.scheduler.stats.profile(),
-            "reuse_hits": self.scheduler.stats.reuse_hits,
-            "reuse_misses": self.scheduler.stats.reuse_misses,
+            "reuse_hits": int(self.scheduler.stats.reuse_hits),
+            "reuse_misses": int(self.scheduler.stats.reuse_misses),
             "lane_busy": {
                 f"{l.spec.kind}{l.spec.index}": l.busy_seconds for l in self._lanes
             },
@@ -518,16 +583,16 @@ class WorkerRuntime:
             "device_evictions": sum(
                 l.memory.evictions for l in self._lanes if l.memory is not None
             ),
-            "chain_hits": self.chain_hits,
-            "chain_deferred": self.chain_deferred,
-            "chain_writebacks": self.chain_writebacks,
-            "host_chain_hits": self.host_chain_hits,
-            "host_chain_deferred": self.host_chain_deferred,
-            "host_chain_writebacks": self.host_chain_writebacks,
-            "batches": self.scheduler.stats.batches,
-            "batched_ops": self.scheduler.stats.batched_ops,
-            "push_ingested": self.push_ingested,
-            "push_ingested_bytes": self.push_ingested_bytes,
+            "chain_hits": int(self.chain_hits),
+            "chain_deferred": int(self.chain_deferred),
+            "chain_writebacks": int(self.chain_writebacks),
+            "host_chain_hits": int(self.host_chain_hits),
+            "host_chain_deferred": int(self.host_chain_deferred),
+            "host_chain_writebacks": int(self.host_chain_writebacks),
+            "batches": int(self.scheduler.stats.batches),
+            "batched_ops": int(self.scheduler.stats.batched_ops),
+            "push_ingested": int(self.push_ingested),
+            "push_ingested_bytes": int(self.push_ingested_bytes),
             "staging": self.store.stats(),
             "prefetch": self.agent.stats() if self.agent is not None else {},
         }
@@ -620,6 +685,7 @@ class WorkerRuntime:
         """Execute one dispatch decision: a single op or a micro-batch
         of same-op instances (one batched call, amortized launch)."""
         var = self.registry.get(ois[0].op.variant_name)
+        ts_wall = time.time()
         t0 = time.perf_counter()
         ctxs = [
             OpContext(
@@ -657,6 +723,31 @@ class WorkerRuntime:
         elapsed = time.perf_counter() - t0
         lane.busy_seconds += elapsed
         lane.executed += len(ois)
+        if self.tracer is not None:
+            # One span per op instance (batch-mates share ts/dur): each
+            # chains under its own stage's context so a request timeline
+            # shows exactly which lane ran which op, and when.  The ctx
+            # tag was written by submit_stage under the worker lock
+            # before the op could queue, so the lock-free read here is
+            # safe; unsampled ops carry no tag and cost one getattr.
+            tid = None
+            for oi in ois:
+                sctx = getattr(oi, "_trace_ctx", None)
+                if sctx is None:
+                    continue
+                if tid is None:
+                    tid = f"{lane.spec.kind}{lane.spec.index}"
+                sub = self.tracer.child(sctx)
+                self.tracer.record_span(
+                    f"op:{oi.op.name}",
+                    ctx=sub,
+                    parent=sctx.span_id,
+                    cat="op",
+                    ts=ts_wall,
+                    dur=elapsed,
+                    tid=tid,
+                    args={"uid": oi.uid, "batch": len(ois)},
+                )
         if self.observe_runtimes:
             var.observe_runtime(lane.spec.kind, elapsed / len(ois))
             if self.scheduler.policy == "pats":
@@ -754,11 +845,35 @@ class WorkerRuntime:
         # Manager calls into this worker while holding it (lock order is
         # always manager -> worker).
         if fetch_uids:
+            sctx = None
+            if self.tracer is not None:
+                with self._lock:
+                    sctx = self._stage_ctx.get(oi.stage_instance.uid)
+            ts_wall = time.time()
+            t_fetch = time.perf_counter()
             fetched = {uid: self._fetch_region(op_key(uid)) for uid in fetch_uids}
+            if sctx is not None:
+                sub = self.tracer.child(sctx)
+                self.tracer.record_span(
+                    "region:pull",
+                    ctx=sub,
+                    parent=sctx.span_id,
+                    cat="region",
+                    ts=ts_wall,
+                    dur=time.perf_counter() - t_fetch,
+                    tid=f"{lane.spec.kind}{lane.spec.index}",
+                    args={"keys": len(fetch_uids)},
+                )
             dep_objs = [
                 (uid, v if v is not None else fetched.get(uid))
                 for uid, v in dep_objs
             ]
+            with self._lock:
+                # Resolved synchronously: retire any async-pull
+                # attribution so the agent's later landing (if any)
+                # does not double-count the transfer.
+                for uid in fetch_uids:
+                    self._pull_ctx.pop(op_key(uid), None)
         inputs: dict[str, Any] = {}
         with self._lock:
             for uid, value in dep_objs:
@@ -889,6 +1004,7 @@ class WorkerRuntime:
                 o.uid in self._op_done or o.uid in self._cancelled
                 for o in si.op_instances
             )
+            sctx = self._stage_ctx.pop(si.uid, None) if stage_done else None
             self._work_ready.notify_all()
         # Callbacks into the Manager happen with the worker lock
         # released: lock order is always manager -> worker, never the
@@ -933,7 +1049,11 @@ class WorkerRuntime:
                         )
                 for o in si.op_instances:
                     self._maybe_unpin_locked(o.uid)
-            self.on_stage_complete(si, outputs)
+            # Re-install the stage's trace context around the completion
+            # callback: the stage_complete RPC (and any pushes the
+            # Manager derives from it) then carries the request's trace.
+            with use_context(sctx):
+                self.on_stage_complete(si, outputs)
 
     def _maybe_unpin_locked(self, uid: int) -> None:
         """Unpin ``uid``'s output once no locally-known op still needs it."""

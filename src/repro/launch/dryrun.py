@@ -219,7 +219,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "kv_quant": kv_quant,
         "opt8bit": opt8bit,
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh, attention_options(causal_skip=causal_skip, kv_quant=kv_quant):
         step, args, in_specs, donate, model, plan = build_cell(
             arch, shape_name, mesh, opt8bit=opt8bit, fsdp_mode=fsdp
@@ -234,9 +234,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
             )
         with fsdp_gather(gather_map):
             lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = hlo_cost_analysis(compiled)

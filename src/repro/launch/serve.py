@@ -90,7 +90,7 @@ def serve_requests(
             rid=i,
             prompt=rs.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
             max_new=max_new,
-            t_submit=time.time(),
+            t_submit=time.monotonic(),
         )
         for i in range(n_requests)
     ]
@@ -100,7 +100,7 @@ def serve_requests(
     lengths = None
     tokens = None
     done: list[Request] = []
-    t0 = time.time()
+    t0 = time.monotonic()
     steps = {"prefill": 0, "decode": 0}
 
     while waiting or active:
@@ -121,7 +121,7 @@ def serve_requests(
             tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             for r, t in zip(group, np.asarray(tokens)):
                 r.out_tokens.append(int(t))
-                r.t_first = time.time()
+                r.t_first = time.monotonic()
             active = group
             steps["prefill"] += 1
             continue
@@ -135,14 +135,14 @@ def serve_requests(
         finished = [r for r in active if len(r.out_tokens) >= r.max_new]
         if finished:
             for r in finished:
-                r.t_done = time.time()
+                r.t_done = time.monotonic()
             done.extend(finished)
             active = [r for r in active if len(r.out_tokens) < r.max_new]
             # Simplified continuous batching: drain, then admit the
             # next prefill group (real TPU serving would swap slots).
             if not active:
                 caches = None
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
     ttft = [r.t_first - r.t_submit for r in done if r.t_first]
     return {

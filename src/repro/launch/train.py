@@ -77,7 +77,7 @@ def run_training(
     loader = PrefetchLoader(ledger, source, lease_block=4, depth=2)
 
     metrics_hist: list[dict] = []
-    t0 = time.time()
+    t0 = time.monotonic()
     step_idx = start_step
     tokens_done = 0
     for cid, chunk in loader:
@@ -93,7 +93,7 @@ def run_training(
             raise RuntimeError(f"injected failure at step {step_idx}")
         if step_idx % log_every == 0 or step_idx == steps:
             loss = float(metrics["loss"])
-            tps = tokens_done / (time.time() - t0)
+            tps = tokens_done / (time.monotonic() - t0)
             print(
                 f"[train] step {step_idx:5d} loss={loss:.4f} "
                 f"tokens/s={tps:,.0f}",

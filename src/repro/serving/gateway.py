@@ -43,6 +43,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional
 
 from .request import DONE, FAILED, QUEUED, RUNNING, SHED, ServeRequest
+from ..telemetry.tracing import use_context
 
 __all__ = ["GatewayConfig", "GatewayStats", "RequestGateway"]
 
@@ -82,6 +83,23 @@ class GatewayStats:
     latencies: list[float] = field(default_factory=list)
     deadline_misses: int = 0
 
+    def bind(self, registry, prefix: str = "gateway") -> None:
+        """Re-home the scalar counters as int-like cells in a shared
+        :class:`~repro.telemetry.metrics.MetricsRegistry` (the per-
+        tenant dicts and the latency list stay plain — they are not
+        monotone scalars).  Existing values seed the cells."""
+        for name in (
+            "submitted",
+            "admitted",
+            "shed",
+            "completed",
+            "failed",
+            "deadline_misses",
+        ):
+            cell = registry.counter(f"{prefix}.{name}")
+            cell.inc(int(getattr(self, name)))
+            setattr(self, name, cell)
+
 
 class _TenantState:
     __slots__ = ("weight", "queue", "last_finish")
@@ -107,11 +125,19 @@ class RequestGateway:
         config: Optional[GatewayConfig] = None,
         tenants: Optional[Mapping[str, float]] = None,
         clock: Callable[[], float] = time.monotonic,
+        *,
+        registry: Any = None,
+        tracer: Any = None,
+        recorder: Any = None,
     ):
         self.manager = manager
         self.cfg = config or GatewayConfig()
         self.clock = clock
+        self.tracer = tracer          # telemetry.Tracer (optional)
+        self.recorder = recorder      # telemetry.FlightRecorder (optional)
         self.stats = GatewayStats()
+        if registry is not None:
+            self.stats.bind(registry)
         self._lock = threading.RLock()
         self._idle = threading.Event()
         self._idle.set()
@@ -179,6 +205,19 @@ class RequestGateway:
                 )
                 return req
             self.stats.admitted += 1
+            if self.tracer is not None:
+                # Root the request's trace at admission; the sampling
+                # decision made here travels with every downstream hop.
+                req.trace = self.tracer.start_trace()
+                if req.trace.sampled:
+                    self.tracer.record_span(
+                        "gateway:admit",
+                        ctx=self.tracer.child(req.trace),
+                        parent=req.trace.span_id,
+                        cat="request",
+                        tid="gateway",
+                        args={"req_id": req.req_id, "tenant": tenant},
+                    )
             self._idle.clear()
             # SFQ tags: charge by estimated cost over tenant weight.
             start = max(self._vtime, ts.last_finish)
@@ -220,7 +259,14 @@ class RequestGateway:
             req.remaining = len(terminals)
             for si in terminals:
                 self._terminal[si.uid] = req
-            self.manager.submit_instances(sis)
+            if req.trace is not None and req.trace.sampled:
+                # The Manager captures this context per queued stage and
+                # re-installs it around each lease — the whole pipeline
+                # replica traces back to this request.
+                with use_context(req.trace):
+                    self.manager.submit_instances(sis)
+            else:
+                self.manager.submit_instances(sis)
 
     # -- completion --------------------------------------------------------
 
@@ -242,8 +288,35 @@ class RequestGateway:
             lat = req.latency
             if lat is not None:
                 self.stats.latencies.append(lat)
-            if req.deadline is not None and req.t_done > req.deadline:
+            missed = req.deadline is not None and req.t_done > req.deadline
+            if missed:
                 self.stats.deadline_misses += 1
+            if self.tracer is not None and req.trace is not None and lat is not None:
+                # The root span: arrival-to-done, everything else in the
+                # trace (leases, ops, pulls, pushes) nests under it.
+                self.tracer.record_span(
+                    "request",
+                    ctx=req.trace,
+                    cat="request",
+                    ts=time.time() - lat,
+                    dur=lat,
+                    tid="gateway",
+                    args={
+                        "req_id": req.req_id,
+                        "tenant": req.tenant,
+                        "deadline_miss": missed,
+                    },
+                )
+            if missed and self.recorder is not None:
+                self.recorder.dump(
+                    "deadline_miss",
+                    detail={
+                        "req_id": req.req_id,
+                        "tenant": req.tenant,
+                        "latency": lat,
+                        "tardiness": req.tardiness,
+                    },
+                )
             # Online service-time estimate: dispatch-to-done, which is
             # what one admitted request actually costs the cluster
             # (queueing excluded — admission should not double-count
@@ -283,6 +356,22 @@ class RequestGateway:
             self.stats.tenant_failed[req.tenant] = (
                 self.stats.tenant_failed.get(req.tenant, 0) + 1
             )
+            if self.tracer is not None and req.trace is not None:
+                lat = req.latency or 0.0
+                self.tracer.record_span(
+                    "request",
+                    ctx=req.trace,
+                    cat="request",
+                    ts=time.time() - lat,
+                    dur=lat,
+                    tid="gateway",
+                    args={
+                        "req_id": req.req_id,
+                        "tenant": req.tenant,
+                        "failed": True,
+                        "error": error,
+                    },
+                )
             self._dispatch_locked()
             if self._queued == 0 and self._inflight == 0:
                 self._idle.set()

@@ -52,6 +52,9 @@ class ServeRequest:
     stage_uids: tuple[int, ...] = ()
     #: terminal error detail (FAILED requests only).
     error: Optional[str] = None
+    #: root trace context (telemetry.SpanContext) when tracing is on —
+    #: every stage/op/region span of this request chains under it.
+    trace: Any = None
     _done_event: threading.Event = field(
         default_factory=threading.Event, repr=False
     )

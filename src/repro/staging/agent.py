@@ -72,7 +72,10 @@ class StagingAgent:
         watermark: float = 0.9,
         interval: float = 0.002,
         push_grace: float = 0.25,
+        registry=None,
     ) -> None:
+        from ..telemetry.metrics import MetricsRegistry
+
         self.store = store
         self.worker_id = worker_id
         self.fetch = fetch
@@ -103,23 +106,26 @@ class StagingAgent:
         # The pull is deferred until the deadline so push and pull don't
         # move the same bytes twice; overdue keys re-enter the queue.
         self._deferred: dict[RegionKey, float] = {}
-        # Counters read by benchmarks / tests.
-        self.prefetched = 0
-        self.prefetched_bytes = 0
-        self.already_resident = 0
-        self.fetch_misses = 0
-        self.demote_moves = 0
-        self.fetch_calls = 0        # transport round-trips actually paid
-        self.batched_keys = 0       # keys that rode a coalesced pull
-        self.fetch_errors = 0       # pulls that raised (bus timeout/drop)
-        self.direct_keys = 0        # keys served worker-to-worker
-        self.direct_bytes = 0
-        self.direct_misses = 0      # stale holder: dialed, region gone
-        self.relay_keys = 0         # keys that fell back to the Manager
-        self.relay_bytes = 0
-        self.holder_invalidations = 0
-        self.pushes_expected = 0
-        self.pushes_landed = 0      # expected pushes that arrived in time
+        # Counters read by benchmarks / tests — int-like cells in the
+        # shared metrics registry (`stats()` stays the thin int view).
+        self.registry = registry or MetricsRegistry()
+        c = lambda name: self.registry.counter(f"staging.{name}")  # noqa: E731
+        self.prefetched = c("prefetched")
+        self.prefetched_bytes = c("prefetched_bytes")
+        self.already_resident = c("already_resident")
+        self.fetch_misses = c("fetch_misses")
+        self.demote_moves = c("demote_moves")
+        self.fetch_calls = c("fetch_calls")      # round-trips actually paid
+        self.batched_keys = c("batched_keys")    # keys on a coalesced pull
+        self.fetch_errors = c("fetch_errors")    # pulls that raised
+        self.direct_keys = c("direct_keys")      # keys served worker-to-worker
+        self.direct_bytes = c("direct_bytes")
+        self.direct_misses = c("direct_misses")  # stale holder: region gone
+        self.relay_keys = c("relay_keys")        # fell back to the Manager
+        self.relay_bytes = c("relay_bytes")
+        self.holder_invalidations = c("holder_invalidations")
+        self.pushes_expected = c("pushes_expected")
+        self.pushes_landed = c("pushes_landed")  # pushes arrived in time
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -390,21 +396,23 @@ class StagingAgent:
         return True
 
     def stats(self) -> dict[str, int]:
+        # Thin view over the registry cells, coerced to plain ints:
+        # this dict rides the `get_stats` RPC.
         return {
-            "prefetched": self.prefetched,
-            "prefetched_bytes": self.prefetched_bytes,
-            "already_resident": self.already_resident,
-            "fetch_misses": self.fetch_misses,
-            "demote_moves": self.demote_moves,
-            "fetch_calls": self.fetch_calls,
-            "batched_keys": self.batched_keys,
-            "fetch_errors": self.fetch_errors,
-            "direct_keys": self.direct_keys,
-            "direct_bytes": self.direct_bytes,
-            "direct_misses": self.direct_misses,
-            "relay_keys": self.relay_keys,
-            "relay_bytes": self.relay_bytes,
-            "holder_invalidations": self.holder_invalidations,
-            "pushes_expected": self.pushes_expected,
-            "pushes_landed": self.pushes_landed,
+            "prefetched": int(self.prefetched),
+            "prefetched_bytes": int(self.prefetched_bytes),
+            "already_resident": int(self.already_resident),
+            "fetch_misses": int(self.fetch_misses),
+            "demote_moves": int(self.demote_moves),
+            "fetch_calls": int(self.fetch_calls),
+            "batched_keys": int(self.batched_keys),
+            "fetch_errors": int(self.fetch_errors),
+            "direct_keys": int(self.direct_keys),
+            "direct_bytes": int(self.direct_bytes),
+            "direct_misses": int(self.direct_misses),
+            "relay_keys": int(self.relay_keys),
+            "relay_bytes": int(self.relay_bytes),
+            "holder_invalidations": int(self.holder_invalidations),
+            "pushes_expected": int(self.pushes_expected),
+            "pushes_landed": int(self.pushes_landed),
         }

@@ -30,13 +30,13 @@ class StagingConfig:
     watermark: float = 0.9                    # host-tier demotion trigger
     policy: PlacementPolicy = field(default_factory=PlacementPolicy)
 
-    def build_store(self) -> RegionStore:
+    def build_store(self, registry=None) -> RegionStore:
         tiers = [HostTier(self.host_budget_bytes)]
         if self.disk_dir is not None:
             tiers.append(DiskTier(self.disk_dir, self.disk_budget_bytes))
         if self.global_tier is not None:
             tiers.append(self.global_tier)
-        return RegionStore(tiers)
+        return RegionStore(tiers, registry=registry)
 
     @classmethod
     def from_calibration(

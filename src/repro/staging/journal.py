@@ -252,8 +252,12 @@ class DirectoryService:
         snapshot_bytes: Optional[int] = None,
         incremental: bool = False,
         compact_deltas: int = 8,
+        registry=None,
     ):
+        from ..telemetry.metrics import MetricsRegistry
+
         self.directory = directory or PlacementDirectory()
+        self.registry = registry or MetricsRegistry()
         self.snapshot_every = max(int(snapshot_every), 1)
         # Byte-keyed compaction: when set, a checkpoint triggers once the
         # journal grows past this many bytes since the last snapshot —
@@ -273,9 +277,14 @@ class DirectoryService:
         self.completed: set[int] = set()
         self.leases: dict[int, int] = {}     # stage uid -> worker id
         self.pending: list[int] = []         # noted, never completed
-        self.replayed = 0
-        self.full_checkpoints = 0
-        self.delta_checkpoints = 0
+        # Registry-served counters (int-like cells; see repro.telemetry).
+        self.replayed = self.registry.counter("directory.replayed")
+        self.full_checkpoints = self.registry.counter(
+            "directory.full_checkpoints"
+        )
+        self.delta_checkpoints = self.registry.counter(
+            "directory.delta_checkpoints"
+        )
         # Dirty state since the last checkpoint (incremental mode).
         self._dirty_keys: set[RegionKey] = set()
         self._dirty_leases: set[int] = set()
@@ -523,6 +532,15 @@ class DirectoryService:
             if uid in self.pending:
                 self.pending.remove(uid)
             self._applied()
+
+    def stats(self) -> dict[str, int]:
+        """Thin int view over the registry cells (wire-safe)."""
+        return {
+            "replayed": int(self.replayed),
+            "full_checkpoints": int(self.full_checkpoints),
+            "delta_checkpoints": int(self.delta_checkpoints),
+            "journal_appends": int(self.journal.appends),
+        }
 
     def outstanding(self) -> list[int]:
         """Stage uids that were pending or leased but never completed —

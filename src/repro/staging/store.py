@@ -49,7 +49,10 @@ def content_key(value: Any) -> RegionKey:
 class RegionStore:
     """Ordered stack of tiers with promote/demote movement."""
 
-    def __init__(self, tiers: Sequence[Tier], *, demote: bool = True):
+    def __init__(self, tiers: Sequence[Tier], *, demote: bool = True,
+                 registry=None):
+        from ..telemetry.metrics import MetricsRegistry
+
         if not tiers:
             raise ValueError("RegionStore needs at least one tier")
         names = [t.name for t in tiers]
@@ -58,15 +61,17 @@ class RegionStore:
         self.tiers = list(tiers)
         self.demote = demote
         self._lock = threading.RLock()
-        # Movement counters (cluster benchmarks read these).
-        self.promotions = 0
-        self.demotions = 0
-        self.promoted_bytes = 0
-        self.demoted_bytes = 0
+        # Movement counters (cluster benchmarks read these) — int-like
+        # cells in the shared metrics registry.
+        self.registry = registry or MetricsRegistry()
+        self.promotions = self.registry.counter("store.promotions")
+        self.demotions = self.registry.counter("store.demotions")
+        self.promoted_bytes = self.registry.counter("store.promoted_bytes")
+        self.demoted_bytes = self.registry.counter("store.demoted_bytes")
         # Regions destroyed because the bottom tier evicted them with
         # no deeper backstop — nonzero means tier budgets are too tight
         # for the unpinned working set (diagnostic, see stats()).
-        self.dropped = 0
+        self.dropped = self.registry.counter("store.dropped")
         # Fired when a region leaves this store entirely (fell off the
         # bottom tier).  The Manager wires it to PlacementDirectory.
         # evict so the directory's replica map — which feeds lease
@@ -232,10 +237,10 @@ class RegionStore:
             d["replicated_evictions"] = t.replicated_evictions
             out[t.name] = d
         out["store"] = {
-            "promotions": self.promotions,
-            "demotions": self.demotions,
-            "promoted_bytes": self.promoted_bytes,
-            "demoted_bytes": self.demoted_bytes,
-            "dropped": self.dropped,
+            "promotions": int(self.promotions),
+            "demotions": int(self.demotions),
+            "promoted_bytes": int(self.promoted_bytes),
+            "demoted_bytes": int(self.demoted_bytes),
+            "dropped": int(self.dropped),
         }
         return out

@@ -1,0 +1,55 @@
+"""Cluster observability: metrics, distributed tracing, flight recorder.
+
+Three cooperating pieces, each usable alone:
+
+* :mod:`repro.telemetry.metrics` — a :class:`MetricsRegistry` of typed,
+  thread-safe counters/gauges/histograms.  Every subsystem that used to
+  keep an ad-hoc stats dict (Manager, ``WorkerRuntime``,
+  ``ReadyScheduler``, ``StagingAgent``/``RegionStore``, ``SocketBus``/
+  ``InprocBus``, ``RequestGateway``, ``DirectoryService``) now registers
+  its counters here; the legacy ``stats()`` methods remain as thin
+  views over the same registry objects.
+* :mod:`repro.telemetry.tracing` — ``trace_id``/``span_id`` context
+  carried in a thread-local, injected into ``MessageBus`` call/notify
+  envelopes by :class:`TracingBus` (a decorator over any bus, the same
+  identity-stable pattern as ``repro.faults.FaultyBus``), so one
+  request's timeline stitches across processes: gateway admission →
+  lease dispatch → per-lane op execution → region pulls/pushes →
+  completion.  Sampled per trace (``sample_rate``); spans export to
+  Chrome trace-event JSON (:mod:`repro.telemetry.export`) which opens
+  directly in Perfetto.  The simulator mirrors the same span schema
+  (``SimConfig.telemetry``) so simulated and real timelines compare.
+* :mod:`repro.telemetry.recorder` — a bounded ring buffer of recent
+  spans/events per node, dumped to a postmortem artifact on worker
+  crash, chunk quarantine, or deadline miss.
+
+See ``docs/observability.md`` for the metric catalog and span taxonomy.
+"""
+
+from .export import export_chrome_trace, to_chrome_events
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .recorder import FlightRecorder
+from .tracing import (
+    SpanContext,
+    Tracer,
+    TracingBus,
+    current_context,
+    set_context,
+    use_context,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "FlightRecorder",
+    "SpanContext",
+    "Tracer",
+    "TracingBus",
+    "current_context",
+    "set_context",
+    "use_context",
+    "export_chrome_trace",
+    "to_chrome_events",
+]

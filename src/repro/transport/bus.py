@@ -89,11 +89,17 @@ class Peer(ABC):
 class MessageBus(ABC):
     """Factory/owner of peers for one transport backend."""
 
-    def __init__(self) -> None:
+    def __init__(self, registry: Optional[Any] = None) -> None:
+        from ..telemetry.metrics import MetricsRegistry
+
         self._lock = threading.Lock()
-        # Aggregate traffic counters (benchmarks and tests read these).
-        self.messages_sent = 0
-        self.frames_sent = 0  # < messages_sent when coalescing batches
+        # Aggregate traffic counters served from the shared metrics
+        # registry (int-like cells: existing `bus.messages_sent += 1`
+        # sites and comparisons work unchanged; benchmarks and tests
+        # read these).
+        self.registry = registry or MetricsRegistry()
+        self.messages_sent = self.registry.counter("bus.messages_sent")
+        self.frames_sent = self.registry.counter("bus.frames_sent")
 
     @abstractmethod
     def serve(
@@ -118,12 +124,13 @@ class MessageBus(ABC):
 
     def coalesce_ratio(self) -> float:
         """Messages per frame actually sent (1.0 = no batching)."""
-        return self.messages_sent / max(self.frames_sent, 1)
+        return int(self.messages_sent) / max(int(self.frames_sent), 1)
 
     def stats(self) -> dict[str, Any]:
         """Aggregate transport counters; backends extend with their own
-        (e.g. per-peer send failures on :class:`SocketBus`)."""
+        (e.g. per-peer send failures on :class:`SocketBus`).  Values
+        are coerced to plain ints: this dict crosses the wire."""
         return {
-            "messages_sent": self.messages_sent,
-            "frames_sent": self.frames_sent,
+            "messages_sent": int(self.messages_sent),
+            "frames_sent": int(self.frames_sent),
         }

@@ -227,6 +227,13 @@ class WorkerProxy:
         except BusError:
             return {}
 
+    def trace(self) -> dict:
+        """Remote telemetry: buffered spans + flight-recorder dumps."""
+        try:
+            return dict(self.peer.call("get_trace", timeout=self.rpc_timeout))
+        except BusError:
+            return {}
+
     def shutdown(self, timeout: float = 5.0) -> None:
         try:
             self.peer.call("stop", timeout=timeout)
@@ -259,8 +266,15 @@ class ManagerEndpoint:
         # Region payloads served through the coordinator (the relay
         # fallback).  ~0 on the happy path: the data plane dials
         # siblings directly and only metadata crosses this endpoint.
-        self.relay_regions = 0
-        self.relay_bytes = 0
+        # Registered into the Manager's metrics registry when it has
+        # one, so cluster snapshots include the relay traffic.
+        metrics = getattr(manager, "metrics", None)
+        if metrics is not None:
+            self.relay_regions = metrics.counter("endpoint.relay_regions")
+            self.relay_bytes = metrics.counter("endpoint.relay_bytes")
+        else:
+            self.relay_regions = 0
+            self.relay_bytes = 0
         # key -> worker ids that resolved it: only THEIR holder caches
         # can name it, so region_drop invalidations go to them alone
         # (not an O(workers) broadcast per drop).  Entries die with the
@@ -280,6 +294,8 @@ class ManagerEndpoint:
                 "region_drop": self._h_region_drop,
                 "submit_request": self._h_submit_request,
                 "request_status": self._h_request_status,
+                "get_stats": self._h_get_stats,
+                "get_trace": self._h_get_trace,
             },
             on_disconnect=self._on_disconnect,
         )
@@ -416,6 +432,57 @@ class ManagerEndpoint:
             "error": req.error,
         }
 
+    # -- handlers (observability) --------------------------------------------
+
+    def _h_get_stats(self, peer: Peer, payload: Any):
+        """Cluster-wide stats aggregation, one round-trip: the Manager's
+        registry view, this endpoint's relay counters, the bus, and —
+        unless ``{"workers": False}`` — every live worker's own
+        ``get_stats``.  Per-worker failures degrade to ``{}`` so one
+        hung worker cannot take the whole snapshot down."""
+        out: dict[str, Any] = {}
+        if hasattr(self.manager, "stats"):
+            out["manager"] = self.manager.stats()
+        metrics = getattr(self.manager, "metrics", None)
+        if metrics is not None:
+            out["metrics"] = metrics.snapshot()
+        out["endpoint"] = {
+            "relay_regions": int(self.relay_regions),
+            "relay_bytes": int(self.relay_bytes),
+        }
+        out["bus"] = self.bus.stats()
+        if not (isinstance(payload, dict) and payload.get("workers") is False):
+            with self._lock:
+                proxies = list(self.proxies.items())
+            out["workers"] = {
+                wid: proxy.stats()
+                for wid, proxy in proxies
+                if proxy.alive
+            }
+        return out
+
+    def _h_get_trace(self, peer: Peer, payload: Any):
+        """Cluster-wide trace collection: manager-side spans and dumps
+        plus every live worker's buffered spans and flight-recorder
+        dumps, stitched by trace id on the caller's side."""
+        spans: list = []
+        dumps: list = []
+        tracer = getattr(self.manager, "tracer", None)
+        if tracer is not None:
+            spans.extend(tracer.spans())
+        recorder = getattr(self.manager, "recorder", None)
+        if recorder is not None:
+            dumps.extend(recorder.dumps)
+        with self._lock:
+            proxies = list(self.proxies.items())
+        for wid, proxy in proxies:
+            if not proxy.alive:
+                continue
+            t = proxy.trace()
+            spans.extend(t.get("spans", ()))
+            dumps.extend(t.get("dumps", ()))
+        return {"spans": spans, "dumps": dumps}
+
     def _h_fetch_region(self, peer: Peer, payload: Any):
         value = self.manager._fetch_region(_as_key(payload))  # noqa: SLF001
         if value is not None:
@@ -524,16 +591,23 @@ class WorkerClient:
         # Sibling peer cache: data-plane address -> dialed Peer.
         self._siblings: dict[Any, Peer] = {}
         self._sibling_lock = threading.Lock()
-        # Data-plane traffic counters (benchmarks/tests).
-        self.pushes = 0
-        self.pushed_bytes = 0
-        self.push_ingests = 0
-        self.served_regions = 0
-        self.served_bytes = 0
+        # Data-plane traffic counters (benchmarks/tests).  Registered
+        # into the runtime's MetricsRegistry when it has one so a single
+        # ``get_stats`` snapshot carries them; plain ints otherwise.
+        metrics = getattr(runtime, "metrics", None)
+        if metrics is not None:
+            c = lambda name: metrics.counter(f"transport.{name}")
+        else:
+            c = lambda name: 0
+        self.pushes = c("pushes")
+        self.pushed_bytes = c("pushed_bytes")
+        self.push_ingests = c("push_ingests")
+        self.served_regions = c("served_regions")
+        self.served_bytes = c("served_bytes")
         # Payload integrity: region bytes rejected by the CRC envelope
         # (re-fetched from an alternate holder via the stale-holder path).
-        self.crc_rejects = 0
-        self.push_crc_rejects = 0
+        self.crc_rejects = c("crc_rejects")
+        self.push_crc_rejects = c("push_crc_rejects")
         # Control-plane hardening: completion/failure reports are calls
         # retried under this policy (the Manager dedups on stage uid), so
         # one lost frame cannot wedge a lease forever.  Rebuilt after
@@ -570,6 +644,7 @@ class WorkerClient:
                 "push_request": self._h_push_request,
                 "region_invalidate": self._h_invalidate,
                 "get_stats": self._h_stats,
+                "get_trace": self._h_trace,
                 "stop": self._h_stop,
             },
         )
@@ -821,15 +896,29 @@ class WorkerClient:
     def _h_stats(self, peer: Peer, payload: Any) -> dict:
         stats = dict(self.runtime.stats())
         stats["transport"] = {
-            "pushes": self.pushes,
-            "pushed_bytes": self.pushed_bytes,
-            "push_ingests": self.push_ingests,
-            "served_regions": self.served_regions,
-            "served_bytes": self.served_bytes,
-            "crc_rejects": self.crc_rejects,
-            "push_crc_rejects": self.push_crc_rejects,
+            "pushes": int(self.pushes),
+            "pushed_bytes": int(self.pushed_bytes),
+            "push_ingests": int(self.push_ingests),
+            "served_regions": int(self.served_regions),
+            "served_bytes": int(self.served_bytes),
+            "crc_rejects": int(self.crc_rejects),
+            "push_crc_rejects": int(self.push_crc_rejects),
         }
         return stats
+
+    def _h_trace(self, peer: Peer, payload: Any) -> dict:
+        """This worker's buffered spans + flight-recorder dumps (the
+        Manager's ``get_trace`` fans out here to stitch a cluster-wide
+        timeline)."""
+        out: dict[str, Any] = {"spans": [], "dumps": [], "stats": {}}
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is not None:
+            out["spans"] = tracer.spans()
+            out["stats"] = tracer.stats()
+        recorder = getattr(self.runtime, "recorder", None)
+        if recorder is not None:
+            out["dumps"] = list(recorder.dumps)
+        return out
 
     def _h_stop(self, peer: Peer, payload: Any) -> bool:
         self._stop.set()
@@ -876,6 +965,13 @@ class WorkerSpec:
     host_budget_bytes: Optional[int] = None
     data_plane: bool = True            # serve worker-to-worker transfers
     rack: Optional[int] = None         # topology identity (rack_affinity)
+    #: >0 enables distributed tracing in the child: a Tracer seeded from
+    #: this rate plus a TracingBus wrapper so sampled span contexts ride
+    #: every control-plane envelope (fraction of traces kept, 0..1).
+    trace_sample_rate: float = 0.0
+    #: directory for flight-recorder crash/quarantine dumps (None = in
+    #: memory only, retrievable over the bus via ``get_trace``).
+    dump_dir: Optional[str] = None
     extra: dict[str, Any] = field(default_factory=dict)
 
 
@@ -895,6 +991,23 @@ def worker_main(address: str, spec: WorkerSpec) -> None:
         if spec.staging
         else None
     )
+    from ..telemetry.metrics import MetricsRegistry
+    from ..telemetry.recorder import FlightRecorder
+    from ..telemetry.tracing import Tracer, TracingBus
+
+    metrics = MetricsRegistry(f"worker{spec.worker_id}")
+    recorder = FlightRecorder(
+        f"worker{spec.worker_id}", dump_dir=spec.dump_dir
+    )
+    tracer = (
+        Tracer(
+            f"worker{spec.worker_id}",
+            sample_rate=spec.trace_sample_rate,
+            recorder=recorder,
+        )
+        if spec.trace_sample_rate > 0.0
+        else None
+    )
     runtime = WorkerRuntime(
         spec.worker_id,
         lanes=tuple(LaneSpec(kind, idx) for kind, idx in spec.lanes),
@@ -904,12 +1017,17 @@ def worker_main(address: str, spec: WorkerSpec) -> None:
         batch_budget=spec.batch_budget,
         staging=staging,
         variant_registry=registry,
+        registry=metrics,
+        tracer=tracer,
+        recorder=recorder,
         **spec.extra,
     )
     runtime.start()
     from .socketbus import SocketBus
 
-    bus = SocketBus()
+    bus: MessageBus = SocketBus(registry=metrics)
+    if tracer is not None:
+        bus = TracingBus(bus, tracer)
     client = WorkerClient(
         runtime, bus, address, data_plane=spec.data_plane, rack=spec.rack
     )

@@ -85,8 +85,8 @@ class InprocBus(MessageBus):
     _registry: dict[str, tuple[dict, Optional[Callable], Optional[Callable]]] = {}
     _registry_lock = threading.Lock()
 
-    def __init__(self) -> None:
-        super().__init__()
+    def __init__(self, registry=None) -> None:
+        super().__init__(registry)
         self._peers: list[_InprocPeer] = []
         # One bus may serve several endpoints (e.g. a WorkerClient's
         # control connection plus its worker-to-worker data plane).

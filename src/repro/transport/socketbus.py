@@ -358,8 +358,9 @@ class SocketBus(MessageBus):
         codec: Optional[WireCodec] = None,
         *,
         max_frame_bytes: int = 1 << 20,
+        registry=None,
     ) -> None:
-        super().__init__()
+        super().__init__(registry)
         self.host = host
         self.codec = codec or default_codec()
         # Messages whose encoded size exceeds this ride the chunked bulk
