@@ -1,0 +1,362 @@
+"""PR9 bench: gray-failure resilience — straggler containment + feasibility shed.
+
+Two planes over the real threaded runtime plus their deterministic
+simulator mirrors, emitted as CSV rows and machine-readable
+``BENCH_PR9.json``:
+
+* **straggler** — fan-in pipeline on four workers; one turns 8x slow
+  mid-run (``FaultPlan.op_hook(slow_between=…)``) and never heals.
+  Acceptance: with health-scored dispatch + percentile hedging ON the
+  run sustains >= 0.75x fault-free tiles/sec while the unmitigated run
+  collapses below 0.5x — and every tile completes exactly once either
+  way (hedge twins cancel, they don't double-count).
+* **serving** — the threaded gateway at ~2x saturation with a tight
+  deadline.  Feasibility-aware shedding (EDF schedulability test on
+  the measured service tail) against the queue-depth baseline.
+  Acceptance: admitted deadline-miss rate <= 0.5x the baseline at
+  equal-or-better goodput (requests completed on time).
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only pr9``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+Row = tuple[str, float, str]
+
+# Straggler plane: per-op service time and run size.  Large enough
+# that dispatch overhead is small next to compute, small enough that
+# the three-run sweep (fault-free / off / on) stays in bench budget.
+_OP_S = 0.08
+_N_CHUNKS = 60
+_N_WORKERS = 4
+_WINDOW = 8
+_SLOW_FROM_S = 0.5
+_SLOW_FACTOR = 8.0
+
+# Serving plane: two workers, ~2x offered load, tight deadline.
+_SERVE_OP_S = 0.05
+_SERVE_RATE = 80.0          # offered requests/second (~2x capacity)
+_SERVE_N = 180
+_SERVE_DEADLINE_MS = 400.0
+
+
+def _build_cluster(plan, cw, reg, *, n_workers, hook=None, **cfg_kwargs):
+    import repro.transport as T
+    from repro.core import LaneSpec, Manager, ManagerConfig, WorkerRuntime
+    from repro.faults import FaultyBus
+    from repro.staging import StagingConfig
+
+    cfg = dict(
+        window=_WINDOW,
+        locality_aware=True,
+        backup_tasks=False,
+        # Gray failure, not crash: the straggler never misses a
+        # heartbeat, so the reaper must stay out of the picture.
+        heartbeat_timeout=120.0,
+        poll_interval=0.05,
+        rpc_timeout=2.0,
+    )
+    cfg.update(cfg_kwargs)
+    mgr = Manager(cw, ManagerConfig(**cfg))
+    endpoint = T.ManagerEndpoint(mgr, FaultyBus(T.InprocBus(), plan))
+    workers, clients = [], []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(
+            wid,
+            lanes=(LaneSpec("cpu", 0),),
+            variant_registry=reg,
+            staging=StagingConfig(),
+        )
+        if hook is not None:
+            rt.on_op_start = hook
+        rt.start()
+        workers.append(rt)
+        clients.append(
+            T.WorkerClient(rt, FaultyBus(T.InprocBus(), plan), endpoint.address)
+        )
+    return mgr, endpoint, workers, clients
+
+
+def _teardown(endpoint, workers) -> None:
+    for rt in workers:
+        rt.stop()
+    endpoint.bus.close()
+
+
+# --------------------------------------------------------------------------
+# straggler plane: one of four workers 8x slow mid-run
+# --------------------------------------------------------------------------
+
+
+def _bench_straggler(mode: str) -> dict[str, float]:
+    """``mode``: 'clean' (no straggler), 'off' (straggler, no
+    mitigation), 'on' (straggler + health scoring + hedging)."""
+    from repro.faults import FaultPlan
+    from repro.transport.demo import expected_combine, fanin_concrete, fanin_registry
+
+    plan = FaultPlan(seed=42)
+    slow = None if mode == "clean" else (_SLOW_FROM_S, 10**9, _SLOW_FACTOR)
+    hook = plan.op_hook(
+        slow_factor=_OP_S, slow_between=slow, slow_workers=(0,)
+    )
+    extra: dict = {}
+    if mode == "on":
+        extra = dict(
+            health_scoring=True,
+            health_alpha=0.6,
+            probation_min_samples=2,
+            hedge_slack=1.2,
+            hedge_min_samples=5,
+        )
+    cw = fanin_concrete(_N_CHUNKS)
+    mgr, endpoint, workers, clients = _build_cluster(
+        plan, cw, fanin_registry(), n_workers=_N_WORKERS, hook=hook, **extra
+    )
+    try:
+        assert endpoint.wait_workers(_N_WORKERS, timeout=30.0)
+        plan.start()
+        t0 = time.monotonic()
+        ok = mgr.run(timeout=600.0)
+        wall = time.monotonic() - t0
+        # Exactly once: every primary combine output present and right.
+        clones = mgr._clone_map()  # noqa: SLF001
+        outs = sorted(
+            mgr.stage_outputs(si.uid).get("combine")
+            for si in cw.stage_instances.values()
+            if si.stage.name == "combine" and si.uid not in clones
+        )
+        exactly_once = ok and outs == sorted(
+            expected_combine(i) for i in range(_N_CHUNKS)
+        )
+        return {
+            "wall_s": wall,
+            "tiles_per_s": _N_CHUNKS / wall,
+            "completed_ok": float(ok),
+            "exactly_once": float(exactly_once),
+            "hedged_leases": float(int(mgr.hedged_leases)),
+            "probations": float(int(mgr.probations)),
+            "probation_exits": float(int(mgr.probation_exits)),
+            "duplicated_leases": float(mgr.duplicated_leases),
+            "straggler_alive": float(not mgr._workers[0].dead),  # noqa: SLF001
+        }
+    finally:
+        _teardown(endpoint, workers)
+
+
+# --------------------------------------------------------------------------
+# serving plane: 2x saturation, feasibility shed vs queue-depth cap
+# --------------------------------------------------------------------------
+
+
+def _bench_serving(feasibility: bool) -> dict[str, float]:
+    import threading
+
+    from repro.core import (
+        AbstractWorkflow,
+        ConcreteWorkflow,
+        DataChunk,
+        LaneSpec,
+        Manager,
+        ManagerConfig,
+        Operation,
+        Stage,
+        VariantRegistry,
+        WorkerRuntime,
+    )
+    from repro.serving import GatewayConfig, RequestGateway
+
+    reg = VariantRegistry()
+
+    def work(ctx):
+        time.sleep(_SERVE_OP_S)
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    wf = AbstractWorkflow.chain("serve", [Stage.single(Operation("work"))])
+    cw = ConcreteWorkflow(wf)
+    mgr = Manager(cw, ManagerConfig(window=4, backup_tasks=False))
+    workers = []
+    for wid in range(2):
+        rt = WorkerRuntime(wid, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+        rt.start()
+        mgr.register_worker(rt)
+        workers.append(rt)
+    if feasibility:
+        gcfg = GatewayConfig(
+            max_queue=10_000, max_inflight=2,
+            shed_feasibility=True, initial_cost_s=_SERVE_OP_S,
+        )
+    else:
+        # Queue-depth baseline: a depth-8 backlog is already ~a full
+        # deadline of queued work, admitted anyway.
+        gcfg = GatewayConfig(
+            max_queue=8, max_inflight=2, initial_cost_s=_SERVE_OP_S,
+        )
+    gw = RequestGateway(mgr, gcfg, tenants={"t": 1.0})
+    reqs = []
+    try:
+        period = 1.0 / _SERVE_RATE
+        nxt = time.monotonic()
+        for i in range(_SERVE_N):
+            reqs.append(
+                gw.submit("t", DataChunk(i), deadline_ms=_SERVE_DEADLINE_MS)
+            )
+            nxt += period
+            delay = nxt - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+        closed = gw.close(timeout=120.0)
+        done = [r for r in reqs if r.accepted and r.t_done is not None]
+        misses = sum(
+            1 for r in done if r.deadline is not None and r.t_done > r.deadline
+        )
+        completed = len(done)
+        return {
+            "submitted": float(len(reqs)),
+            "admitted": float(sum(1 for r in reqs if r.accepted)),
+            "completed": float(completed),
+            "deadline_misses": float(misses),
+            "miss_rate": misses / max(completed, 1),
+            "goodput": float(completed - misses),
+            "shed": float(gw.stats.shed),
+            "shed_infeasible": float(gw.stats.shed_infeasible),
+            "closed_ok": float(closed),
+        }
+    finally:
+        for rt in workers:
+            rt.stop()
+
+
+# --------------------------------------------------------------------------
+# simulator mirror: same scenarios on the virtual clock, bit-reproducible
+# --------------------------------------------------------------------------
+
+
+def _sim_mirror() -> dict[str, dict[str, float]]:
+    from repro.core.simulator import SimConfig, run_simulation
+
+    base = dict(n_nodes=4, n_gpus=0, n_cpu_cores=1, window=12, seed=3)
+    slow = {0: (2.0, 10**9, 8.0)}
+    mitig = dict(health_scoring=True, hedge_slack=1.5, hedge_min_samples=6)
+    ff = run_simulation(48, SimConfig(**base))
+    off = run_simulation(48, SimConfig(**base, slow_between=slow))
+    on = run_simulation(48, SimConfig(**base, slow_between=slow, **mitig))
+    on2 = run_simulation(48, SimConfig(**base, slow_between=slow, **mitig))
+
+    serve = dict(n_nodes=2, n_gpus=0, n_cpu_cores=2, window=4, seed=7,
+                 tenants={"a": 1.0, "b": 1.0}, edf=True, gateway_inflight=2,
+                 arrival_rate=0.2, serve_duration_s=120.0, deadline_ms=25000.0)
+    cap = run_simulation(0, SimConfig(**serve, admission_queue_cap=4))
+    feas = run_simulation(0, SimConfig(**serve, shed_feasibility=True))
+
+    def frac(r):
+        return r.tiles_per_second / max(ff.tiles_per_second, 1e-9)
+
+    def miss(r):
+        return r.deadline_misses / max(r.completed_requests, 1)
+
+    return {
+        "straggler": {
+            "clean_tiles_per_s": ff.tiles_per_second,
+            "off_frac_of_clean": frac(off),
+            "on_frac_of_clean": frac(on),
+            "on_hedged": float(on.hedged_leases),
+            "on_probations": float(on.probations),
+            "on_tiles": float(on.tiles),
+            "deterministic": float(
+                (on.tiles_per_second, on.hedged_leases, on.probations)
+                == (on2.tiles_per_second, on2.hedged_leases, on2.probations)
+            ),
+        },
+        "serving": {
+            "cap_miss_rate": miss(cap),
+            "feas_miss_rate": miss(feas),
+            "cap_goodput": float(cap.completed_requests - cap.deadline_misses),
+            "feas_goodput": float(feas.completed_requests - feas.deadline_misses),
+            "feas_shed_infeasible": float(feas.shed_infeasible),
+        },
+    }
+
+
+def bench_pr9(json_path: str | None = None) -> list[Row]:
+    clean = _bench_straggler("clean")
+    off = _bench_straggler("off")
+    on = _bench_straggler("on")
+    cap = _bench_serving(feasibility=False)
+    feas = _bench_serving(feasibility=True)
+    sim = _sim_mirror()
+
+    off_frac = off["tiles_per_s"] / max(clean["tiles_per_s"], 1e-9)
+    on_frac = on["tiles_per_s"] / max(clean["tiles_per_s"], 1e-9)
+    miss_ratio = feas["miss_rate"] / max(cap["miss_rate"], 1e-9)
+    report = {
+        "straggler": {"clean": clean, "off": off, "on": on},
+        "serving": {"queue_cap": cap, "feasibility": feas},
+        "sim": sim,
+        "acceptance": {
+            # (a) unmitigated straggler collapses; mitigation sustains.
+            "off_frac_of_clean": off_frac,
+            "off_below_0.5x": off_frac < 0.5,
+            "on_frac_of_clean": on_frac,
+            "on_at_least_0.75x": on_frac >= 0.75,
+            "exactly_once": (
+                clean["exactly_once"] == 1.0
+                and off["exactly_once"] == 1.0
+                and on["exactly_once"] == 1.0
+            ),
+            # (b) feasibility shed halves the admitted miss rate at
+            # equal-or-better goodput.
+            "miss_rate_ratio": miss_ratio,
+            "miss_rate_halved": miss_ratio <= 0.5,
+            "goodput_no_worse": feas["goodput"] >= cap["goodput"],
+            # (c) the sim mirror reproduces both, deterministically.
+            "sim_off_below_0.5x": sim["straggler"]["off_frac_of_clean"] < 0.5,
+            "sim_on_at_least_0.75x": (
+                sim["straggler"]["on_frac_of_clean"] >= 0.75
+            ),
+            "sim_miss_rate_halved": (
+                sim["serving"]["feas_miss_rate"]
+                <= 0.5 * sim["serving"]["cap_miss_rate"]
+            ),
+            "sim_deterministic": sim["straggler"]["deterministic"] == 1.0,
+        },
+    }
+    out = Path(json_path) if json_path else (
+        Path(__file__).resolve().parents[1] / "BENCH_PR9.json"
+    )
+    out.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows: list[Row] = [
+        ("pr9/straggler/clean_tiles_per_s", clean["tiles_per_s"],
+         f"{_N_CHUNKS} tiles, {_N_WORKERS} workers, no straggler"),
+        ("pr9/straggler/off_frac", off_frac,
+         f"one worker {_SLOW_FACTOR:g}x slow from t={_SLOW_FROM_S:g}s, "
+         "no mitigation (acceptance < 0.5)"),
+        ("pr9/straggler/on_frac", on_frac,
+         "health scoring + percentile hedging (acceptance >= 0.75)"),
+        ("pr9/straggler/on_hedged_leases", on["hedged_leases"],
+         "p99-triggered hedge twins issued"),
+        ("pr9/straggler/on_probations", on["probations"],
+         "gray workers benched to a probe lease"),
+        ("pr9/serving/cap_miss_rate", cap["miss_rate"],
+         f"queue-depth baseline at ~2x saturation, "
+         f"{_SERVE_DEADLINE_MS:g}ms deadline"),
+        ("pr9/serving/feas_miss_rate", feas["miss_rate"],
+         f"feasibility shed ({miss_ratio:.2f}x baseline; "
+         "acceptance <= 0.5x at no-worse goodput)"),
+        ("pr9/serving/feas_goodput", feas["goodput"],
+         f"on-time completions (baseline {cap['goodput']:g})"),
+        ("pr9/sim/off_frac", sim["straggler"]["off_frac_of_clean"],
+         "sim mirror: unmitigated straggler (acceptance < 0.5)"),
+        ("pr9/sim/on_frac", sim["straggler"]["on_frac_of_clean"],
+         "sim mirror: mitigated (acceptance >= 0.75, deterministic)"),
+        ("pr9/sim/feas_miss_ratio",
+         sim["serving"]["feas_miss_rate"]
+         / max(sim["serving"]["cap_miss_rate"], 1e-9),
+         "sim mirror: feasibility vs cap miss-rate ratio (<= 0.5)"),
+    ]
+    return rows

@@ -43,6 +43,8 @@ def main() -> None:
                     help="path for the pr7 bench JSON (default: BENCH_PR7.json)")
     ap.add_argument("--pr8-json", default=None,
                     help="path for the pr8 bench JSON (default: BENCH_PR8.json)")
+    ap.add_argument("--pr9-json", default=None,
+                    help="path for the pr9 bench JSON (default: BENCH_PR9.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -51,7 +53,8 @@ def main() -> None:
         args.only.split(",")
         if args.only
         else list(ALL_BENCHES)
-        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "pr8", "roofline"]
+        + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "pr8", "pr9",
+           "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -85,6 +88,10 @@ def main() -> None:
                 from benchmarks.telemetry import bench_pr8
 
                 bench_rows = bench_pr8(args.pr8_json)
+            elif name == "pr9":
+                from benchmarks.degradation import bench_pr9
+
+                bench_rows = bench_pr9(args.pr9_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

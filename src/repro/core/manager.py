@@ -111,6 +111,72 @@ class ManagerConfig:
     # ``failure_hook`` / the serving gateway) instead of being re-leased
     # forever and wedging the run.
     quarantine_after: int = 3
+    # Gray-failure detection (alive-but-slow workers, distinct from
+    # heartbeat death): a HealthScorer tracks each worker's EMA of
+    # observed/expected stage latency (+ heartbeat jitter) and scales
+    # its lease window down (capacity-weighted soft anti-affinity); a
+    # worker whose score crosses ``probation_ratio`` — or that eats
+    # ``probation_after_hedges`` hedges — goes on *probation*: its
+    # queued leases re-queue to healthy workers and it keeps a single
+    # probe lease until the score recovers, then rejoins automatically.
+    # The simulator mirrors this as ``SimConfig.health_scoring``.
+    health_scoring: bool = False
+    health_alpha: float = 0.35            # EMA weight per ratio sample
+    probation_ratio: float = 3.0          # score to enter probation
+    probation_recover_ratio: float = 2.0  # score to leave probation
+    probation_min_samples: int = 3        # ratio samples before benching
+    probation_after_hedges: int = 2       # hedges eaten => probation
+    # Percentile hedging (generalized backup tasks): a running lease
+    # whose age exceeds its stage's measured latency p99 × this slack
+    # is duplicated onto the healthiest worker with window slack —
+    # first completion wins through the existing twin-cancel path.
+    # Unlike ``backup_tasks`` (tail-of-run only), hedges fire mid-run,
+    # latency-triggered against the histogram, and are health-routed.
+    # None = off.  Mirrored as ``SimConfig.hedge_slack``.
+    hedge_slack: Optional[float] = None
+    hedge_min_samples: int = 8            # histogram count before hedging
+
+
+class HealthScorer:
+    """Gray-failure detector: per-worker health from latency + jitter.
+
+    Score = EMA of the observed/expected stage-latency ratio, inflated
+    by heartbeat jitter (EMA of inter-heartbeat gap over the timeout).
+    1.0 = nominal; a persistently 8x-slow worker converges toward 8.
+    ``weight`` maps the score to a dispatch capacity multiplier in
+    (0, 1].  All calls run under the Manager lock — no lock of its own.
+    """
+
+    def __init__(self, alpha: float = 0.35) -> None:
+        self.alpha = float(alpha)
+        self._ratio: dict[int, float] = {}
+        self._gap: dict[int, float] = {}
+        self._n: dict[int, int] = {}
+
+    def observe(self, wid: int, ratio: float) -> None:
+        prev = self._ratio.get(wid, 1.0)
+        self._ratio[wid] = (1.0 - self.alpha) * prev + self.alpha * ratio
+        self._n[wid] = self._n.get(wid, 0) + 1
+
+    def observe_gap(self, wid: int, gap: float) -> None:
+        prev = self._gap.get(wid, 0.0)
+        self._gap[wid] = (1.0 - self.alpha) * prev + self.alpha * gap
+
+    def samples(self, wid: int) -> int:
+        return self._n.get(wid, 0)
+
+    def score(self, wid: int, heartbeat_timeout: float = 60.0) -> float:
+        jitter = self._gap.get(wid, 0.0) / max(heartbeat_timeout, 1e-9)
+        return self._ratio.get(wid, 1.0) * (1.0 + jitter)
+
+    def weight(self, wid: int, heartbeat_timeout: float = 60.0) -> float:
+        return min(1.0, 1.0 / max(self.score(wid, heartbeat_timeout), 1e-9))
+
+    def reset(self, wid: int) -> None:
+        """Fresh start after probation exit: a recovered worker earns
+        full weight back immediately (re-entry is cheap if it relapses)."""
+        self._ratio[wid] = 1.0
+        self._gap[wid] = 0.0
 
 
 @dataclass
@@ -119,6 +185,11 @@ class _WorkerState:
     leases: set[int] = field(default_factory=set)
     last_heartbeat: float = field(default_factory=time.monotonic)
     dead: bool = False
+    # Gray-failure probation: the worker is alive and registered but
+    # receives only a single probe lease until its health recovers.
+    probation: bool = False
+    probe_completions: int = 0   # completions observed while probing
+    hedged_against: int = 0      # hedges issued against this worker
 
 
 @dataclass
@@ -176,6 +247,14 @@ class Manager:
         self._quarantined: dict[int, str] = {}
         self.stage_failures = c("stage_failures")  # explicit worker failure reports
         self.lease_retries = c("lease_retries")    # failed leases re-queued elsewhere
+        # Gray-failure resilience: per-worker health (feeds capacity-
+        # weighted dispatch + probation) and per-lease dispatch times
+        # (feed the stage-latency histograms and percentile hedging).
+        self.health = HealthScorer(alpha=self.cfg.health_alpha)
+        self._lease_t: dict[tuple[int, int], float] = {}  # (wid, uid) -> t
+        self.probations = c("probations")            # workers benched as gray
+        self.probation_exits = c("probation_exits")  # recovered + rejoined
+        self.hedged_leases = c("hedged_leases")      # p99-triggered hedge twins
         # Called outside the lock, once per newly-quarantined primary
         # uid, as hook(uid, error) — the serving gateway maps these to
         # terminal ``failed`` request state.
@@ -318,13 +397,29 @@ class Manager:
         with self._lock:
             st = self._workers.get(worker_id)
             if st is not None:
-                st.last_heartbeat = time.monotonic()
+                now = time.monotonic()
+                if self.cfg.health_scoring and not st.dead:
+                    # Heartbeat jitter is the second gray-failure signal
+                    # (a worker whose pings stretch toward the timeout
+                    # is degrading even if nothing has completed yet).
+                    self.health.observe_gap(worker_id, now - st.last_heartbeat)
+                st.last_heartbeat = now
                 if st.dead and st.runtime.alive:
                     # A fresh heartbeat after a reap proves the "dead"
                     # worker was merely slow (one op outlasted the
                     # window): rejoin it.  Its leases were already
-                    # recovered; chunk processing is idempotent.
+                    # recovered; chunk processing is idempotent.  Under
+                    # health scoring the slander itself is evidence of
+                    # slowness, so it rejoins *as probing* — one probe
+                    # lease until the score proves it healthy — never
+                    # straight back to full weight.
                     st.dead = False
+                    if self.cfg.health_scoring and not st.probation:
+                        self._enter_probation_locked(
+                            worker_id, st, self.health.score(
+                                worker_id, self.cfg.heartbeat_timeout
+                            ), "slander rejoin",
+                        )
                     self._dispatch_all_locked()
 
     def deregister_worker(self, worker_id: int) -> int:
@@ -345,6 +440,7 @@ class Manager:
                 return 0
             requeued = 0
             for uid in sorted(st.leases):
+                self._lease_t.pop((worker_id, uid), None)
                 if uid not in self._stage_done:
                     try:
                         st.runtime.cancel_stage(uid)
@@ -498,13 +594,21 @@ class Manager:
         return getattr(self, "_clones_of", {})
 
     def _make_completion_cb(self, worker_id: int):
-        def cb(si: StageInstance, outputs: dict[str, Any]) -> None:
-            self._on_stage_complete(worker_id, si, outputs)
+        def cb(
+            si: StageInstance,
+            outputs: dict[str, Any],
+            exec_s: Optional[float] = None,
+        ) -> None:
+            self._on_stage_complete(worker_id, si, outputs, exec_s)
 
         return cb
 
     def _on_stage_complete(
-        self, worker_id: int, si: StageInstance, outputs: dict[str, Any]
+        self,
+        worker_id: int,
+        si: StageInstance,
+        outputs: dict[str, Any],
+        exec_s: Optional[float] = None,
     ) -> None:
         completed: Optional[int] = None
         with self._lock:
@@ -515,9 +619,11 @@ class Manager:
                 # Recording its outputs would point dependents at a
                 # holder nobody can dial; the re-leased twin wins.
                 return
-            st.last_heartbeat = time.monotonic()
+            now = time.monotonic()
+            st.last_heartbeat = now
             clones_of = self._clone_map()
             primary_uid = clones_of.get(si.uid, si.uid)
+            lease_t0 = self._lease_t.pop((worker_id, si.uid), None)
             if primary_uid in self._stage_done:
                 return  # a backup twin already completed this lease
             if primary_uid in self._quarantined:
@@ -525,20 +631,59 @@ class Manager:
                 # stage is already terminally accounted as failed —
                 # recording it done too would double-count the tile.
                 return
+            # Gray-failure signal: this worker's observed stage latency
+            # against the cross-worker distribution.  The histogram is
+            # per stage name so heterogeneous stages don't pollute each
+            # other's p99 (hedging) or median (health ratio).
+            if lease_t0 is not None:
+                elapsed = now - lease_t0
+                hist = self._stage_hist(si.stage.name)
+                # Health prefers the worker-reported execution seconds:
+                # lease latency includes queueing, so a probe lease
+                # (empty queue) judged against queue-inflated medians
+                # exits probation on a coin flip.  Fall back to lease
+                # latency for runtimes that don't report exec time.
+                if exec_s is not None:
+                    eh = self._exec_hist(si.stage.name)
+                    expected = eh.percentile(0.5)
+                    sample = exec_s
+                else:
+                    expected = hist.percentile(0.5)
+                    sample = elapsed
+                # Suspects don't write the baselines: one benched
+                # worker's 8x latencies would drag the stage p99 up to
+                # *its* speed, raising the hedge trigger exactly when
+                # hedges are most needed (observed: a stuck probe aged
+                # 5s before hedging because p99 had absorbed the
+                # straggler's own queue-inflated samples).
+                if not st.probation:
+                    hist.observe(elapsed)
+                    if exec_s is not None:
+                        self._exec_hist(si.stage.name).observe(exec_s)
+                if (
+                    self.cfg.health_scoring
+                    and expected is not None
+                    and expected > 0.0
+                ):
+                    self.health.observe(worker_id, sample / expected)
+                    self._update_probation_locked(worker_id, st)
             self._stage_done.add(primary_uid)
             if si.uid != primary_uid:
                 self._stage_done.add(si.uid)
             self._trace_ctx.pop(primary_uid, None)
             self._trace_ctx.pop(si.uid, None)
             self._stage_outputs[primary_uid] = outputs
-            for wst in self._workers.values():
+            for w_wid, wst in self._workers.items():
                 wst.leases.discard(si.uid)
                 wst.leases.discard(primary_uid)
+                self._lease_t.pop((w_wid, si.uid), None)
+                self._lease_t.pop((w_wid, primary_uid), None)
                 # Cancel twins on other workers.
                 for c_uid, p_uid in clones_of.items():
                     if p_uid == primary_uid and c_uid in wst.leases:
                         wst.runtime.cancel_stage(c_uid)
                         wst.leases.discard(c_uid)
+                        self._lease_t.pop((w_wid, c_uid), None)
             primary = self.cw.stage_instances[primary_uid]
             # The completing worker now holds this stage's sink outputs:
             # record placements so dispatch can route dependents to it.
@@ -610,6 +755,7 @@ class Manager:
             if st is not None:
                 st.last_heartbeat = time.monotonic()
                 st.leases.discard(uid)
+                self._lease_t.pop((worker_id, uid), None)
             pu = self._clone_map().get(uid, uid)
             if pu in self._stage_done or pu in self._quarantined:
                 return  # a twin completed, or already terminal
@@ -748,6 +894,12 @@ class Manager:
                 "pushes_deferred": int(self.pushes_deferred),
                 "pushes_dropped": int(self.pushes_dropped),
                 "push_inflight_peak": dict(self.push_inflight_peak),
+                "probations": int(self.probations),
+                "probation_exits": int(self.probation_exits),
+                "hedged_leases": int(self.hedged_leases),
+                "workers_probing": sum(
+                    1 for ws in self._workers.values() if ws.probation
+                ),
                 "workers": len(self._workers),
                 "pending": len(self._pending),
                 "stages_done": len(self._stage_done),
@@ -770,7 +922,7 @@ class Manager:
             self._dispatch_locality_locked(live)
         else:
             for wid, st in live.items():
-                while len(st.leases) < self.cfg.window and self._pending:
+                while len(st.leases) < self._window_for_locked(wid, st) and self._pending:
                     idx = next(
                         (
                             i
@@ -801,12 +953,15 @@ class Manager:
                 slack = {
                     wid
                     for wid, st in live.items()
-                    if len(st.leases) < self.cfg.window
+                    if len(st.leases) < self._window_for_locked(wid, st)
                 }
                 if not slack:
                     return
                 for wid, st in live.items():
-                    if len(st.leases) >= self.cfg.window or not self._pending:
+                    if (
+                        len(st.leases) >= self._window_for_locked(wid, st)
+                        or not self._pending
+                    ):
                         continue
                     idx = select_lease(
                         self._pending,
@@ -844,9 +999,35 @@ class Manager:
             return False
         return any(w not in tried for w in live)
 
+    def _window_for_locked(self, wid: int, st: _WorkerState) -> int:
+        """Effective lease window for a worker: the configured window
+        scaled by the health weight (capacity-weighted soft
+        anti-affinity — a 4x-slow worker at window 4 gets 1 lease), and
+        a single probe lease while on probation so recovery stays
+        observable at bounded cost.  Probes are granted only from
+        *surplus* backlog: when healthy workers have free slots for
+        everything pending, handing a stage to the suspect converts a
+        fast completion into a slow one — worst at the tail, where one
+        probe lease can hold the whole run hostage until a hedge fires."""
+        if not self.cfg.health_scoring:
+            return self.cfg.window
+        if st.probation:
+            healthy_slack = sum(
+                max(self.cfg.window - len(ws.leases), 0)
+                for w2, ws in self._workers.items()
+                if w2 != wid
+                and not ws.dead
+                and ws.runtime.alive
+                and not ws.probation
+            )
+            return 1 if len(self._pending) > healthy_slack else 0
+        w = self.health.weight(wid, self.cfg.heartbeat_timeout)
+        return max(1, int(self.cfg.window * w + 1e-9))
+
     def _lease_locked(
         self, wid: int, st: _WorkerState, si: StageInstance
     ) -> None:
+        self._lease_t[(wid, si.uid)] = time.monotonic()
         keys = self._input_keys(si)
         if keys:
             best = self.directory.best_worker(keys)
@@ -1436,10 +1617,15 @@ class Manager:
         clones_of = getattr(self, "_clones_of", None)
         if clones_of is None:
             clones_of = self._clones_of = {}
+        # A probationed worker is excluded: it is the suspected
+        # straggler — duplicating tail work onto it defeats the backup.
         idle = [
-            st
-            for st in self._workers.values()
-            if not st.dead and st.runtime.alive and not st.leases
+            (wid, st)
+            for wid, st in self._workers.items()
+            if not st.dead
+            and st.runtime.alive
+            and not st.probation
+            and not st.leases
         ]
         if not idle:
             return
@@ -1452,25 +1638,228 @@ class Manager:
                     and uid not in clones_of
                 ):
                     outstanding.append(self.cw.stage_instances[uid])
-        for st, si in zip(idle, outstanding):
+        for (wid, st), si in zip(idle, outstanding):
             self._dup_issued.add(si.uid)
             self.duplicated_leases += 1
-            clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
-            # Mirror the original's cross-stage input edges so the twin
-            # computes on the same upstream outputs (a bare re-instance
-            # would run its source ops on the raw chunk payload).
-            local = {o.uid for o in si.op_instances}
-            orig_by_name = {o.op.name: o for o in si.op_instances}
-            for c_oi in clone.op_instances:
-                orig = orig_by_name[c_oi.op.name]
-                c_oi.deps |= orig.deps - local
-                c_oi.dep_names.update(
-                    {u: n for u, n in orig.dep_names.items() if u not in local}
+            self._clone_lease_locked(wid, st, si)
+
+    def _clone_lease_locked(
+        self, wid: int, st: _WorkerState, si: StageInstance
+    ) -> None:
+        """Duplicate ``si`` onto worker ``wid`` as a backup/hedge twin.
+
+        The clone mirrors the original's cross-stage input edges so the
+        twin computes on the same upstream outputs (a bare re-instance
+        would run its source ops on the raw chunk payload); first
+        completion wins through ``_on_stage_complete``'s twin-cancel.
+        """
+        clones_of = getattr(self, "_clones_of", None)
+        if clones_of is None:
+            clones_of = self._clones_of = {}
+        clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
+        local = {o.uid for o in si.op_instances}
+        orig_by_name = {o.op.name: o for o in si.op_instances}
+        for c_oi in clone.op_instances:
+            orig = orig_by_name[c_oi.op.name]
+            c_oi.deps |= orig.deps - local
+            c_oi.dep_names.update(
+                {u: n for u, n in orig.dep_names.items() if u not in local}
+            )
+        clones_of[clone.uid] = si.uid
+        st.leases.add(clone.uid)
+        self._lease_t[(wid, clone.uid)] = time.monotonic()
+        self._forward_upstream_outputs(st.runtime, clone)
+        st.runtime.submit_stage(clone)
+
+    # -- gray-failure resilience ----------------------------------------------
+
+    def _stage_hist(self, stage_name: str):
+        """Manager-side stage-latency histogram (lease to completion),
+        one per stage name — the distribution the hedge p99 trigger
+        reads (queueing included: a hedge covers the whole wait)."""
+        return self.metrics.histogram(f"manager.stage_latency_s.{stage_name}")
+
+    def _exec_hist(self, stage_name: str):
+        """Worker-reported stage *execution* seconds (queueing
+        excluded), one per stage name — the health ratio's expected
+        baseline.  Separate from ``_stage_hist``: judging a probe
+        lease (empty queue) against queue-inflated latencies made
+        probation exit a coin flip."""
+        return self.metrics.histogram(f"manager.stage_exec_s.{stage_name}")
+
+    def _update_probation_locked(self, wid: int, st: _WorkerState) -> None:
+        """Probation state machine, advanced on each health observation:
+        a clean worker whose score crosses the entry threshold (with
+        enough samples to be credible) gets benched; a probing worker
+        whose score recovers — judged on its own probe completions, at
+        least two — rejoins at full weight."""
+        s = self.health.score(wid, self.cfg.heartbeat_timeout)
+        if not st.probation:
+            if (
+                self.health.samples(wid) >= self.cfg.probation_min_samples
+                and s >= self.cfg.probation_ratio
+            ):
+                self._enter_probation_locked(wid, st, s, "runtime ratio")
+            return
+        st.probe_completions += 1
+        if (
+            st.probe_completions >= 2
+            and s <= self.cfg.probation_recover_ratio
+        ):
+            st.probation = False
+            st.hedged_against = 0
+            self.probation_exits += 1
+            self.health.reset(wid)
+            if self.recorder is not None:
+                self.recorder.note(
+                    "probation_exit", worker=wid, score=round(s, 3),
+                    probes=st.probe_completions,
                 )
-            clones_of[clone.uid] = si.uid
-            st.leases.add(clone.uid)
-            self._forward_upstream_outputs(st.runtime, clone)
-            st.runtime.submit_stage(clone)
+
+    def _enter_probation_locked(
+        self, wid: int, st: _WorkerState, score: float, reason: str
+    ) -> None:
+        """Bench a gray-failing worker: its outstanding leases re-queue
+        to healthy workers (the same atomic recovery a drain performs)
+        but the worker stays *registered* with a single probe lease —
+        recovery is observable and rejoin automatic, distinct from
+        heartbeat death which assumes the work is lost."""
+        if st.probation:
+            return
+        st.probation = True
+        st.probe_completions = 0
+        st.hedged_against = 0
+        st.last_heartbeat = time.monotonic()
+        self.probations += 1
+        if self.recorder is not None:
+            self.recorder.note(
+                "probation_enter", worker=wid, score=round(score, 3),
+                reason=reason,
+            )
+        for uid in sorted(st.leases):
+            self._lease_t.pop((wid, uid), None)
+            if uid in self._stage_done:
+                continue
+            try:
+                st.runtime.cancel_stage(uid)
+            except Exception:
+                pass  # runtime may already be gone
+            # A twin of the same primary already live elsewhere (or
+            # queued) covers this lease — re-queueing would make a
+            # third runner for no added protection.
+            pu = self._clone_map().get(uid, uid)
+            clone_uids = {c for c, p in self._clone_map().items() if p == pu}
+            active = ({pu} | clone_uids) - {uid}
+            covered = any(
+                active & ws.leases
+                for ws in self._workers.values()
+                if ws is not st
+            ) or any(p.uid in active for p in self._pending)
+            if not covered:
+                self.recovered_leases += 1
+                self._push_pending_locked(self.cw.stage_instances[pu])
+        st.leases.clear()
+
+    def _issue_hedges_locked(self, now: float) -> None:
+        """Percentile hedging: a running lease whose age exceeds its
+        stage's measured latency p99 × ``hedge_slack`` gets a twin on
+        the healthiest worker with window slack — first completion wins
+        through the existing twin-cancel/exactly-once path.  This
+        generalizes tail-only backup tasks: hedges fire mid-run,
+        triggered by the latency histogram instead of queue drain, and
+        are health-routed away from suspects."""
+        slack = self.cfg.hedge_slack
+        if slack is None:
+            return
+        candidates: list[tuple[int, _WorkerState, StageInstance, float, float, float]] = []
+        for wid, st in self._workers.items():
+            if st.dead or not st.runtime.alive:
+                continue
+            for uid in st.leases:
+                if (
+                    uid in self._stage_done
+                    or uid in self._dup_issued
+                    or uid in self._clone_map()
+                ):
+                    continue
+                t0 = self._lease_t.get((wid, uid))
+                if t0 is None:
+                    continue
+                si = self.cw.stage_instances[uid]
+                hist = self._stage_hist(si.stage.name)
+                if hist.count < self.cfg.hedge_min_samples:
+                    continue
+                p99 = hist.percentile(0.99)
+                if p99 is None or now - t0 <= p99 * slack:
+                    continue
+                p50 = hist.percentile(0.5)
+                candidates.append((wid, st, si, now - t0, p99, p50 or 0.0))
+        for wid, st, si, age, p99, p50 in candidates:
+            if si.uid not in st.leases or si.uid in self._dup_issued:
+                continue  # probation entry below re-queued it already
+            target = self._pick_hedge_target_locked(exclude=wid)
+            if target is None:
+                return  # nobody has slack: retry next monitor tick
+            twid, tst = target
+            self._dup_issued.add(si.uid)
+            self.duplicated_leases += 1
+            self.hedged_leases += 1
+            self._clone_lease_locked(twid, tst, si)
+            if self.recorder is not None:
+                self.recorder.note(
+                    "hedge", uid=si.uid, slow_worker=wid, target=twid,
+                    age_s=round(age, 4), p99_s=round(p99, 4),
+                )
+            # A lease blowing p99 × slack is itself a health
+            # observation — it arrives *before* the slow completion
+            # would, which is exactly when detection matters.
+            if self.cfg.health_scoring:
+                st.hedged_against += 1
+                if p50 > 0.0:
+                    self.health.observe(wid, age / p50)
+                if (
+                    not st.probation
+                    and st.hedged_against >= self.cfg.probation_after_hedges
+                ):
+                    self._enter_probation_locked(
+                        wid, st,
+                        self.health.score(wid, self.cfg.heartbeat_timeout),
+                        "hedged leases",
+                    )
+
+    def _pick_hedge_target_locked(
+        self, exclude: int
+    ) -> Optional[tuple[int, _WorkerState]]:
+        """Healthiest live worker with window slack, excluding the
+        suspect itself and anything on probation."""
+        best: Optional[tuple[tuple, int, _WorkerState]] = None
+        for twid, tst in self._workers.items():
+            if (
+                twid == exclude
+                or tst.dead
+                or not tst.runtime.alive
+                or tst.probation
+            ):
+                continue
+            # One overflow slot past the window: under saturation every
+            # healthy window is full, and a hedge that must wait for a
+            # free slot defeats its purpose (first completion wins and
+            # the twin is cancelled, so the overflow is transient).
+            cap = self._window_for_locked(twid, tst) + 1
+            free = cap - len(tst.leases)
+            if free <= 0:
+                continue
+            w = (
+                self.health.weight(twid, self.cfg.heartbeat_timeout)
+                if self.cfg.health_scoring
+                else 1.0
+            )
+            key = (w, free, -twid)
+            if best is None or key > best[0]:
+                best = (key, twid, tst)
+        if best is None:
+            return None
+        return best[1], best[2]
 
     def _check_done_locked(self) -> None:
         if self._streaming:
@@ -1517,9 +1906,15 @@ class Manager:
                             any_live = True
                         continue
                     inflight = bool(st.leases)
-                    expired = (
-                        now - st.last_heartbeat > self.cfg.heartbeat_timeout
+                    # A probationed worker is already contained (one
+                    # probe lease, hedging covers it): reaping it again
+                    # would double-drain work the probation entry just
+                    # re-queued.  It keeps a long-grace backstop so a
+                    # probe that wedges outright still gets reaped.
+                    grace = self.cfg.heartbeat_timeout * (
+                        4.0 if st.probation else 1.0
                     )
+                    expired = now - st.last_heartbeat > grace
                     if not st.runtime.alive or (inflight and expired):
                         st.dead = True
                         self.directory.drop_worker(wid)
@@ -1532,6 +1927,7 @@ class Manager:
                         # re-leased forever.  Snapshot: crossing the
                         # budget cancels leases (mutates this set).
                         for uid in list(st.leases):
+                            self._lease_t.pop((wid, uid), None)
                             if uid not in self._stage_done and (
                                 self._charge_attempt_locked(
                                     wid, uid, "worker lost mid-lease",
@@ -1543,6 +1939,7 @@ class Manager:
                                     self.cw.stage_instances[uid]
                                 )
                         st.leases.clear()
+                self._issue_hedges_locked(now)
                 self._dispatch_all_locked()
                 self._check_done_locked()
             self._fire_failure_hooks(newly_q)

@@ -42,11 +42,18 @@ One extension for the serving front end (:mod:`repro.serving`):
   share its deadline) the PATS rule still applies — accelerators take
   the max-speedup member, host cores the min — so EDF decides *which
   request* runs next and PATS decides *where* its ops run.
+* **slack band** — with ``edf_slack_band`` set, strict EDF preemption
+  applies only to deadline work that is *at risk* (earliest deadline
+  within ``band`` seconds of now).  Deadline work with ample slack no
+  longer starves the locality/PATS order: the batch tier runs with its
+  normal placement quality and the EDF tier reclaims priority exactly
+  when urgency demands it.  ``None`` keeps the strict-EDF behavior.
 """
 
 from __future__ import annotations
 
 import bisect
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
@@ -71,6 +78,9 @@ class SchedulerStats:
     batched_ops: int = 0
     # Serving: pops served from the deadline (EDF) tier.
     deadline_pops: int = 0
+    # Slack-band hybrid: pops where deadline work was queued but had
+    # enough slack that the locality/PATS order was served instead.
+    slack_deferrals: int = 0
 
     def record(self, op_name: str, lane_kind: str) -> None:
         key = (op_name, lane_kind)
@@ -101,7 +111,7 @@ class SchedulerStats:
         increments stay plain-int cheap.
         """
         for name in ("reuse_hits", "reuse_misses", "batches",
-                     "batched_ops", "deadline_pops"):
+                     "batched_ops", "deadline_pops", "slack_deferrals"):
             cell = registry.counter(f"{prefix}.{name}")
             cell.inc(int(getattr(self, name)))
             setattr(self, name, cell)
@@ -180,6 +190,9 @@ class _DeadlineTasks:
         self._keys.insert(i, key)
         self._tasks.insert(i, task)
 
+    def peek_deadline(self) -> float:
+        return self._keys[0][0]
+
     def pop_for(self, lane_kind: str) -> OperationInstance:
         d0 = self._keys[0][0]
         # End of the earliest-deadline group.
@@ -205,7 +218,9 @@ class ReadyScheduler:
 
     def __init__(self, policy: str = "fcfs", locality: bool = False,
                  speedups_known: bool = True, chain_affinity: float = 0.0,
-                 deadline_aware: bool = True, registry=None):
+                 deadline_aware: bool = True, registry=None,
+                 edf_slack_band: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if policy not in ("fcfs", "pats"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
@@ -220,6 +235,13 @@ class ReadyScheduler:
         # ahead of the batch queue.  False = deadlines ignored (the
         # FIFO baseline the serving benchmarks compare against).
         self.deadline_aware = deadline_aware
+        # Slack-aware EDF hybrid: strict EDF preemption only when the
+        # earliest deadline is within this many seconds; otherwise the
+        # locality/PATS order runs first (None = always preempt).  The
+        # clock is injectable so the simulator can drive it with
+        # virtual time; deadlines must be on the same clock.
+        self.edf_slack_band = edf_slack_band
+        self.clock: Callable[[], float] = clock or time.monotonic
         self.stats = SchedulerStats()
         if registry is not None:
             self.stats.bind(registry)
@@ -261,11 +283,25 @@ class ReadyScheduler:
         task: Optional[OperationInstance]
         if self._edf:
             # Deadline tier first: the most urgent request's ops beat
-            # any batch work, whatever its speedup or residency.
-            task = self._edf.pop_for(lane_kind)
-            self.stats.deadline_pops += 1
-            self.stats.record(task.op.name, lane_kind)
-            return task
+            # any batch work, whatever its speedup or residency — unless
+            # a slack band says the earliest deadline is not yet at
+            # risk AND batch work exists to fill the lane (the hybrid
+            # stays work-conserving: an empty batch tier always serves
+            # deadline work regardless of slack).
+            band = self.edf_slack_band
+            batch_n = (
+                len(self._sorted) if self.policy == "pats" else len(self._fifo)
+            )
+            if (
+                band is None
+                or batch_n == 0
+                or self._edf.peek_deadline() - self.clock() <= band
+            ):
+                task = self._edf.pop_for(lane_kind)
+                self.stats.deadline_pops += 1
+                self.stats.record(task.op.name, lane_kind)
+                return task
+            self.stats.slack_deferrals += 1
         if self.locality and lane_kind != HOST_KIND and resident_producers:
             task = self._pop_locality(lane_kind, resident_producers)
         elif self.policy == "pats":

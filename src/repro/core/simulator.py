@@ -23,6 +23,7 @@ Modeled effects (paper section in parens):
 
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 from dataclasses import dataclass, field
@@ -169,6 +170,43 @@ class SimConfig:
     heartbeat_timeout: float = 5.0
     straggler_factor: dict[int, float] = field(default_factory=dict)
     backup_tasks: bool = False         # duplicate tail leases
+    # -- gray-failure resilience mirror (repro.core.manager) --------------
+    # Windowed degradation that onsets AND heals: node_id -> (t0, t1,
+    # factor) multiplies that node's op cpu time while t0 <= now < t1
+    # (composes with straggler_factor) — the sim twin of
+    # FaultPlan.op_hook(slow_between=...).
+    slow_between: dict[int, tuple[float, float, float]] = field(
+        default_factory=dict
+    )
+    # Health-scored dispatch: per-node EMA of observed/expected stage
+    # runtime scales the node's lease window; persistently slow nodes
+    # enter probation (window 1) and rejoin at full weight once probe
+    # completions land near the expected runtime again.
+    health_scoring: bool = False
+    health_alpha: float = 0.35
+    probation_ratio: float = 3.0
+    probation_recover_ratio: float = 2.0
+    probation_min_samples: int = 3
+    probation_after_hedges: int = 2
+    # Percentile hedging: a lease whose age exceeds its stage's p99
+    # completed duration x this slack gets a hedge twin on the
+    # healthiest node with window headroom — first completion wins via
+    # the backup-task twin-cancel path.  None = off.
+    hedge_slack: Optional[float] = None
+    hedge_min_samples: int = 8
+    # Feasibility-aware overload shedding (serving mode): shed exactly
+    # the arrivals whose deadline fails an EDF schedulability test
+    # against the measured service-time percentile and the backlog of
+    # equal-or-earlier deadlines ahead — instead of (or on top of) the
+    # blind admission_queue_cap depth shed.
+    shed_feasibility: bool = False
+    feasibility_pct: float = 0.99
+    feasibility_min_samples: int = 8
+    # Slack-aware EDF band in every node's ReadyScheduler: strict EDF
+    # preempts locality order only for deadlines within this many
+    # seconds of the sim clock; unhurried deadline work falls through
+    # to the locality/PATS tier.  None = strict EDF (seed behaviour).
+    edf_slack_band: Optional[float] = None
     # -- fault-injection mirror (repro.faults) ----------------------------
     # The same knobs the runtime's FaultPlan exposes, so a schedule
     # validated in simulation transfers to the threaded runtime.
@@ -341,6 +379,13 @@ class SimResult:
     # copies re-issued after an injected CRC mismatch.
     msg_retries: int = 0
     corrupt_detected: int = 0
+    # Gray-failure mirror accounting (cfg.health_scoring / hedge_slack /
+    # shed_feasibility / edf_slack_band).
+    hedged_leases: int = 0
+    probations: int = 0
+    probation_exits: int = 0
+    shed_infeasible: int = 0
+    slack_deferrals: int = 0
     # Serving-mode accounting (cfg.arrival_rate): open-loop request
     # stream through the simulated gateway.
     requests: int = 0
@@ -413,6 +458,7 @@ class _SimRequest:
     finish_tag: float = 0.0          # SFQ virtual finish (WFQ ordering)
     start_tag: float = 0.0
     remaining: int = 0               # terminal stages still outstanding
+    t_dispatch: Optional[float] = None
     t_done: Optional[float] = None
     shed: bool = False
 
@@ -504,6 +550,8 @@ class ClusterSim:
                 chain_affinity=1.0 if cfg.chaining else 0.0,
                 speedups_known=cfg.speedups_known,
                 deadline_aware=cfg.edf,
+                edf_slack_band=cfg.edf_slack_band,
+                clock=lambda: self.now,
             )
             node = _Node(nid, lanes, sched)
             node.slow = cfg.straggler_factor.get(nid, 1.0)
@@ -524,6 +572,30 @@ class ClusterSim:
         self._clones: dict[int, list[int]] = {}
         self._dup_issued: set[int] = set()
         self._n_primary_stages = len(self.cw.stage_instances)
+
+        # Gray-failure mirror state: per-node health EMA (observed /
+        # expected stage runtime), probation flags, lease timestamps
+        # and per-stage-name completed-duration lists (ascending) for
+        # the percentile hedging test.
+        self.hedged = 0
+        self.probations = 0
+        self.probation_exits = 0
+        self.shed_infeasible = 0
+        self._health_ratio: dict[int, float] = {}
+        self._health_n: dict[int, int] = {}
+        self._node_probation: dict[int, bool] = {}
+        self._node_probes: dict[int, int] = {}
+        self._node_hedged: dict[int, int] = {}
+        self._lease_t0: dict[int, float] = {}
+        self._stage_durations: dict[str, list[float]] = {}
+        # Per-op-name completed durations (the sim twin of the workers'
+        # op_runtime_s histograms) — queue-free, so the health ratio
+        # measures the node, not its backlog.
+        self._op_durations: dict[str, list[float]] = {}
+        self._op_dur: dict[int, float] = {}     # inflight op uid -> duration
+        self._hedge_interval = max(0.05, cfg.heartbeat_timeout / 10.0)
+        self._serve_service: list[float] = []   # completed request service times
+        self._serve_svc_ema = 0.0
 
         # Error-injected speedup estimates (§V-G protocol).
         self._est = self._make_estimates()
@@ -642,6 +714,8 @@ class ClusterSim:
             self._post(t, lambda: self._drain_node(nid))
         if self.cfg.join_node_at is not None:
             self._post(self.cfg.join_node_at, self._join_node)
+        if self.cfg.hedge_slack is not None:
+            self._post(self._hedge_interval, self._hedge_tick)
         if self.cfg.partition is not None:
             # Heal event: partitioned nodes resume pulling leases.
             _, _, t_end = self.cfg.partition
@@ -671,7 +745,7 @@ class ClusterSim:
             }
         )
         profile: dict[str, dict[str, int]] = {}
-        hits = misses = batches = batched_ops = 0
+        hits = misses = batches = batched_ops = slack_defers = 0
         lane_busy: dict[str, float] = {}
         for node in self.nodes:
             for (op, kind), n in node.scheduler.stats.assigned.items():
@@ -681,6 +755,7 @@ class ClusterSim:
             misses += node.scheduler.stats.reuse_misses
             batches += node.scheduler.stats.batches
             batched_ops += node.scheduler.stats.batched_ops
+            slack_defers += node.scheduler.stats.slack_deferrals
             for lane in node.lanes:
                 lane_busy[lane.kind] = (
                     lane_busy.get(lane.kind, 0.0) + lane.busy_total
@@ -746,6 +821,11 @@ class ClusterSim:
             rpc_wait=self.rpc_wait,
             msg_retries=self.msg_retries,
             corrupt_detected=self.corrupt_detected,
+            hedged_leases=self.hedged,
+            probations=self.probations,
+            probation_exits=self.probation_exits,
+            shed_infeasible=self.shed_infeasible,
+            slack_deferrals=slack_defers,
             spans=self.tracer.spans() if self.tracer is not None else [],
             **serve_kwargs,
         )
@@ -790,6 +870,17 @@ class ClusterSim:
         if cap is not None and self._serve_queued >= cap:
             req.shed = True
             return
+        if (
+            self.cfg.shed_feasibility
+            and req.deadline is not None
+            and not self._serve_feasible(req)
+        ):
+            # EDF schedulability failure: no completion order meets this
+            # deadline given the measured service percentile and the
+            # backlog ahead — shed now rather than miss later.
+            req.shed = True
+            self.shed_infeasible += 1
+            return
         ts_w = self._serve_tenants.get(req.tenant, 1.0)
         start = max(
             self._serve_vtime, self._serve_last_finish.get(req.tenant, 0.0)
@@ -830,6 +921,7 @@ class ClusterSim:
             self._serve_vtime = max(self._serve_vtime, req.start_tag)
             self._serve_queued -= 1
             self._serve_inflight += 1
+            req.t_dispatch = self.now
             chunk = DataChunk(
                 chunk_id=next(self._serve_chunk_seq),
                 meta={
@@ -868,6 +960,15 @@ class ClusterSim:
         if req.remaining > 0:
             return
         req.t_done = self.now
+        svc = req.t_done - (
+            req.t_dispatch if req.t_dispatch is not None else req.arrival
+        )
+        bisect.insort(self._serve_service, svc)
+        self._serve_svc_ema = (
+            svc
+            if self._serve_svc_ema == 0.0
+            else 0.7 * self._serve_svc_ema + 0.3 * svc
+        )
         root = self._req_ctx.pop(req.req_id, None)
         if root is not None and root.sampled and self.tracer is not None:
             missed = req.deadline is not None and req.t_done > req.deadline
@@ -886,6 +987,30 @@ class ClusterSim:
             )
         self._serve_inflight -= 1
         self._serve_dispatch()
+
+    def _serve_feasible(self, req: _SimRequest) -> bool:
+        """EDF schedulability test for one arrival (mirror of
+        RequestGateway._feasible_locked): estimate this request's
+        completion as now + service_pct x (backlog of equal-or-earlier
+        deadlines + 1) / inflight window, and admit only when that
+        lands inside the deadline."""
+        svc = self._serve_service
+        if len(svc) >= self.cfg.feasibility_min_samples:
+            service = _pct(svc, self.cfg.feasibility_pct)
+        else:
+            service = self._serve_svc_ema
+        if service <= 0.0:
+            return True  # no signal yet: admit (measurement warm-up)
+        ahead = self._serve_inflight + sum(
+            1
+            for q in self._serve_queues.values()
+            for r in q
+            if r.deadline is None or r.deadline <= req.deadline
+        )
+        est_done = self.now + service * (ahead + 1) / max(
+            self.cfg.gateway_inflight, 1
+        )
+        return est_done <= req.deadline
 
     # -- elastic membership -------------------------------------------------------
 
@@ -993,10 +1118,11 @@ class ClusterSim:
     def _fill_window(self, node: _Node) -> None:
         if not node.alive or self._partitioned(node.node_id):
             return
-        while len(node.leased) < self.cfg.window and self.pending:
+        while len(node.leased) < self._window_for(node) and self.pending:
             si = self._pick_for_node(node)
             node.leased.add(si.uid)
             self.stage_node[si.uid] = node.node_id
+            self._lease_t0[si.uid] = self.now
             # A lease is one Manager->Worker message: the dispatch pays
             # the bus round-trip (plus any injected-loss retransmits)
             # on top of the protocol latency.
@@ -1292,7 +1418,11 @@ class ClusterSim:
         """One dispatch decision: a single op or a micro-batch of
         same-op instances.  The launch overhead is paid once per call —
         the amortization curve of ``cost_model.batched_runtime``."""
-        duration = sum(self._duration(node, lane, oi) for oi in ois)
+        durs = [self._duration(node, lane, oi) for oi in ois]
+        duration = sum(durs)
+        if self.cfg.health_scoring:
+            for oi, d in zip(ois, durs):
+                self._op_dur[oi.uid] = d
         if lane.kind == ACCEL_KIND:
             duration += self.cfg.launch_overhead
         lane.busy = True
@@ -1322,6 +1452,9 @@ class ClusterSim:
 
     def _duration(self, node: _Node, lane: _Lane, oi: OperationInstance) -> float:
         cpu_s = self._cpu_seconds(oi) * node.slow
+        win = self.cfg.slow_between.get(node.node_id)
+        if win is not None and win[0] <= self.now < win[1]:
+            cpu_s *= win[2]  # windowed gray failure: onsets, then heals
         p = self._profile(oi.op.name)
         if lane.kind == HOST_KIND:
             active = sum(
@@ -1374,10 +1507,26 @@ class ClusterSim:
         if not node.alive:
             return
         if oi.uid in self.op_done or oi.uid in self.cancelled_ops:
+            self._op_dur.pop(oi.uid, None)
             self._dispatch_idle_lanes(node)
             return
         self.op_done.add(oi.uid)
         self.completion_order.append(oi.uid)
+        d = self._op_dur.pop(oi.uid, None)
+        if d is not None:
+            # Health scoring on queue-free op runtime: this op vs the
+            # fleet-median runtime of the same op (the mirror of the
+            # workers' op_runtime_s histograms).  A probationed node is
+            # judged against the baseline but doesn't write it — its
+            # slow samples would drag the fleet median toward its own
+            # speed.
+            durs = self._op_durations.setdefault(oi.op.name, [])
+            expected = _pct(durs, 0.50) if durs else 0.0
+            if not self._node_probation.get(node.node_id):
+                bisect.insort(durs, d)
+            if expected > 0.0:
+                self._observe_health(node.node_id, d / expected)
+                self._update_probation(node)
         self.op_location[oi.uid] = (node.node_id, lane.kind, lane.lane_id)
         if lane.kind == ACCEL_KIND and self.cfg.dl:
             lane.resident[oi.uid] = None
@@ -1409,6 +1558,27 @@ class ClusterSim:
             return
         self.stage_done.add(si.uid)
         node.leased.discard(si.uid)
+        # A probation re-queue can leave a second copy of this stage
+        # leased elsewhere or still pending; first completion wins, so
+        # purge every other copy (exactly-once, no leaked lease slots).
+        for n in self.nodes:
+            n.leased.discard(si.uid)
+        if self.pending and any(p.uid == si.uid for p in self.pending):
+            self.pending = [p for p in self.pending if p.uid != si.uid]
+        t0 = self._lease_t0.pop(si.uid, None)
+        if t0 is not None:
+            # Completed stage durations feed the hedging percentile
+            # (lease age vs p99, queueing included — the right hedge
+            # trigger); node health is scored on op runtimes instead.
+            # Probationed nodes don't write the percentile: one benched
+            # straggler would raise the stage p99 — and thereby the
+            # hedge trigger — to its own latency.
+            elapsed = self.now - t0
+            if not self._node_probation.get(node.node_id):
+                bisect.insort(
+                    self._stage_durations.setdefault(si.stage.name, []),
+                    elapsed,
+                )
         # Completion notification: one Worker->Manager message (its
         # latency overlaps the next lease's dispatch round-trip, so it
         # is counted — retransmits included — but not serialized onto
@@ -1426,7 +1596,11 @@ class ClusterSim:
                 ))
         # A backup clone finishing completes the original, and vice versa.
         orig_uid = self._clone_of.get(si.uid)
-        effective = self.cw.stage_instances.get(orig_uid, si) if orig_uid else si
+        effective = (
+            self.cw.stage_instances.get(orig_uid, si)
+            if orig_uid is not None
+            else si
+        )
         if orig_uid is not None and orig_uid not in self.stage_done:
             self.stage_done.add(orig_uid)
             for n in self.nodes:
@@ -1559,6 +1733,191 @@ class ClusterSim:
         inflight = sum(b for _, b in q)
         return inflight == 0 or inflight + nbytes <= cap
 
+    # -- gray-failure resilience: health scoring, probation, hedging --------------
+
+    def _observe_health(self, nid: int, ratio: float) -> None:
+        a = self.cfg.health_alpha
+        prev = self._health_ratio.get(nid, 1.0)
+        self._health_ratio[nid] = (1.0 - a) * prev + a * ratio
+        self._health_n[nid] = self._health_n.get(nid, 0) + 1
+
+    def _health_score(self, nid: int) -> float:
+        return self._health_ratio.get(nid, 1.0)
+
+    def _health_weight(self, nid: int) -> float:
+        return min(1.0, 1.0 / max(self._health_score(nid), 1e-9))
+
+    def _window_for(self, node: _Node) -> int:
+        """Capacity-weighted lease window (mirror of the Manager's
+        _window_for_locked): full window when health scoring is off,
+        one probe lease under probation — granted only from surplus
+        backlog the healthy nodes can't absorb — else the window scaled
+        by the node's health weight, never starved below 1."""
+        if not self.cfg.health_scoring:
+            return self.cfg.window
+        if self._node_probation.get(node.node_id):
+            healthy_slack = sum(
+                max(self.cfg.window - len(n.leased), 0)
+                for n in self.nodes
+                if n is not node
+                and n.alive
+                and not self._node_probation.get(n.node_id)
+            )
+            return 1 if len(self.pending) > healthy_slack else 0
+        return max(
+            1,
+            int(self.cfg.window * self._health_weight(node.node_id) + 1e-9),
+        )
+
+    def _update_probation(self, node: _Node) -> None:
+        """Advance the probation state machine on a stage completion."""
+        nid = node.node_id
+        if not self._node_probation.get(nid):
+            if (
+                self._health_n.get(nid, 0) >= self.cfg.probation_min_samples
+                and self._health_score(nid) >= self.cfg.probation_ratio
+            ):
+                self._enter_probation(node)
+            return
+        self._node_probes[nid] = self._node_probes.get(nid, 0) + 1
+        if (
+            self._node_probes[nid] >= 2
+            and self._health_score(nid) <= self.cfg.probation_recover_ratio
+        ):
+            self._node_probation[nid] = False
+            self._node_hedged[nid] = 0
+            self._health_ratio[nid] = 1.0
+            self._health_n[nid] = 0
+            self.probation_exits += 1
+            self._fill_window(node)
+
+    def _enter_probation(self, node: _Node) -> None:
+        """Demote a persistently slow node to one probe lease at a time.
+
+        Its uncovered leases are re-queued immediately (a lease with a
+        live hedge/backup twin elsewhere is already covered); op work
+        finished on this node for the re-queued stages is abandoned, so
+        the re-lease re-runs them on a healthy node."""
+        nid = node.node_id
+        if self._node_probation.get(nid):
+            return
+        self._node_probation[nid] = True
+        self._node_probes[nid] = 0
+        self._node_hedged[nid] = 0
+        self.probations += 1
+        for uid in sorted(node.leased):
+            self._lease_t0.pop(uid, None)
+            if uid in self.stage_done:
+                continue
+            primary = self._clone_of.get(uid, uid)
+            active = ({primary} | set(self._clones.get(primary, ()))) - {uid}
+            covered = any(
+                a in other.leased
+                for other in self.nodes
+                if other is not node
+                for a in active
+            ) or any(p.uid in active for p in self.pending)
+            if covered:
+                continue
+            si = self.cw.stage_instances[primary]
+            for oi in si.op_instances:
+                if (
+                    oi.uid in self.op_done
+                    and self.op_location.get(oi.uid, (None,))[0] == nid
+                ):
+                    self.op_done.discard(oi.uid)
+            self.recovered += 1
+            self.pending.append(si)
+        node.leased.clear()
+        for other in self.nodes:
+            self._fill_window(other)
+
+    def _pick_hedge_target(self, exclude: int) -> Optional[_Node]:
+        """Healthiest live, non-probation node with window headroom."""
+        best, best_key = None, None
+        for node in self.nodes:
+            if (
+                node.node_id == exclude
+                or not node.alive
+                or self._partitioned(node.node_id)
+                or self._node_probation.get(node.node_id)
+            ):
+                continue
+            # One overflow slot past the window (mirror of the
+            # Manager's rule): saturated fleets keep every healthy
+            # window full, and the hedge twin is transient anyway.
+            free = self._window_for(node) + 1 - len(node.leased)
+            if free <= 0:
+                continue
+            key = (self._health_weight(node.node_id), free, -node.node_id)
+            if best_key is None or key > best_key:
+                best, best_key = node, key
+        return best
+
+    def _hedge_tick(self) -> None:
+        """Periodic latency check (the monitor-loop mirror): any lease
+        older than its stage's p99 completed duration x hedge_slack
+        gets a twin on the healthiest node — first completion wins."""
+        slack = self.cfg.hedge_slack
+        for node in self.nodes:
+            if not node.alive:
+                continue
+            for uid in sorted(node.leased):
+                if (
+                    uid in self.stage_done
+                    or uid in self._dup_issued
+                    or uid in self._clone_of
+                ):
+                    continue
+                t0 = self._lease_t0.get(uid)
+                if t0 is None:
+                    continue
+                si = self.cw.stage_instances[uid]
+                durs = self._stage_durations.get(si.stage.name)
+                if durs is None or len(durs) < self.cfg.hedge_min_samples:
+                    continue
+                p99 = _pct(durs, 0.99)
+                age = self.now - t0
+                if age <= p99 * slack:
+                    continue
+                target = self._pick_hedge_target(exclude=node.node_id)
+                if target is None:
+                    continue  # nobody has slack: retry next tick
+                self._dup_issued.add(uid)
+                self.duplicated += 1
+                self.hedged += 1
+                self._issue_clone(target, si)
+                if self.cfg.health_scoring:
+                    nid = node.node_id
+                    self._node_hedged[nid] = self._node_hedged.get(nid, 0) + 1
+                    p50 = _pct(durs, 0.50)
+                    if p50 > 0.0:
+                        # An eaten hedge is itself a slowness sample —
+                        # it lands before the (late) completion would.
+                        self._observe_health(nid, age / p50)
+                    if (
+                        not self._node_probation.get(nid)
+                        and self._node_hedged[nid]
+                        >= self.cfg.probation_after_hedges
+                    ):
+                        self._enter_probation(node)
+                        break  # this node's leases were just re-queued
+        if self._events or self.pending or any(n.leased for n in self.nodes):
+            self._post(self.now + self._hedge_interval, self._hedge_tick)
+
+    def _issue_clone(self, node: _Node, si: StageInstance) -> None:
+        """Lease a backup/hedge twin of ``si`` onto ``node``."""
+        clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
+        self._clone_of[clone.uid] = si.uid
+        self._clones.setdefault(si.uid, []).append(clone.uid)
+        node.leased.add(clone.uid)
+        self.stage_node[clone.uid] = node.node_id
+        self._lease_t0[clone.uid] = self.now
+        self._post(
+            self.now + self.cfg.dispatch_latency,
+            lambda node=node, clone=clone: self._start_stage(node, clone),
+        )
+
     # -- fault tolerance / stragglers ---------------------------------------------
 
     def _kill_node(self, nid: int) -> None:
@@ -1596,7 +1955,11 @@ class ClusterSim:
         idle = [
             n
             for n in self.nodes
-            if n.alive and not n.leased and not n.scheduler and n.inflight_ops == 0
+            if n.alive
+            and not n.leased
+            and not n.scheduler
+            and n.inflight_ops == 0
+            and not self._node_probation.get(n.node_id)
         ]
         if not idle:
             return
@@ -1618,15 +1981,7 @@ class ClusterSim:
                     return
                 self._dup_issued.add(si.uid)
                 self.duplicated += 1
-                clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
-                self._clone_of[clone.uid] = si.uid
-                self._clones.setdefault(si.uid, []).append(clone.uid)
-                node.leased.add(clone.uid)
-                self.stage_node[clone.uid] = node.node_id
-                self._post(
-                    self.now + self.cfg.dispatch_latency,
-                    lambda node=node, clone=clone: self._start_stage(node, clone),
-                )
+                self._issue_clone(node, si)
 
 
 def run_simulation(

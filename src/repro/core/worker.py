@@ -151,7 +151,7 @@ class WorkerRuntime:
         speedups_known: bool = True,
         staging: StagingConfig | None = None,
         variant_registry: VariantRegistry | None = None,
-        on_stage_complete: Callable[[StageInstance, dict[str, Any]], None] | None = None,
+        on_stage_complete: Callable[..., None] | None = None,
         observe_runtimes: bool = True,
         on_heartbeat=None,
         registry: MetricsRegistry | None = None,
@@ -227,9 +227,13 @@ class WorkerRuntime:
                 registry=self.metrics,
             )
 
-        # Execution state.
+        # Execution state.  ``_op_claimed`` marks ops a lane has popped
+        # for execution: a revoked cancellation re-pushes its ops, and
+        # the claim keeps the stale queue entry from running the op a
+        # second time on another lane.
         self._op_done: set[int] = set()
         self._cancelled: set[int] = set()
+        self._op_claimed: set[int] = set()
         self._stages: dict[int, StageInstance] = {}
         self.completion_order: list[int] = []
         self.errors: list[tuple[int, BaseException]] = []
@@ -279,6 +283,22 @@ class WorkerRuntime:
         # shows up as a ``region:pull`` span on the request's trace
         # even though the transfer ran on the agent thread.
         self._pull_ctx: dict[Any, tuple[SpanContext, float, float]] = {}
+        # Gray-failure signals (PR 9): per-worker op-runtime and
+        # region-pull-latency distributions in the shared registry.
+        # Unlike the tracer-gated _pull_ctx above, _pull_t0 is always
+        # on — the health plane must see latency whether or not the
+        # request was sampled (same 4096-entry bound).
+        self.op_runtime_hist = self.metrics.histogram("worker.op_runtime_s")
+        self.pull_latency_hist = self.metrics.histogram(
+            "worker.pull_latency_s"
+        )
+        self._pull_t0: dict[Any, float] = {}
+        # Per-stage *execution* seconds (sum of its ops' lane time,
+        # queueing excluded) — reported with the completion so the
+        # Manager's health ratio is not confounded by queue depth: a
+        # probe lease on an empty queue and a lease behind a full
+        # window must be judged on the same signal.
+        self._stage_exec: dict[int, float] = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -346,6 +366,24 @@ class WorkerRuntime:
                 for oi in si.op_instances:
                     oi._trace_ctx = sctx  # type: ignore[attr-defined]
             local = {o.uid for o in si.op_instances}
+            revoked = [
+                oi for oi in si.op_instances if oi.uid in self._cancelled
+            ]
+            if revoked:
+                # A re-lease of a stage this worker cancelled earlier
+                # (probation entry or a drain re-queued it, and the
+                # Manager handed it back — e.g. as a probe lease): the
+                # cancellation is revoked and the ops requeue, else the
+                # lease wedges with idle lanes until a hedge covers it.
+                for oi in revoked:
+                    self._cancelled.discard(oi.uid)
+                    self._op_claimed.discard(oi.uid)
+                    self._maybe_estimate(oi)
+                    if (
+                        oi.deps.issubset(self._op_done)
+                        and oi.uid not in self._op_done
+                    ):
+                        self.scheduler.push(oi)
             if not known:
                 for oi in si.op_instances:
                     self._maybe_estimate(oi)
@@ -368,6 +406,10 @@ class WorkerRuntime:
                 now_p, now_w = time.perf_counter(), time.time()
                 for key in missing:
                     self._pull_ctx.setdefault(key, (ctx, now_p, now_w))
+            if missing and len(self._pull_t0) < 4096:
+                t0 = time.perf_counter()
+                for key in missing:
+                    self._pull_t0.setdefault(key, t0)
         # Leased but not started: ask the staging agent to pull the
         # cross-stage inputs into the host tier ahead of execution.
         if self.agent is not None and missing:
@@ -485,11 +527,15 @@ class WorkerRuntime:
         uid = key[1]
         with self._lock:
             pulled = self._pull_ctx.pop(key, None)
+            pull_t0 = self._pull_t0.pop(key, None)
             if uid in self._op_done:
                 pulled = None  # duplicate landing: already accounted
+                pull_t0 = None
             else:
                 self._op_done.add(uid)
                 self._release_dependents_locked(uid)
+        if pull_t0 is not None:
+            self.pull_latency_hist.observe(time.perf_counter() - pull_t0)
         if pulled is not None and self.tracer is not None:
             ctx, t0_perf, t0_wall = pulled
             sub = self.tracer.child(ctx)
@@ -525,6 +571,7 @@ class WorkerRuntime:
             for oi in si.op_instances:
                 if oi.uid not in self._op_done:
                     self._cancelled.add(oi.uid)
+            self._stage_exec.pop(si_uid, None)
 
     def _accel_kind(self) -> str:
         accel_kinds = {l.spec.kind for l in self._lanes} - {HOST_KIND}
@@ -635,15 +682,18 @@ class WorkerRuntime:
                 else:
                     oi = self.scheduler.pop(lane.spec.kind, resident)
                     ois = [oi] if oi is not None else []
+                ois = [
+                    oi
+                    for oi in ois
+                    if oi is not None
+                    and oi.uid not in self._cancelled
+                    and oi.uid not in self._op_done
+                    and oi.uid not in self._op_claimed
+                ]
+                for oi in ois:
+                    self._op_claimed.add(oi.uid)
                 if ois:
                     lane.busy = True
-            ois = [
-                oi
-                for oi in ois
-                if oi is not None
-                and oi.uid not in self._cancelled
-                and oi.uid not in self._op_done
-            ]
             if not ois:
                 continue
             try:
@@ -723,6 +773,14 @@ class WorkerRuntime:
         elapsed = time.perf_counter() - t0
         lane.busy_seconds += elapsed
         lane.executed += len(ois)
+        self.op_runtime_hist.observe(elapsed / len(ois))
+        with self._lock:
+            per_op = elapsed / len(ois)
+            for oi in ois:
+                suid = oi.stage_instance.uid
+                self._stage_exec[suid] = (
+                    self._stage_exec.get(suid, 0.0) + per_op
+                )
         if self.tracer is not None:
             # One span per op instance (batch-mates share ts/dur): each
             # chains under its own stage's context so a request timeline
@@ -852,6 +910,7 @@ class WorkerRuntime:
             ts_wall = time.time()
             t_fetch = time.perf_counter()
             fetched = {uid: self._fetch_region(op_key(uid)) for uid in fetch_uids}
+            self.pull_latency_hist.observe(time.perf_counter() - t_fetch)
             if sctx is not None:
                 sub = self.tracer.child(sctx)
                 self.tracer.record_span(
@@ -874,6 +933,7 @@ class WorkerRuntime:
                 # does not double-count the transfer.
                 for uid in fetch_uids:
                     self._pull_ctx.pop(op_key(uid), None)
+                    self._pull_t0.pop(op_key(uid), None)
         inputs: dict[str, Any] = {}
         with self._lock:
             for uid, value in dep_objs:
@@ -1005,6 +1065,7 @@ class WorkerRuntime:
                 for o in si.op_instances
             )
             sctx = self._stage_ctx.pop(si.uid, None) if stage_done else None
+            exec_s = self._stage_exec.pop(si.uid, None) if stage_done else None
             self._work_ready.notify_all()
         # Callbacks into the Manager happen with the worker lock
         # released: lock order is always manager -> worker, never the
@@ -1053,7 +1114,7 @@ class WorkerRuntime:
             # callback: the stage_complete RPC (and any pushes the
             # Manager derives from it) then carries the request's trace.
             with use_context(sctx):
-                self.on_stage_complete(si, outputs)
+                self.on_stage_complete(si, outputs, exec_s)
 
     def _maybe_unpin_locked(self, uid: int) -> None:
         """Unpin ``uid``'s output once no locally-known op still needs it."""

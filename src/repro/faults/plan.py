@@ -153,25 +153,50 @@ class FaultPlan:
         corrupted, out = _corrupt_first_array(obj, self._rng, self._lock)
         return out if corrupted else obj
 
+    # -- time-windowed degradation (gray failures) --------------------
+    def slow_window_factor(self, slow_between: Optional[tuple]) -> float:
+        """Multiplier for a ``slow_between=(t0, t1, factor)`` window.
+
+        Returns ``factor`` while ``t0 <= now < t1`` (relative to
+        :meth:`start`), else 1.0 — a gray failure that onsets at
+        ``t0`` and *heals* at ``t1``, unlike a crash.
+        """
+        if slow_between is None:
+            return 1.0
+        t0, t1, factor = slow_between
+        return float(factor) if t0 <= self.now() < t1 else 1.0
+
     # -- worker / staging seams ---------------------------------------
     def op_hook(self, *, poison_chunks: tuple = (), crash_worker_at_op: Optional[dict] = None,
-                slow_factor: float = 0.0) -> Callable[[Any], None]:
+                slow_factor: float = 0.0, slow_between: Optional[tuple] = None,
+                slow_workers: Optional[tuple] = None) -> Callable[[Any], None]:
         """Build an ``on_op_start`` callback for ``WorkerRuntime``.
 
         ``poison_chunks``: chunk ids whose ops always raise (a
         deterministically-poisonous input).  ``crash_worker_at_op``:
         ``{worker_id: op_count}`` — kill that worker runtime after it
         has started that many ops.  ``slow_factor``: sleep this many
-        seconds before every op (slow-lane).
+        seconds before every op (slow-lane).  ``slow_between``:
+        ``(t0, t1, factor)`` — inside the window the per-op sleep is
+        ``slow_factor * factor`` (a gray failure that onsets and
+        heals), restricted to ``slow_workers`` worker ids when given
+        (None = every worker).
         """
         poison = set(poison_chunks)
         crash = dict(crash_worker_at_op or {})
+        slow_ids = None if slow_workers is None else set(slow_workers)
         counts: dict = {}
         lock = threading.Lock()
 
         def hook(runtime: Any, oi: Any) -> None:
-            if slow_factor > 0.0:
-                time.sleep(slow_factor)
+            delay = slow_factor
+            if slow_between is not None and (
+                slow_ids is None
+                or getattr(runtime, "worker_id", None) in slow_ids
+            ):
+                delay *= self.slow_window_factor(slow_between)
+            if delay > 0.0:
+                time.sleep(delay)
             chunk = getattr(getattr(oi, "stage_instance", None), "chunk", None)
             cid = getattr(chunk, "chunk_id", None)
             if cid in poison:
@@ -187,11 +212,19 @@ class FaultPlan:
 
         return hook
 
-    def wrap_fetch(self, fetch: Callable, *, error_rate: float = 0.0) -> Callable:
+    def wrap_fetch(self, fetch: Callable, *, error_rate: float = 0.0,
+                   slow_between: Optional[tuple] = None) -> Callable:
         """Staging seam: wrap an agent ``fetch``/``fetch_batch`` callable
-        with injected read errors (e.g. a failing disk tier)."""
+        with injected read errors (e.g. a failing disk tier) and/or
+        time-windowed degradation: ``slow_between=(t0, t1, factor)``
+        sleeps ``delay_s * factor`` per fetch inside the window (a
+        degraded-then-healed storage path)."""
 
         def faulty_fetch(*args: Any, **kwargs: Any) -> Any:
+            if slow_between is not None:
+                factor = self.slow_window_factor(slow_between)
+                if factor > 1.0:
+                    time.sleep(self.delay_s * factor)
             if self._roll(error_rate):
                 raise IOError("injected staging read error")
             return fetch(*args, **kwargs)

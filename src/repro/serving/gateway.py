@@ -43,6 +43,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional
 
 from .request import DONE, FAILED, QUEUED, RUNNING, SHED, ServeRequest
+from ..telemetry.metrics import Histogram
 from ..telemetry.tracing import use_context
 
 __all__ = ["GatewayConfig", "GatewayStats", "RequestGateway"]
@@ -65,6 +66,21 @@ class GatewayConfig:
     initial_cost_s: float = 0.05
     #: EMA smoothing for the service-time estimate.
     cost_ema: float = 0.2
+    #: feasibility-aware overload shedding: refuse exactly the
+    #: deadline-carrying requests whose deadline fails an EDF
+    #: schedulability test against the *measured* service-time tail
+    #: (histogram p99, not the EMA mean — overload is a tail
+    #: phenomenon): with the earlier-or-equal-deadline backlog plus
+    #: in-flight requests ahead of it across ``max_inflight`` release
+    #: slots, can this request still finish by its deadline?  Requests
+    #: without a deadline are never feasibility-shed.  Mirrored as
+    #: ``SimConfig.shed_feasibility``.
+    shed_feasibility: bool = False
+    #: service-time percentile the feasibility test budgets per request.
+    feasibility_pct: float = 0.99
+    #: observed completions before the histogram percentile is trusted
+    #: (the EMA estimate stands in below this).
+    feasibility_min_samples: int = 8
 
 
 @dataclass
@@ -72,6 +88,9 @@ class GatewayStats:
     submitted: int = 0
     admitted: int = 0
     shed: int = 0
+    #: subset of ``shed`` refused by the EDF feasibility test (their
+    #: deadline was unmeetable against measured queued work).
+    shed_infeasible: int = 0
     completed: int = 0
     #: requests that terminated in FAILED (pipeline quarantined).
     failed: int = 0
@@ -92,6 +111,7 @@ class GatewayStats:
             "submitted",
             "admitted",
             "shed",
+            "shed_infeasible",
             "completed",
             "failed",
             "deadline_misses",
@@ -149,6 +169,13 @@ class RequestGateway:
         self._inflight = 0
         self._est_queued_work = 0.0
         self._service_est = self.cfg.initial_cost_s
+        # Measured service-time distribution (dispatch-to-done): the
+        # feasibility test budgets its tail percentile per request.
+        self._service_hist = (
+            registry.histogram("gateway.service_s")
+            if registry is not None
+            else Histogram("gateway.service_s")
+        )
         self._next_id = 0
         #: terminal stage uid -> its request (completion fan-in).
         self._terminal: dict[int, ServeRequest] = {}
@@ -204,6 +231,18 @@ class RequestGateway:
                     self.stats.tenant_shed.get(tenant, 0) + 1
                 )
                 return req
+            if (
+                self.cfg.shed_feasibility
+                and deadline is not None
+                and not self._feasible_locked(now, deadline, req)
+            ):
+                req.state = SHED
+                self.stats.shed += 1
+                self.stats.shed_infeasible += 1
+                self.stats.tenant_shed[tenant] = (
+                    self.stats.tenant_shed.get(tenant, 0) + 1
+                )
+                return req
             self.stats.admitted += 1
             if self.tracer is not None:
                 # Root the request's trace at admission; the sampling
@@ -228,6 +267,46 @@ class RequestGateway:
             self._est_queued_work += cost
             self._dispatch_locked()
             return req
+
+    # -- feasibility-aware overload shedding -------------------------------
+
+    def _feasible_locked(
+        self, now: float, deadline: float, req: ServeRequest
+    ) -> bool:
+        """EDF schedulability test for one candidate request: budget the
+        measured per-request service tail for every queued request with
+        an earlier-or-equal deadline (those run first under EDF), every
+        in-flight request (already occupying release slots), and the
+        candidate itself, spread across ``max_inflight`` parallel
+        slots.  If even that optimistic pipeline cannot land the
+        candidate by its deadline, admitting it only converts a certain
+        miss into wasted cluster work — shed it instead."""
+        if self._service_hist.count >= self.cfg.feasibility_min_samples:
+            service = self._service_hist.percentile(self.cfg.feasibility_pct)
+        else:
+            service = self._service_est
+        if not service or service <= 0.0:
+            return True
+        ahead = self._inflight
+        for ts in self._tenants.values():
+            for _, _, queued in ts.queue:
+                if queued.deadline is None or queued.deadline <= deadline:
+                    ahead += 1
+        slots = max(self.cfg.max_inflight, 1)
+        est_done = now + service * (ahead + 1) / slots
+        if est_done <= deadline:
+            return True
+        if self.recorder is not None:
+            self.recorder.note(
+                "feasibility_shed",
+                req_id=req.req_id,
+                tenant=req.tenant,
+                deadline_in_s=round(deadline - now, 4),
+                service_pct_s=round(service, 4),
+                backlog=ahead,
+                est_done_in_s=round(est_done - now, 4),
+            )
+        return False
 
     # -- WFQ dispatch ------------------------------------------------------
 
@@ -325,6 +404,7 @@ class RequestGateway:
                 obs = max(req.t_done - req.t_dispatch, 1e-6)
                 a = self.cfg.cost_ema
                 self._service_est = (1 - a) * self._service_est + a * obs
+                self._service_hist.observe(obs)
             self._dispatch_locked()
             if self._queued == 0 and self._inflight == 0:
                 self._idle.set()

@@ -187,6 +187,38 @@ class Histogram:
                     return
             self.buckets[-1] += 1
 
+    def percentile(self, q: float) -> Optional[float]:
+        """Bucket-interpolated quantile ``q`` in ``[0, 1]``.
+
+        Within a bucket the mass is assumed uniform between its lower
+        and upper bound (the first bucket interpolates from ``min``);
+        the open overflow bucket reports ``max`` — conservative in the
+        direction control loops care about (never under-reports the
+        tail).  None until anything has been observed.
+        """
+        with self._lock:
+            if self.count == 0:
+                return None
+            q = min(max(q, 0.0), 1.0)
+            target = q * self.count
+            seen = 0.0
+            for i, n in enumerate(self.buckets):
+                if n == 0:
+                    continue
+                if seen + n >= target:
+                    if i >= len(self.bounds):
+                        return float(self.max)
+                    hi = self.bounds[i]
+                    lo = (
+                        self.bounds[i - 1]
+                        if i > 0
+                        else min(self.min or 0.0, hi)
+                    )
+                    frac = (target - seen) / n
+                    return float(lo + (hi - lo) * frac)
+                seen += n
+            return float(self.max)
+
     def snapshot(self) -> dict[str, Any]:
         with self._lock:
             return {

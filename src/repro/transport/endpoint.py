@@ -380,9 +380,14 @@ class ManagerEndpoint:
         if proxy is None or proxy.on_stage_complete is None:
             return
         uid, outputs = int(payload[0]), dict(payload[1])
+        exec_s = (
+            float(payload[2])
+            if len(payload) > 2 and payload[2] is not None
+            else None
+        )
         si = self.manager.cw.stage_instances.get(uid)
         if si is not None:
-            proxy.on_stage_complete(si, outputs)
+            proxy.on_stage_complete(si, outputs, exec_s)
         return True  # workers retry this call until acknowledged
 
     def _h_stage_failed(self, peer: Peer, payload: Any):
@@ -681,13 +686,17 @@ class WorkerClient:
 
     # -- runtime -> manager ------------------------------------------------
 
-    def _stage_complete(self, si, outputs: dict[str, Any]) -> None:
+    def _stage_complete(
+        self, si, outputs: dict[str, Any], exec_s: float | None = None
+    ) -> None:
         # The Manager answers with push_request notifies (predictive
         # push) racing ahead of the dependent leases it dispatches.
         # Delivered as a *retried call*: a lost completion wedges the
         # lease until a heartbeat reap, so the worker re-sends until the
         # Manager acknowledges (idempotent — ``_stage_done`` dedups).
-        self._acked("stage_complete", (si.uid, outputs))
+        # ``exec_s`` is the queue-free execution time, the Manager's
+        # health-ratio numerator.
+        self._acked("stage_complete", (si.uid, outputs, exec_s))
 
     def _stage_failed(self, si, error: str) -> None:
         self._acked("stage_failed", (si.uid, str(error)))

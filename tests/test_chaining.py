@@ -541,7 +541,9 @@ def test_host_chained_sink_materializes_for_remote_pull():
     rt = WorkerRuntime(
         0, lanes=(LaneSpec("cpu", 0),), policy="fcfs", chaining=True,
         variant_registry=reg,
-        on_stage_complete=lambda si, outputs: done.append((si, outputs)),
+        on_stage_complete=lambda si, outputs, exec_s=None: done.append(
+            (si, outputs)
+        ),
     )
     rt.start()
     try:

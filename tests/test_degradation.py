@@ -1,0 +1,326 @@
+"""Gray-failure resilience: health-scored dispatch, percentile hedging,
+feasibility-aware overload shedding, and the slack-aware EDF tier —
+unit pieces plus the deterministic simulator mirror."""
+
+import itertools
+import threading
+import time
+
+from repro.core import (
+    AbstractWorkflow,
+    ConcreteWorkflow,
+    DataChunk,
+    LaneSpec,
+    Manager,
+    ManagerConfig,
+    Operation,
+    Stage,
+    VariantRegistry,
+    WorkerRuntime,
+)
+from repro.core.manager import HealthScorer
+from repro.core.scheduling import ReadyScheduler
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.workflow import Operation as Op, OperationInstance, StageInstance
+from repro.serving import GatewayConfig, RequestGateway, SHED
+from repro.telemetry.metrics import Histogram
+
+
+# -- histogram percentiles (the control-loop substrate) ----------------------
+
+
+def test_histogram_percentile_empty_and_overflow():
+    h = Histogram("t", bounds=(1.0, 2.0))
+    assert h.percentile(0.99) is None  # nothing observed yet
+    h.observe(50.0)  # lands in the open overflow bucket
+    # Overflow reports the observed max — never under-reports the tail.
+    assert h.percentile(0.99) == 50.0
+    assert h.percentile(0.0) == 50.0
+
+
+def test_histogram_percentile_interpolates_within_bucket():
+    h = Histogram("t", bounds=(0.0, 10.0))
+    for v in (2.0, 4.0, 6.0, 8.0):
+        h.observe(v)
+    p50 = h.percentile(0.5)
+    # All mass in the (0, 10] bucket: uniform interpolation, mid-mass
+    # sits at half the bucket span.
+    assert 4.0 <= p50 <= 6.0
+    assert h.percentile(1.0) == 10.0
+
+
+# -- health scorer -----------------------------------------------------------
+
+
+def test_health_scorer_converges_and_resets():
+    hs = HealthScorer(alpha=0.5)
+    assert hs.score(0) == 1.0  # nominal until observed
+    for _ in range(12):
+        hs.observe(0, 8.0)  # persistently 8x slow
+    assert hs.score(0) > 6.0
+    assert hs.samples(0) == 12
+    # Weight is the dispatch multiplier: 8x slow => ~1/8 capacity.
+    assert hs.weight(0) < 0.2
+    hs.reset(0)
+    assert hs.score(0) == 1.0 and hs.weight(0) == 1.0
+
+
+def test_health_scorer_heartbeat_jitter_inflates_score():
+    hs = HealthScorer(alpha=1.0)
+    hs.observe(1, 1.0)            # runtime nominal
+    hs.observe_gap(1, 30.0)       # but heartbeats stretched to half the timeout
+    assert hs.score(1, heartbeat_timeout=60.0) > 1.4
+    assert hs.score(1, heartbeat_timeout=10**9) < 1.01  # jitter normalized
+
+
+# -- slack-aware EDF tier ----------------------------------------------------
+
+_uid = itertools.count(70_000)
+
+
+def _mk_task(speedup, deadline=None):
+    si = StageInstance(uid=next(_uid), chunk=DataChunk(0), stage=None)
+    oi = OperationInstance(
+        uid=next(_uid), chunk=DataChunk(0), op=Op("op"), stage_instance=si,
+    )
+    oi.speedup = speedup
+    oi.transfer_impact = 0.2
+    oi.deps = set()
+    oi.deadline = deadline
+    return oi
+
+
+def test_slack_band_defers_far_deadlines_to_batch_tier():
+    s = ReadyScheduler("fcfs", deadline_aware=True,
+                       edf_slack_band=5.0, clock=lambda: 0.0)
+    batch = _mk_task(1.0)                   # no deadline: batch tier
+    far = _mk_task(1.0, deadline=100.0)     # 100s of slack >> 5s band
+    for t in (far, batch):
+        s.push(t)
+    # Far deadline is not at risk: the batch task runs first.
+    assert s.pop("cpu") is batch
+    assert s.stats.slack_deferrals == 1
+    assert s.pop("cpu") is far
+
+
+def test_slack_band_strict_edf_inside_the_band():
+    s = ReadyScheduler("fcfs", deadline_aware=True,
+                       edf_slack_band=5.0, clock=lambda: 0.0)
+    batch = _mk_task(1.0)
+    near = _mk_task(1.0, deadline=2.0)      # inside the 5s band: at risk
+    for t in (batch, near):
+        s.push(t)
+    assert s.pop("cpu") is near
+    assert s.stats.slack_deferrals == 0
+
+
+def test_slack_band_stays_work_conserving_with_empty_batch_tier():
+    s = ReadyScheduler("fcfs", deadline_aware=True,
+                       edf_slack_band=5.0, clock=lambda: 0.0)
+    far = _mk_task(1.0, deadline=100.0)
+    s.push(far)
+    # No batch work to fill the lane: serve the deadline task anyway.
+    assert s.pop("cpu") is far
+    assert s.stats.slack_deferrals == 0
+
+
+def test_no_band_preserves_strict_edf():
+    s = ReadyScheduler("fcfs", deadline_aware=True)
+    batch = _mk_task(1.0)
+    far = _mk_task(1.0, deadline=10**6)
+    for t in (batch, far):
+        s.push(t)
+    assert s.pop("cpu") is far  # band=None: deadlines always preempt
+
+
+# -- manager probation window --------------------------------------------------
+
+
+def test_probation_window_is_one_probe_lease():
+    wf = AbstractWorkflow.chain("serve", [Stage.single(Operation("work"))])
+    mgr = Manager(
+        ConcreteWorkflow(wf),
+        ManagerConfig(window=8, backup_tasks=False, health_scoring=True),
+    )
+    reg = VariantRegistry()
+    reg.register("work", "cpu", lambda ctx: ctx.chunk.chunk_id)
+    rt = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    try:
+        rt.start()
+        mgr.register_worker(rt)
+        st = mgr._workers[0]
+        assert mgr._window_for_locked(0, st) == 8  # nominal: full window
+        st.probation = True
+        # No backlog: benching costs nothing, so no probe is granted —
+        # a probe would convert a fast completion into a slow one.
+        assert mgr._window_for_locked(0, st) == 0
+        # Surplus backlog (nothing else can absorb it): one probe lease.
+        mgr._pending.append(object())
+        assert mgr._window_for_locked(0, st) == 1
+    finally:
+        rt.stop()
+
+
+# -- threaded gateway: feasibility shed --------------------------------------
+
+
+def _serving_registry(delay_s=0.002, stall=None):
+    reg = VariantRegistry()
+
+    def work(ctx):
+        if stall is not None:
+            assert stall.wait(timeout=30.0)
+        time.sleep(delay_s)
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    return reg
+
+
+def _serving_manager(reg, n_workers=1, **cfg_kwargs):
+    wf = AbstractWorkflow.chain("serve", [Stage.single(Operation("work"))])
+    cw = ConcreteWorkflow(wf)
+    mgr = Manager(cw, ManagerConfig(window=4, backup_tasks=False, **cfg_kwargs))
+    workers = []
+    for wid in range(n_workers):
+        rt = WorkerRuntime(wid, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+        rt.start()
+        mgr.register_worker(rt)
+        workers.append(rt)
+    return mgr, workers
+
+
+def test_gateway_sheds_infeasible_deadlines():
+    gate = threading.Event()
+    reg = _serving_registry(delay_s=0.0, stall=gate)
+    mgr, workers = _serving_manager(reg)
+    gw = RequestGateway(
+        mgr,
+        GatewayConfig(max_queue=10_000, max_inflight=1,
+                      shed_feasibility=True, initial_cost_s=0.2),
+        tenants={"t": 1.0},
+    )
+    try:
+        # 0.2s estimated service through one slot against a 300ms
+        # deadline: the first request fits (0.2s), the backlog behind
+        # it cannot land by its deadline and is shed at admission.
+        reqs = [gw.submit("t", DataChunk(i), deadline_ms=300.0)
+                for i in range(8)]
+        assert reqs[0].accepted
+        assert gw.stats.shed_infeasible >= 6
+        assert all(r.state == SHED for r in reqs[2:])
+        # A lax deadline stays feasible despite the backlog.
+        assert gw.submit("t", DataChunk(99), deadline_ms=60_000.0).accepted
+        gate.set()
+        assert gw.close(timeout=60.0)
+        assert gw.stats.completed == gw.stats.admitted
+    finally:
+        gate.set()
+        for rt in workers:
+            rt.stop()
+
+
+def test_gateway_feasibility_off_admits_the_same_backlog():
+    gate = threading.Event()
+    reg = _serving_registry(delay_s=0.0, stall=gate)
+    mgr, workers = _serving_manager(reg)
+    gw = RequestGateway(
+        mgr,
+        GatewayConfig(max_queue=10_000, max_inflight=1, initial_cost_s=0.2),
+        tenants={"t": 1.0},
+    )
+    try:
+        reqs = [gw.submit("t", DataChunk(i), deadline_ms=300.0)
+                for i in range(8)]
+        assert all(r.accepted for r in reqs)  # doomed work admitted anyway
+        assert gw.stats.shed_infeasible == 0
+        gate.set()
+        assert gw.close(timeout=60.0)
+    finally:
+        gate.set()
+        for rt in workers:
+            rt.stop()
+
+
+# -- simulator mirror --------------------------------------------------------
+
+_STRAGGLER = dict(n_nodes=4, n_gpus=0, n_cpu_cores=1, window=12, seed=3)
+_SLOW = {0: (2.0, 10**9, 8.0)}  # node 0 turns 8x slow at t=2s, forever
+_ON = dict(health_scoring=True, hedge_slack=1.5, hedge_min_samples=6)
+
+
+def test_sim_straggler_collapses_without_mitigation():
+    ff = run_simulation(48, SimConfig(**_STRAGGLER))
+    off = run_simulation(48, SimConfig(**_STRAGGLER, slow_between=_SLOW))
+    assert ff.completed_ok and off.completed_ok
+    # One 8x-slow node out of four drags the whole run: the demand
+    # window keeps feeding it work it cannot retire.
+    assert off.tiles_per_second < 0.5 * ff.tiles_per_second
+    assert off.hedged_leases == 0 and off.probations == 0
+
+
+def test_sim_health_scoring_and_hedging_sustain_throughput():
+    ff = run_simulation(48, SimConfig(**_STRAGGLER))
+    on = run_simulation(48, SimConfig(**_STRAGGLER, slow_between=_SLOW, **_ON))
+    assert on.completed_ok
+    # Probation + hedging route around the gray node: >= 0.75x fault-free.
+    assert on.tiles_per_second >= 0.75 * ff.tiles_per_second
+    assert on.probations >= 1
+    assert on.hedged_leases >= 1
+    # The window never heals, so the probation never exits.
+    assert on.probation_exits == 0
+    assert on.tiles == 48  # every tile exactly once
+
+
+def test_sim_probation_exits_when_the_window_heals():
+    heal = run_simulation(
+        48, SimConfig(**_STRAGGLER, slow_between={0: (2.0, 30.0, 8.0)}, **_ON)
+    )
+    assert heal.completed_ok
+    assert heal.probations >= 1
+    assert heal.probation_exits >= 1  # probe ratios recovered: rejoin
+    assert heal.tiles_per_second >= 0.85 * run_simulation(
+        48, SimConfig(**_STRAGGLER)
+    ).tiles_per_second
+
+
+def test_sim_gray_failure_mirror_is_deterministic():
+    cfg = SimConfig(**_STRAGGLER, slow_between=_SLOW, **_ON)
+    a = run_simulation(48, cfg)
+    b = run_simulation(48, cfg)
+    assert (a.tiles_per_second, a.hedged_leases, a.probations,
+            a.probation_exits) == (
+        b.tiles_per_second, b.hedged_leases, b.probations, b.probation_exits)
+
+
+_SERVE = dict(n_nodes=2, n_gpus=0, n_cpu_cores=2, window=4, seed=7,
+              tenants={"a": 1.0, "b": 1.0}, edf=True, gateway_inflight=2,
+              arrival_rate=0.2, serve_duration_s=120.0, deadline_ms=25000.0)
+
+
+def test_sim_feasibility_shed_beats_queue_cap_at_saturation():
+    cap = run_simulation(0, SimConfig(**_SERVE, admission_queue_cap=4))
+    feas = run_simulation(0, SimConfig(**_SERVE, shed_feasibility=True))
+    assert cap.completed_ok and feas.completed_ok
+    cap_miss = cap.deadline_misses / max(cap.completed_requests, 1)
+    feas_miss = feas.deadline_misses / max(feas.completed_requests, 1)
+    # Feasibility shedding rejects the doomed tail at admission: the
+    # admitted miss rate halves (or better) at equal-or-better goodput.
+    assert feas_miss <= 0.5 * cap_miss
+    goodput_cap = cap.completed_requests - cap.deadline_misses
+    goodput_feas = feas.completed_requests - feas.deadline_misses
+    assert goodput_feas >= goodput_cap
+    assert feas.shed_infeasible > 0 and cap.shed_infeasible == 0
+
+
+def test_sim_slack_band_defers_lax_deadlines_for_batch_tenant():
+    mixed = dict(n_nodes=2, n_gpus=0, n_cpu_cores=2, window=4, seed=7,
+                 tenants={"a": 1.0, "b": 1.0}, edf=True, gateway_inflight=4,
+                 arrival_rate=0.1, serve_duration_s=120.0,
+                 deadline_ms={"a": 60000.0})  # tenant b: best-effort batch
+    plain = run_simulation(0, SimConfig(**mixed))
+    band = run_simulation(0, SimConfig(**mixed, edf_slack_band=30.0))
+    assert plain.completed_ok and band.completed_ok
+    assert plain.slack_deferrals == 0
+    assert band.slack_deferrals > 0  # far deadlines yielded to batch work
+    assert band.deadline_misses <= plain.deadline_misses

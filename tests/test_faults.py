@@ -13,6 +13,7 @@ quarantined exactly once.
 
 from __future__ import annotations
 
+import os
 import random
 import threading
 import time
@@ -537,6 +538,14 @@ def _fanin_cluster(
     cfg.update(cfg_kwargs)
     cw = fanin_concrete(n_chunks)
     mgr = Manager(cw, ManagerConfig(**cfg))
+    # CI postmortems: with REPRO_FLIGHT_DIR set, every chaos cluster
+    # records control-plane events and dumps them to JSON files the
+    # workflow uploads as artifacts when the job fails.
+    flight_dir = os.environ.get("REPRO_FLIGHT_DIR")
+    if flight_dir:
+        from repro.telemetry import FlightRecorder
+
+        mgr.recorder = FlightRecorder("chaos", dump_dir=flight_dir)
     endpoint = T.ManagerEndpoint(mgr, FaultyBus(bus_factory(), plan))
     workers, clients = [], []
     for wid in range(n_workers):
@@ -925,6 +934,114 @@ def test_chaos_randomized_sweep(seed):
         assert mgr.run(timeout=120.0)
         _assert_exactly_once(mgr, cw, n_chunks, _CHAOS_POISON)
     finally:
+        for rt in workers:
+            rt.stop()
+        endpoint.bus.close()
+
+
+# --------------------------------------------------------------------------
+# Time-windowed degradation (gray failures): slow_between
+# --------------------------------------------------------------------------
+
+
+def test_slow_window_factor_onsets_and_heals():
+    plan = FaultPlan(seed=1)
+    plan._t0 = time.monotonic() - 5.0  # plan clock reads ~5s
+    assert plan.slow_window_factor((2.0, 10.0, 8.0)) == 8.0  # inside window
+    assert plan.slow_window_factor((6.0, 10.0, 8.0)) == 1.0  # not yet onset
+    assert plan.slow_window_factor((0.0, 5.0, 8.0)) == 1.0   # already healed
+    assert plan.slow_window_factor(None) == 1.0
+    # Unstarted plan: clock pinned at 0 — only a window covering t=0 bites.
+    assert FaultPlan(seed=1).slow_window_factor((0.0, 1.0, 3.0)) == 3.0
+    assert FaultPlan(seed=1).slow_window_factor((1.0, 2.0, 3.0)) == 1.0
+
+
+class _FakeRuntime:
+    def __init__(self, wid):
+        self.worker_id = wid
+
+
+class _FakeOp:
+    stage_instance = None
+
+
+def test_op_hook_slow_between_scopes_to_slow_workers(monkeypatch):
+    plan = FaultPlan(seed=2)
+    plan._t0 = time.monotonic() - 5.0
+    sleeps = []
+    monkeypatch.setattr("repro.faults.plan.time.sleep", sleeps.append)
+    hook = plan.op_hook(
+        slow_factor=0.01, slow_between=(0.0, 10.0, 8.0), slow_workers=(0,)
+    )
+    hook(_FakeRuntime(0), _FakeOp())
+    assert sleeps[-1] == pytest.approx(0.08)  # in window, in scope: 8x
+    hook(_FakeRuntime(1), _FakeOp())
+    assert sleeps[-1] == pytest.approx(0.01)  # out of scope: base delay
+    plan._t0 = time.monotonic() - 20.0        # window passed: healed
+    hook(_FakeRuntime(0), _FakeOp())
+    assert sleeps[-1] == pytest.approx(0.01)
+
+
+def test_wrap_fetch_slow_between_degrades_then_heals(monkeypatch):
+    plan = FaultPlan(seed=3, delay_s=0.05)
+    plan._t0 = time.monotonic() - 1.0
+    sleeps = []
+    monkeypatch.setattr("repro.faults.plan.time.sleep", sleeps.append)
+    fetch = plan.wrap_fetch(lambda k: ("bytes", k), slow_between=(0.0, 2.0, 4.0))
+    assert fetch("k") == ("bytes", "k")     # degraded but correct
+    assert sleeps == [pytest.approx(0.2)]   # delay_s * factor
+    plan._t0 = time.monotonic() - 10.0      # healed storage path
+    assert fetch("k2") == ("bytes", "k2")
+    assert len(sleeps) == 1                 # no new sleep
+
+
+@pytest.mark.chaos
+def test_chaos_straggler_probation_and_rejoin():
+    """Gray-failure acceptance: one worker of four turns 8x slow for a
+    fixed window, then heals.  Health scoring benches it (probation),
+    hedging covers its stuck leases, and after the window passes its
+    probe completions earn it a rejoin — every tile completed exactly
+    once, the straggler never declared dead."""
+    n_chunks = 60
+    plan = FaultPlan(seed=77)
+    hook = plan.op_hook(
+        slow_factor=0.04, slow_between=(0.0, 1.2, 8.0), slow_workers=(0,)
+    )
+    cw, mgr, endpoint, workers, clients = _fanin_cluster(
+        T.InprocBus,
+        plan,
+        n_workers=4,
+        n_chunks=n_chunks,
+        hook=hook,
+        poll_interval=0.05,
+        health_scoring=True,
+        health_alpha=0.5,
+        probation_min_samples=2,
+        hedge_slack=1.5,
+        hedge_min_samples=6,
+    )
+    try:
+        assert endpoint.wait_workers(4, timeout=30.0)
+        plan.start()
+        assert mgr.run(timeout=120.0)
+        # Exactly once: every primary stage done, none quarantined.
+        clones = mgr._clone_map()  # noqa: SLF001
+        primaries = {u for u in cw.stage_instances if u not in clones}
+        assert {u for u in mgr._stage_done if u in primaries} == primaries  # noqa: SLF001
+        assert set(mgr.quarantined()) == set()
+        assert _combine_outputs(mgr, cw) == sorted(
+            expected_combine(i) for i in range(n_chunks)
+        )
+        # The gray worker was benched and later rejoined — never reaped.
+        assert int(mgr.probations) >= 1
+        assert int(mgr.probation_exits) >= 1
+        assert not mgr._workers[0].dead  # noqa: SLF001
+        assert workers[0].alive
+    finally:
+        if mgr.recorder is not None:
+            # Postmortem for CI: probation/hedge timeline either way;
+            # the workflow only uploads it when the job failed.
+            mgr.recorder.dump("chaos straggler postmortem")
         for rt in workers:
             rt.stop()
         endpoint.bus.close()

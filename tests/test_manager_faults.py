@@ -291,3 +291,126 @@ def test_manager_failover_journal_restores_directory_and_pending(tmp_path):
         release.set()
         for rt in workers:
             rt.stop()
+
+
+# -- gray-failure resilience: probation + hedging ---------------------------
+
+
+def test_slandered_worker_rejoins_as_probing_not_full_weight():
+    """Under health scoring, a reaped-but-alive worker's rejoin
+    heartbeat is itself evidence of slowness: it comes back *on
+    probation* (one probe lease) rather than straight to full window —
+    the slander already cost a re-lease; don't hand the suspect a full
+    window until its probes prove it healthy."""
+    reg = VariantRegistry()
+
+    def slow_on_worker0(ctx):
+        if threading.current_thread().name.startswith("worker0-"):
+            time.sleep(0.5)  # outlasts the heartbeat window: slandered
+        else:
+            time.sleep(0.05)  # keep the run alive past the rejoin ping
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", slow_on_worker0)
+    cw = _single_stage_cw(24)
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()
+    w1.start()
+    mgr = Manager(cw, ManagerConfig(window=1, backup_tasks=False,
+                                    heartbeat_timeout=0.25, poll_interval=0.02,
+                                    health_scoring=True))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    try:
+        assert mgr.run(timeout=60.0)
+        done, total = mgr.progress()
+        assert done == total == 24
+        assert mgr.recovered_leases >= 1      # the slander really happened
+        assert int(mgr.probations) >= 1       # ...and the rejoin was probing
+        assert not mgr._workers[0].dead
+    finally:
+        w0.stop()
+        w1.stop()
+
+
+def test_probationed_worker_not_double_drained_by_monitor():
+    """A probing worker's leases were already re-queued at probation
+    entry; the heartbeat monitor must not reap it again for the same
+    slowness (its probe op still outlasts the base timeout).  The 4x
+    probation grace keeps the monitor off its back: exactly one
+    probation, no reap-rejoin churn, the straggler ends alive."""
+    reg = VariantRegistry()
+
+    def perpetually_slow_worker0(ctx):
+        if threading.current_thread().name.startswith("worker0-"):
+            time.sleep(0.5)  # every probe outlasts heartbeat_timeout
+        else:
+            time.sleep(0.05)  # the run must outlast several probe cycles
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", perpetually_slow_worker0)
+    cw = _single_stage_cw(30)
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()
+    w1.start()
+    mgr = Manager(cw, ManagerConfig(window=2, backup_tasks=False,
+                                    heartbeat_timeout=0.25, poll_interval=0.02,
+                                    health_scoring=True))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    try:
+        assert mgr.run(timeout=60.0)
+        done, total = mgr.progress()
+        assert done == total == 30
+        # Exactly one containment: the probation entry.  Repeated
+        # reaping would show up as extra probations (each rejoin
+        # heartbeat re-enters) and extra recovered leases.
+        assert int(mgr.probations) == 1
+        assert not mgr._workers[0].dead
+    finally:
+        w0.stop()
+        w1.stop()
+
+
+def test_hedge_fires_on_p99_straggler_and_twin_wins():
+    """Percentile hedging: a lease stuck far past the stage's measured
+    p99 gets a twin on the healthy worker; the twin's completion
+    finishes the stage (first-completion-wins) while the primary is
+    cancelled — the run never waits out the straggler."""
+    stuck = threading.Event()  # released only in teardown
+    reg = VariantRegistry()
+
+    def work(ctx):
+        if (threading.current_thread().name.startswith("worker0-")
+                and ctx.chunk.chunk_id == 0):
+            assert stuck.wait(timeout=30.0)
+        else:
+            time.sleep(0.002)
+        return ctx.chunk.chunk_id
+
+    reg.register("work", "cpu", work)
+    cw = _single_stage_cw(12)
+    w0 = WorkerRuntime(0, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w1 = WorkerRuntime(1, lanes=(LaneSpec("cpu", 0),), variant_registry=reg)
+    w0.start()
+    w1.start()
+    mgr = Manager(cw, ManagerConfig(window=2, backup_tasks=False,
+                                    heartbeat_timeout=60.0, poll_interval=0.05,
+                                    hedge_slack=1.5, hedge_min_samples=5))
+    mgr.register_worker(w0)
+    mgr.register_worker(w1)
+    try:
+        assert mgr.run(timeout=60.0)
+        done, total = mgr.progress()
+        assert done == total == 12
+        assert int(mgr.hedged_leases) >= 1
+        assert mgr.duplicated_leases >= 1
+        # Chunk 0 completed exactly once — on the hedge twin's worker.
+        assert sum(1 for rt in (w0, w1) for uid in rt.completion_order
+                   if cw.op_instances[uid].chunk.chunk_id == 0) == 1
+    finally:
+        stuck.set()
+        w0.stop()
+        w1.stop()
