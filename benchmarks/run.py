@@ -45,6 +45,8 @@ def main() -> None:
                     help="path for the pr8 bench JSON (default: BENCH_PR8.json)")
     ap.add_argument("--pr9-json", default=None,
                     help="path for the pr9 bench JSON (default: BENCH_PR9.json)")
+    ap.add_argument("--pr10-json", default=None,
+                    help="path for the pr10 bench JSON (default: BENCH_PR10.json)")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import ALL_BENCHES
@@ -54,7 +56,7 @@ def main() -> None:
         if args.only
         else list(ALL_BENCHES)
         + ["staging", "pr2", "pr3", "pr4", "pr5", "pr6", "pr7", "pr8", "pr9",
-           "roofline"]
+           "pr10", "roofline"]
     )
     print("name,value,derived")
     for name in selected:
@@ -92,6 +94,10 @@ def main() -> None:
                 from benchmarks.degradation import bench_pr9
 
                 bench_rows = bench_pr9(args.pr9_json)
+            elif name == "pr10":
+                from benchmarks.eventsim import bench_pr10
+
+                bench_rows = bench_pr10(args.pr10_json)
             elif name == "roofline":
                 from benchmarks.roofline import OUT, rows
 

@@ -26,6 +26,7 @@ from __future__ import annotations
 import bisect
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -33,7 +34,7 @@ import numpy as np
 
 from . import calibration as cal
 from .cost_model import TPU_V5E, op_cost_from_seconds, optimal_micro_batch
-from .network import build_network
+from .network import FluidNetwork, build_network
 from .scheduling import HOST_KIND, ReadyScheduler
 from ..staging import PlacementDirectory
 from .workflow import (
@@ -242,11 +243,22 @@ class SimConfig:
     network: str = "flat"              # "flat" | "fat_tree"
     rack_size: Optional[int] = None    # nodes per rack (default: node.rack_size)
     oversubscription: float = 4.0      # uplink tier oversubscription ratio
+    # Transfer engine for cross-node region traffic (cfg.staging):
+    # "event" (default) moves bytes as fluid flows on first-class
+    # NetworkLink objects — every active flow gets its max-min fair
+    # share and is re-rated on any flow start/finish, so fat-tree
+    # uplink contention is honest (progressive filling).  "tick" keeps
+    # the legacy store-and-forward reservation model (each transfer
+    # holds whole links back-to-back) for differential testing.
+    engine: str = "event"              # "event" | "tick"
     # Rack-locality placement bonus: when scoring a pending stage for a
     # node, bytes held by same-rack siblings count at this weight on
     # top of the node-local fraction (0 = rack-blind placement).  Only
-    # meaningful with staging_locality on a racked network.
-    rack_affinity: float = 0.0
+    # meaningful with staging_locality on a racked network.  The string
+    # "auto" derives the bonus online from measured uplink vs NIC busy
+    # time (congested uplinks -> strong rack preference; idle fabric ->
+    # none), closing the loop the way adaptive_batch does for batching.
+    rack_affinity: float | str = 0.0
     # Data-plane flow control mirror: cap on predictive-push bytes in
     # flight toward any single node's ingress.  A push that would
     # overflow the target's cap is skipped (counted in pushes_capped;
@@ -312,10 +324,23 @@ class SimConfig:
     # (Chrome trace export, tests) works identically on both engines.
     telemetry: bool = False
     trace_sample_rate: float = 1.0
+    # Record a ``(time, kind)`` log of every event the core pops (for
+    # the invariant suite's monotonicity checks); off by default — a
+    # fleet-scale run pops tens of millions of events.
+    record_event_log: bool = False
 
     def __post_init__(self) -> None:
         if self.crash_at is not None and self.fail_node_at is None:
             self.fail_node_at = self.crash_at
+        if self.engine not in ("event", "tick"):
+            raise ValueError(
+                f"SimConfig.engine must be 'event' or 'tick', got {self.engine!r}"
+            )
+        if isinstance(self.rack_affinity, str) and self.rack_affinity != "auto":
+            raise ValueError(
+                "SimConfig.rack_affinity must be a float or 'auto', "
+                f"got {self.rack_affinity!r}"
+            )
 
     @property
     def dl(self) -> bool:
@@ -391,15 +416,26 @@ class SimResult:
     requests: int = 0
     completed_requests: int = 0
     shed_requests: int = 0
-    latency_p50: float = 0.0
-    latency_p99: float = 0.0
+    # Latency/tardiness percentiles are None when the run completed
+    # zero requests (shed-everything or all-infeasible configs) — a
+    # percentile of an empty sample is undefined, not 0.0.
+    latency_p50: Optional[float] = None
+    latency_p99: Optional[float] = None
     deadline_misses: int = 0
-    tardiness_p99: float = 0.0
+    tardiness_p99: Optional[float] = None
     tenant_completed: dict[str, int] = field(default_factory=dict)
     tenant_misses: dict[str, int] = field(default_factory=dict)
     # Telemetry mirror (cfg.telemetry): spans in the runtime Tracer's
     # schema, timestamped on the sim clock (seconds, not epoch).
     spans: list = field(default_factory=list)
+
+    @property
+    def miss_rate(self) -> float:
+        """Deadline-miss fraction of completed requests; 0.0 (not a
+        ZeroDivisionError) when the run completed zero requests."""
+        if self.completed_requests <= 0:
+            return 0.0
+        return self.deadline_misses / self.completed_requests
 
     def utilization(self, cfg: SimConfig) -> dict[str, float]:
         denom = {
@@ -444,6 +480,86 @@ def _pct(sorted_vals: list[float], q: float) -> float:
         return 0.0
     i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
     return sorted_vals[i]
+
+
+class _PendingQueue:
+    """The Manager's ready-unassigned queue at fleet scale.
+
+    Semantically the FIFO list the placement scans index into
+    (``_pick_for_node`` pops arbitrary positions), backed by a deque so
+    the overwhelmingly common head pop is O(1) instead of ``pop(0)``'s
+    O(n).  Two membership counters let callers skip whole-queue scans
+    outright: ``has_deps`` (no queued stage carries deps => the
+    locality/placement scans cannot beat FIFO) and ``has_deadlines``
+    (no queued deadline => the EDF scan cannot fire).
+    """
+
+    __slots__ = ("_q", "_with_deps", "_with_deadlines")
+
+    def __init__(self) -> None:
+        self._q: deque[StageInstance] = deque()
+        self._with_deps = 0
+        self._with_deadlines = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    @property
+    def has_deps(self) -> bool:
+        return self._with_deps > 0
+
+    @property
+    def has_deadlines(self) -> bool:
+        return self._with_deadlines > 0
+
+    def _count(self, si: StageInstance, sign: int) -> None:
+        if si.deps:
+            self._with_deps += sign
+        if si.deadline is not None:
+            self._with_deadlines += sign
+
+    def append(self, si: StageInstance) -> None:
+        self._q.append(si)
+        self._count(si, +1)
+
+    def extend(self, sis) -> None:
+        for si in sis:
+            self.append(si)
+
+    def popleft(self) -> StageInstance:
+        si = self._q.popleft()
+        self._count(si, -1)
+        return si
+
+    def pop_at(self, i: int) -> StageInstance:
+        """Positional pop (the scans' ``pending.pop(i)``); O(min(i, n-i))
+        via deque rotation instead of a list's O(n) shift."""
+        if i == 0:
+            return self.popleft()
+        q = self._q
+        q.rotate(-i)
+        si = q.popleft()
+        q.rotate(i)
+        self._count(si, -1)
+        return si
+
+    def remove_uid(self, uid: int) -> None:
+        """Purge every queued copy of stage ``uid`` (exactly-once path,
+        only reachable when a duplicate can exist)."""
+        if not any(p.uid == uid for p in self._q):
+            return
+        kept = [p for p in self._q if p.uid != uid]
+        self._q.clear()
+        self._with_deps = 0
+        self._with_deadlines = 0
+        for p in kept:
+            self.append(p)
 
 
 @dataclass
@@ -533,7 +649,34 @@ class ClusterSim:
         self._stage_bytes = int(cfg.stage_output_mb * 2**20)
         # (node_id, stage uid) -> time its replica finishes landing; a
         # replica recorded in the directory may still be in flight.
+        # (tick engine only — the event engine gates on waiter lists.)
         self._region_ready: dict[tuple[int, int], float] = {}
+        # Event engine (cfg.engine="event"): cross-node region bytes
+        # move as fluid flows with max-min fair bandwidth sharing; the
+        # network posts itself transfer_progress events on the sim heap.
+        self.fluid: Optional[FluidNetwork] = None
+        if cfg.engine == "event":
+            self.fluid = FluidNetwork(
+                self.net,
+                now=lambda: self.now,
+                post=lambda t, fn: self._post(t, fn, "transfer_progress"),
+            )
+        # (node_id, stage uid) -> callbacks waiting on an in-flight
+        # replica's landing (the fluid engine's gate — completion times
+        # are unknowable at issue under progressive filling).
+        self._region_waiters: dict[tuple[int, int], list[Callable[[], None]]] = {}
+        # Fluid push-credit ledger: bytes in flight toward each target;
+        # credits return in the landing callback and the ledger reads
+        # zero at quiesce (an invariant the property suite pins).
+        self._push_inflight_bytes: dict[int, int] = {}
+        # rack_affinity="auto" cache: (last recompute time, bonus).
+        self._rack_bonus_cache: tuple[float, float] = (-1.0, 0.25)
+        # Event-core bookkeeping: per-kind pop counts, optional
+        # (time, kind) log, and events posted into the past (must stay
+        # 0 — the monotonicity invariant).
+        self.event_counts: dict[str, int] = {}
+        self.event_log: list[tuple[float, str]] = []
+        self.posted_in_past = 0
 
         self.nodes: list[_Node] = []
         for nid in range(self._n_total_nodes):
@@ -560,7 +703,18 @@ class ClusterSim:
             self.nodes.append(node)
 
         # Manager state.
-        self.pending: list[StageInstance] = []   # ready, unassigned (FIFO)
+        self.pending = _PendingQueue()           # ready, unassigned (FIFO)
+        # Min-heap of node ids believed to have lease-window headroom
+        # (validity re-checked at pop): new pending work is offered to
+        # these instead of sweeping all N nodes per dispatch — the
+        # difference between O(1) and O(nodes) per request at fleet
+        # scale.  Min-id pop order preserves the ascending sweep order.
+        self._room_heap: list[int] = []
+        self._room_set: set[int] = set()
+        # True once any path that can duplicate a lease has run (hedge/
+        # backup clones, probation or drain re-queues): gates the
+        # O(nodes) exactly-once purge sweeps in _finish_stage.
+        self._dup_possible = False
         self.stage_done: set[int] = set()
         self.op_done: set[int] = set()
         self.cancelled_ops: set[int] = set()
@@ -605,8 +759,8 @@ class ClusterSim:
         # queues, admission, inflight window).
         self.serving = cfg.arrival_rate is not None
         self._serve_tenants = dict(cfg.tenants) or {"t0": 1.0}
-        self._serve_queues: dict[str, list[_SimRequest]] = {
-            t: [] for t in self._serve_tenants
+        self._serve_queues: dict[str, deque[_SimRequest]] = {
+            t: deque() for t in self._serve_tenants
         }
         self._serve_last_finish: dict[str, float] = {
             t: 0.0 for t in self._serve_tenants
@@ -696,11 +850,17 @@ class ClusterSim:
 
     # -- event engine -----------------------------------------------------------
 
-    def _post(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), fn))
+    def _post(self, t: float, fn: Callable[[], None], kind: str = "ctrl") -> None:
+        if t < self.now - 1e-9:
+            self.posted_in_past += 1  # invariant breach (never clamped)
+        heapq.heappush(self._events, (t, next(self._seq), fn, kind))
 
     def run(self, max_time: float = 10**9) -> SimResult:
         if self.serving:
+            # Seed the room heap: every live node starts with window
+            # headroom (the joiner registers itself at its join event).
+            for node in self.nodes:
+                self._note_room(node)
             self._schedule_arrivals()
         else:
             self.pending.extend(self.cw.ready_stage_instances(self.stage_done))
@@ -708,27 +868,33 @@ class ClusterSim:
                 self._fill_window(node)
         if self.cfg.fail_node_at is not None:
             nid, t = self.cfg.fail_node_at
-            self._post(t, lambda: self._kill_node(nid))
+            self._post(t, lambda: self._kill_node(nid), "fault")
         if self.cfg.drain_node_at is not None:
             nid, t = self.cfg.drain_node_at
-            self._post(t, lambda: self._drain_node(nid))
+            self._post(t, lambda: self._drain_node(nid), "drain")
         if self.cfg.join_node_at is not None:
-            self._post(self.cfg.join_node_at, self._join_node)
+            self._post(self.cfg.join_node_at, self._join_node, "join")
         if self.cfg.hedge_slack is not None:
-            self._post(self._hedge_interval, self._hedge_tick)
+            self._post(self._hedge_interval, self._hedge_tick, "heartbeat")
         if self.cfg.partition is not None:
             # Heal event: partitioned nodes resume pulling leases.
             _, _, t_end = self.cfg.partition
             self._post(
                 t_end,
                 lambda: [self._fill_window(n) for n in self.nodes],
+                "fault",
             )
+        record = self.cfg.record_event_log
+        counts = self.event_counts
         while self._events:
-            t, _, fn = heapq.heappop(self._events)
+            t, _, fn, kind = heapq.heappop(self._events)
             if t > max_time:
                 break
             self.now = t
             self.n_events += 1
+            counts[kind] = counts.get(kind, 0) + 1
+            if record:
+                self.event_log.append((t, kind))
             fn()
         return self._result()
 
@@ -784,10 +950,10 @@ class ClusterSim:
                 requests=len(self._serve_reqs),
                 completed_requests=len(done_reqs),
                 shed_requests=sum(1 for r in self._serve_reqs if r.shed),
-                latency_p50=_pct(lats, 0.50),
-                latency_p99=_pct(lats, 0.99),
+                latency_p50=_pct(lats, 0.50) if lats else None,
+                latency_p99=_pct(lats, 0.99) if lats else None,
                 deadline_misses=sum(1 for t in tardy if t > 0),
-                tardiness_p99=_pct(tardy, 0.99),
+                tardiness_p99=_pct(tardy, 0.99) if tardy else None,
                 tenant_completed=tenant_done,
                 tenant_misses=tenant_miss,
             )
@@ -862,7 +1028,7 @@ class ClusterSim:
                 deadline=deadline,
             )
             self._serve_reqs.append(req)
-            self._post(a.t, lambda req=req: self._serve_arrival(req))
+            self._post(a.t, lambda req=req: self._serve_arrival(req), "arrival")
 
     def _serve_arrival(self, req: _SimRequest) -> None:
         """Gateway ingest: admit-or-shed, stamp SFQ tags, dispatch."""
@@ -889,7 +1055,7 @@ class ClusterSim:
         req.start_tag = start
         req.finish_tag = start + cost / max(ts_w, 1e-9)
         self._serve_last_finish[req.tenant] = req.finish_tag
-        self._serve_queues.setdefault(req.tenant, []).append(req)
+        self._serve_queues.setdefault(req.tenant, deque()).append(req)
         self._serve_queued += 1
         if self.tracer is not None:
             root = self.tracer.start_trace()
@@ -917,7 +1083,7 @@ class ClusterSim:
                     best = tenant
             if best is None:
                 return
-            req = self._serve_queues[best].pop(0)
+            req = self._serve_queues[best].popleft()
             self._serve_vtime = max(self._serve_vtime, req.start_tag)
             self._serve_queued -= 1
             self._serve_inflight += 1
@@ -949,8 +1115,7 @@ class ClusterSim:
             for si in sis:
                 if si.deps.issubset(self.stage_done):
                     self.pending.append(si)
-            for node in self.nodes:
-                self._fill_window(node)
+            self._offer_pending()
 
     def _serve_complete_stage(self, uid: int) -> None:
         req = self._serve_terminal.pop(uid, None)
@@ -1023,6 +1188,7 @@ class ClusterSim:
         if not node.alive:
             return
         node.alive = False
+        self._dup_possible = True  # re-queues can double-lease a stage
         self.staging_dir.drop_worker(nid)
         for uid in sorted(node.leased):
             if uid in self.stage_done:
@@ -1138,13 +1304,42 @@ class ClusterSim:
             self._post(
                 self.now + self.cfg.dispatch_latency + rtt,
                 lambda si=si, node=node: self._start_stage(node, si),
+                "lease",
             )
         self._maybe_backup_tasks()
+        if node.alive and len(node.leased) < self._window_for(node):
+            self._note_room(node)
+
+    def _note_room(self, node: _Node) -> None:
+        """Register ``node`` as having lease-window headroom; validity
+        is re-checked when _offer_pending pops it."""
+        nid = node.node_id
+        if nid in self._room_set or not node.alive:
+            return
+        self._room_set.add(nid)
+        heapq.heappush(self._room_heap, nid)
+
+    def _offer_pending(self) -> None:
+        """Offer queued work to the nodes known to have window headroom
+        — O(log nodes) per offer instead of the O(nodes) sweep.  With
+        health scoring a probation node's window opens and closes with
+        the *global* backlog size, which room tracking can't see, so
+        those (small-fleet) configs keep the full sweep."""
+        if not self.pending:
+            return
+        if self.cfg.health_scoring:
+            for node in self.nodes:
+                self._fill_window(node)
+            return
+        while self.pending and self._room_heap:
+            nid = heapq.heappop(self._room_heap)
+            self._room_set.discard(nid)
+            self._fill_window(self.nodes[nid])
 
     def _pick_for_node(self, node: _Node) -> StageInstance:
         """FIFO, with a locality preference: a stage whose upstream ran
         on this node keeps its data local (files / in-memory store)."""
-        if self.cfg.edf:
+        if self.cfg.edf and self.pending.has_deadlines:
             # EDF tier above the placement policies: the earliest
             # deadline anywhere in the queue outranks locality and FIFO
             # order — urgency first, affinity among the unhurried rest.
@@ -1154,32 +1349,66 @@ class ClusterSim:
                 if d is not None and (best_d is None or d < best_d):
                     best_i, best_d = i, d
             if best_i >= 0:
-                return self.pending.pop(best_i)
+                return self.pending.pop_at(best_i)
+        if not self.pending.has_deps:
+            # Every queued stage is dep-less: no locality/placement
+            # scan can beat FIFO order, so skip them outright (the
+            # common serving-mode state — O(1) per lease at any scale).
+            return self.pending.popleft()
         if self.cfg.staging:
             if not self.cfg.staging_locality:
-                return self.pending.pop(0)  # pure demand-driven baseline
+                return self.pending.popleft()  # pure demand-driven baseline
             # Directory-driven: lease the instance with the largest
             # fraction of its input bytes already staged on this node
             # (plus the rack-locality bonus: same-rack replicas avoid
             # the oversubscribed uplinks, so they count at
             # cfg.rack_affinity weight).
             best_i, best_f = 0, 0.0
+            bonus = self._rack_bonus()
             for i, si in enumerate(self.pending):
                 if not si.deps:
                     continue
                 keys = [("stage", d) for d in si.deps]
                 f = self.staging_dir.placement_score(
-                    node.node_id, keys, self.cfg.rack_affinity
+                    node.node_id, keys, bonus
                 )
                 if f > best_f:
                     best_i, best_f = i, f
-            return self.pending.pop(best_i)
+            return self.pending.pop_at(best_i)
         for i, si in enumerate(self.pending):
             if si.deps and all(
                 self.stage_node.get(d) == node.node_id for d in si.deps
             ):
-                return self.pending.pop(i)
-        return self.pending.pop(0)
+                return self.pending.pop_at(i)
+        return self.pending.popleft()
+
+    def _rack_bonus(self) -> float:
+        """Effective rack-locality placement bonus.
+
+        A numeric ``cfg.rack_affinity`` is used as-is.  ``"auto"``
+        derives it online from the fabric itself: the ratio of per-link
+        uplink busy time to per-link NIC busy time — congested uplinks
+        push the bonus toward 1 (strongly prefer same-rack replicas),
+        an idle or flat fabric pushes it to ~0.  Before any traffic has
+        flowed the warm-up default is a mild 0.25.
+        """
+        ra = self.cfg.rack_affinity
+        if ra != "auto":
+            return ra
+        n_up = self.net.n_uplinks()
+        if n_up == 0:
+            return 0.0  # flat fabric: rack preference is meaningless
+        t_cached, bonus = self._rack_bonus_cache
+        # nic_busy_s() walks all 2N NIC links — refresh at most once
+        # per 50 simulated ms so fleet-scale scans stay O(1) amortized.
+        if self.now < t_cached + 0.05 and t_cached >= 0.0:
+            return bonus
+        up = self.net.uplink_busy_s() / n_up
+        nic = self.net.nic_busy_s() / max(2 * self._n_total_nodes, 1)
+        total = up + nic
+        bonus = 0.25 if total <= 0.0 else up / total
+        self._rack_bonus_cache = (self.now, bonus)
+        return bonus
 
     def _dep_satisfied(self, deps: set[int]) -> bool:
         # A cancelled op's stage was completed by a backup twin, so its
@@ -1190,6 +1419,9 @@ class ClusterSim:
 
     def _start_stage(self, node: _Node, si: StageInstance) -> None:
         if not node.alive or si.uid in self.stage_done:
+            return
+        if self.fluid is not None and self.cfg.staging and si.deps:
+            self._start_stage_fluid(node, si)
             return
         delay = self._staging_delay(node, si)
         if delay > 0.0:
@@ -1208,9 +1440,125 @@ class ClusterSim:
             self._post(
                 self.now + delay,
                 lambda node=node, si=si: self._start_stage_ops(node, si),
+                "transfer_progress",
             )
             return
         self._start_stage_ops(node, si)
+
+    def _start_stage_fluid(self, node: _Node, si: StageInstance) -> None:
+        """Event-engine input staging: the stage's missing inputs move
+        as fluid flows and the stage's source ops are gated on the last
+        landing callback instead of an analytic completion time (under
+        progressive filling a flow's finish time is unknowable at issue
+        — every later flow start/finish re-rates it)."""
+        state = {"waiting": 1, "t0": self.now}  # 1 = the issuing token
+
+        def arm() -> None:
+            state["waiting"] -= 1
+            if state["waiting"]:
+                return
+            delay = self.now - state["t0"]
+            if delay > 0.0:
+                self.transfer_wait += delay
+                self._t_span(
+                    "region:pull",
+                    self._t_ctx(si),
+                    cat="region",
+                    dur=delay,
+                    tid=f"n{node.node_id}",
+                    args={"uid": si.uid, "deps": len(si.deps)},
+                    ts=state["t0"],
+                )
+            self._start_stage_ops(node, si)
+
+        remote: list[int] = []
+        for d in sorted(si.deps):
+            if self.staging_dir.holders(("stage", d)).get(node.node_id):
+                self.staged_bytes_avoided += self._stage_bytes
+                # The replica may still be landing from an earlier copy
+                # (pull or push): subscribe to its waiter list.
+                w = self._region_waiters.get((node.node_id, d))
+                if w is not None:
+                    state["waiting"] += 1
+                    w.append(arm)
+            else:
+                remote.append(d)
+        if remote:
+            # One coalesced pull request (or one per key without
+            # batch_prefetch) pays the control round-trip before the
+            # copies can start — same rule as the tick path.
+            n_msgs = 1 if self.cfg.batch_prefetch else len(remote)
+            rtt = sum(self._control_rtt() for _ in range(n_msgs))
+            self.rpc_wait += rtt
+            for d in remote:
+                state["waiting"] += 1
+                self._fluid_region_copy(node, d, rtt, arm)
+        arm()  # consume the issuing token
+
+    def _fluid_region_copy(
+        self,
+        node: _Node,
+        dep_uid: int,
+        delay: float,
+        on_land: Optional[Callable[[], None]],
+    ) -> None:
+        """Start one cross-node region copy as a fluid flow toward
+        ``node`` after ``delay`` (the pull request's control latency).
+        The directory learns of the replica at issue time (the tick
+        engine's rule): later consumers find it and gate on the waiter
+        list this method registers."""
+        key = ("stage", dep_uid)
+        n = self._stage_bytes
+        self.cross_node_bytes += n
+        src = self._pick_holder(node.node_id, key)
+        self.staging_dir.record(node.node_id, key, n)
+        waiters = self._region_waiters.setdefault(
+            (node.node_id, dep_uid), []
+        )
+        if on_land is not None:
+            waiters.append(on_land)
+
+        def land(t: float, retried: bool = False) -> None:
+            if (
+                not retried
+                and self.cfg.corrupt_rate > 0.0
+                and self._fault_rng.random() < self.cfg.corrupt_rate
+            ):
+                # CRC mismatch on landing: re-issue once (waiters stay
+                # subscribed until the clean copy lands).
+                self.corrupt_detected += 1
+                self.cross_node_bytes += n
+                self._fluid_start(
+                    src, node.node_id, n, lambda t2: land(t2, True)
+                )
+                return
+            for w in self._region_waiters.pop((node.node_id, dep_uid), ()):
+                w()
+
+        if delay > 0.0:
+            self._post(
+                self.now + delay,
+                lambda: self._fluid_start(src, node.node_id, n, land),
+                "transfer_progress",
+            )
+        else:
+            self._fluid_start(src, node.node_id, n, land)
+
+    def _fluid_start(
+        self,
+        src: Optional[int],
+        dst: int,
+        n: int,
+        on_done: Callable[[float], None],
+    ) -> None:
+        """Inject one flow, booking the same relay/direct byte counters
+        the tick engine's _raw_transfer does."""
+        if self.cfg.direct_transfer:
+            self.direct_region_bytes += n
+            self.fluid.start(src, dst, n, on_done)
+        else:
+            self.relay_region_bytes += n
+            self.fluid.start(src, dst, n, on_done, relay=True)
 
     def _staging_delay(self, node: _Node, si: StageInstance) -> float:
         """Seconds until ``si``'s missing inputs are staged onto ``node``.
@@ -1339,7 +1687,7 @@ class ClusterSim:
     def _enqueue_op(self, node: _Node, oi: OperationInstance) -> None:
         gate = node.io_ready.get(oi.chunk.chunk_id, 0.0)
         if not oi.deps and gate > self.now:
-            self._post(gate, lambda: self._enqueue_op_now(node, oi))
+            self._post(gate, lambda: self._enqueue_op_now(node, oi), "io")
         else:
             self._enqueue_op_now(node, oi)
 
@@ -1448,7 +1796,7 @@ class ClusterSim:
                 self._finish_op(node, lane, oi, release_lane=False)
             self._finish_op(node, lane, ois[-1])
 
-        self._post(self.now + duration, finish)
+        self._post(self.now + duration, finish, "op_done")
 
     def _duration(self, node: _Node, lane: _Lane, oi: OperationInstance) -> float:
         cpu_s = self._cpu_seconds(oi) * node.slow
@@ -1561,10 +1909,12 @@ class ClusterSim:
         # A probation re-queue can leave a second copy of this stage
         # leased elsewhere or still pending; first completion wins, so
         # purge every other copy (exactly-once, no leaked lease slots).
-        for n in self.nodes:
-            n.leased.discard(si.uid)
-        if self.pending and any(p.uid == si.uid for p in self.pending):
-            self.pending = [p for p in self.pending if p.uid != si.uid]
+        # No duplicating path has run => the O(nodes) sweep is skipped
+        # (the fleet-scale fast path: completions are the hot event).
+        if self._dup_possible:
+            for n in self.nodes:
+                n.leased.discard(si.uid)
+            self.pending.remove_uid(si.uid)
         t0 = self._lease_t0.pop(si.uid, None)
         if t0 is not None:
             # Completed stage durations feed the hedging percentile
@@ -1612,18 +1962,20 @@ class ClusterSim:
                 for n in self.nodes:
                     n.leased.discard(twin_uid)
                 self._cancel_ops(self.cw.stage_instances[twin_uid])
-        # Unlock downstream stage instances.
-        leased_now = {u for n in self.nodes for u in n.leased}
-        pending_now = {p.uid for p in self.pending}
-        for dep_uid in sorted(effective.dependents):
-            dsi = self.cw.stage_instances[dep_uid]
-            if (
-                dsi.deps.issubset(self.stage_done)
-                and dep_uid not in self.stage_done
-                and dep_uid not in leased_now
-                and dep_uid not in pending_now
-            ):
-                self.pending.append(dsi)
+        # Unlock downstream stage instances (set builds skipped when
+        # the stage has none — the serving-monolithic hot path).
+        if effective.dependents:
+            leased_now = {u for n in self.nodes for u in n.leased}
+            pending_now = {p.uid for p in self.pending}
+            for dep_uid in sorted(effective.dependents):
+                dsi = self.cw.stage_instances[dep_uid]
+                if (
+                    dsi.deps.issubset(self.stage_done)
+                    and dep_uid not in self.stage_done
+                    and dep_uid not in leased_now
+                    and dep_uid not in pending_now
+                ):
+                    self.pending.append(dsi)
         if self.serving:
             self._serve_complete_stage(effective.uid)
         self._fill_window(node)
@@ -1654,11 +2006,12 @@ class ClusterSim:
             target = None
             if is_ready:
                 best_f = -1.0
+                bonus = self._rack_bonus()
                 for cand in self.nodes:
                     if not cand.alive or len(cand.leased) >= self.cfg.window:
                         continue
                     f = self.staging_dir.placement_score(
-                        cand.node_id, keys, self.cfg.rack_affinity
+                        cand.node_id, keys, bonus
                     )
                     if f > best_f:
                         target, best_f = cand, f
@@ -1699,6 +2052,9 @@ class ClusterSim:
                     # (the dependent's own pull is the backstop).
                     self.pushes_capped += 1
                     continue
+                if self.fluid is not None:
+                    self._fluid_push(si, target, d)
+                    continue
                 src = self._pick_holder(target.node_id, ("stage", d))
                 self.cross_node_bytes += n
                 done_t = self._transfer_into(target, self.now, n, src=src)
@@ -1719,6 +2075,55 @@ class ClusterSim:
                     args={"key": d, "target": target.node_id, "bytes": n},
                 )
 
+    def _fluid_push(self, si: StageInstance, target: _Node, dep_uid: int) -> None:
+        """Event-engine predictive push: the region flows toward the
+        predicted holder under fair sharing; the in-flight byte credit
+        returns in the landing callback (not at an analytic finish
+        time), so the ledger reads true occupancy at every instant."""
+        key = ("stage", dep_uid)
+        n = self._stage_bytes
+        src = self._pick_holder(target.node_id, key)
+        self.cross_node_bytes += n
+        self.staging_dir.record(target.node_id, key, n)
+        self._region_waiters.setdefault((target.node_id, dep_uid), [])
+        cap = self.cfg.push_inflight_cap_bytes
+        if cap is not None:
+            self._push_inflight_bytes[target.node_id] = (
+                self._push_inflight_bytes.get(target.node_id, 0) + n
+            )
+        self.pushes += 1
+        self.pushed_bytes += n
+        t0 = self.now
+        ctx = self._t_ctx(si)
+
+        def land(t: float, retried: bool = False) -> None:
+            if (
+                not retried
+                and self.cfg.corrupt_rate > 0.0
+                and self._fault_rng.random() < self.cfg.corrupt_rate
+            ):
+                self.corrupt_detected += 1
+                self.cross_node_bytes += n
+                self._fluid_start(
+                    src, target.node_id, n, lambda t2: land(t2, True)
+                )
+                return
+            if cap is not None:
+                self._push_inflight_bytes[target.node_id] -= n
+            for w in self._region_waiters.pop((target.node_id, dep_uid), ()):
+                w()
+            self._t_span(
+                "region:push",
+                ctx,
+                cat="region",
+                dur=t - t0,
+                tid=f"n{src}" if src is not None else "manager",
+                args={"key": dep_uid, "target": target.node_id, "bytes": n},
+                ts=t0,
+            )
+
+        self._fluid_start(src, target.node_id, n, land)
+
     def _push_admit(self, target_nid: int, nbytes: int) -> bool:
         """Flow-control admit rule, mirroring the Manager's: a push is
         admitted while the target's in-flight pushed bytes stay within
@@ -1728,6 +2133,11 @@ class ClusterSim:
         cap = self.cfg.push_inflight_cap_bytes
         if cap is None:
             return True
+        if self.fluid is not None:
+            # Event engine: the ledger is exact — credits return in
+            # the landing callbacks, no lazy time-based cleaning.
+            inflight = self._push_inflight_bytes.get(target_nid, 0)
+            return inflight == 0 or inflight + nbytes <= cap
         q = self._push_inflight.setdefault(target_nid, [])
         q[:] = [(t, b) for (t, b) in q if t > self.now]
         inflight = sum(b for _, b in q)
@@ -1801,6 +2211,7 @@ class ClusterSim:
         nid = node.node_id
         if self._node_probation.get(nid):
             return
+        self._dup_possible = True  # re-queues can double-lease a stage
         self._node_probation[nid] = True
         self._node_probes[nid] = 0
         self._node_hedged[nid] = 0
@@ -1903,10 +2314,13 @@ class ClusterSim:
                         self._enter_probation(node)
                         break  # this node's leases were just re-queued
         if self._events or self.pending or any(n.leased for n in self.nodes):
-            self._post(self.now + self._hedge_interval, self._hedge_tick)
+            self._post(
+                self.now + self._hedge_interval, self._hedge_tick, "heartbeat"
+            )
 
     def _issue_clone(self, node: _Node, si: StageInstance) -> None:
         """Lease a backup/hedge twin of ``si`` onto ``node``."""
+        self._dup_possible = True
         clone = self.cw._new_stage_instance(si.chunk, si.stage)  # noqa: SLF001
         self._clone_of[clone.uid] = si.uid
         self._clones.setdefault(si.uid, []).append(clone.uid)
@@ -1916,6 +2330,7 @@ class ClusterSim:
         self._post(
             self.now + self.cfg.dispatch_latency,
             lambda node=node, clone=clone: self._start_stage(node, clone),
+            "lease",
         )
 
     # -- fault tolerance / stragglers ---------------------------------------------
@@ -1923,6 +2338,7 @@ class ClusterSim:
     def _kill_node(self, nid: int) -> None:
         node = self.nodes[nid]
         node.alive = False
+        self._dup_possible = True  # re-queues can double-lease a stage
         self.staging_dir.drop_worker(nid)  # its staged replicas are gone
         lost = sorted(uid for uid in node.leased if uid not in self.stage_done)
         node.leased.clear()
@@ -1944,7 +2360,7 @@ class ClusterSim:
             for other in self.nodes:
                 self._fill_window(other)
 
-        self._post(self.now + self.cfg.heartbeat_timeout, release)
+        self._post(self.now + self.cfg.heartbeat_timeout, release, "heartbeat")
 
     def _maybe_backup_tasks(self) -> None:
         """Tail-of-run straggler mitigation: when the global queue is

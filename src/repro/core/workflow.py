@@ -209,9 +209,6 @@ class DataChunk:
         return hash(self.chunk_id)
 
 
-_instance_counter = itertools.count()
-
-
 @dataclass
 class OperationInstance:
     """(data chunk, operation) tuple — the WRM scheduling unit."""
@@ -274,6 +271,11 @@ class ConcreteWorkflow:
         self.abstract = abstract
         self.stage_instances: dict[int, StageInstance] = {}
         self.op_instances: dict[int, OperationInstance] = {}
+        # Instance uids are scoped to this workflow (they key every
+        # scheduler map).  A per-workflow counter — not a module-global
+        # one — makes two same-seed runs allocate identical uids, which
+        # the event core's bit-identical-replay guarantee relies on.
+        self._uid_counter = itertools.count()
 
     # -- instantiation -----------------------------------------------------
 
@@ -356,13 +358,13 @@ class ConcreteWorkflow:
     # -- graph construction helpers ----------------------------------------
 
     def _new_stage_instance(self, chunk: DataChunk, stage: Stage) -> StageInstance:
-        si = StageInstance(uid=next(_instance_counter), chunk=chunk, stage=stage)
+        si = StageInstance(uid=next(self._uid_counter), chunk=chunk, stage=stage)
         self.stage_instances[si.uid] = si
         # Expand the stage's internal op DAG into operation instances.
         by_name: dict[str, OperationInstance] = {}
         for op in stage.ops:
             oi = OperationInstance(
-                uid=next(_instance_counter), chunk=chunk, op=op, stage_instance=si
+                uid=next(self._uid_counter), chunk=chunk, op=op, stage_instance=si
             )
             self.op_instances[oi.uid] = oi
             si.op_instances.append(oi)

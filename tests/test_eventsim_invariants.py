@@ -1,0 +1,371 @@
+"""Invariant/property tests for the event-driven simulator core.
+
+The fluid-flow engine (`repro.core.network.FluidNetwork`) is exercised
+two ways: directly, against a hand-stepped clock harness (rates,
+fair-share, conservation checked after *every* event), and end-to-end
+through `ClusterSim` runs that pin the system-level invariants the
+differential parity suite cannot see — exactly-once stage completion
+under injected crash/partition, the push-credit ledger returning to
+zero at quiesce, and monotone event timestamps.
+
+`hypothesis` is not in the container, so "property-based" here means
+seed-pinned loops over randomized-but-reproducible inputs.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+
+import pytest
+
+from repro.core.network import (
+    _GB,
+    FatTreeNetwork,
+    FlatNetwork,
+    FluidNetwork,
+)
+from repro.core.simulator import ClusterSim, SimConfig, run_simulation
+from repro.core.workflow import AbstractWorkflow, Operation, Stage
+
+SEED = 7
+CAP_EPS = 1e-6  # relative slack on capacity comparisons (float dust)
+
+
+# --------------------------------------------------------------------------
+# Direct FluidNetwork harness: a manual event clock so every re-rate and
+# completion can be inspected mid-flight.
+# --------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self, topo) -> None:
+        self.t = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.net = FluidNetwork(topo, now=lambda: self.t, post=self._post)
+
+    def _post(self, t: float, fn) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def run(self, check=None) -> None:
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            assert t >= self.t - 1e-9, "timer posted into the past"
+            self.t = max(self.t, t)
+            fn()
+            if check is not None:
+                check()
+
+
+def _links_of(topo) -> list:
+    links = list(topo.ingress) + list(topo.egress) + [topo.coordinator]
+    links += list(getattr(topo, "uplinks_up", ())) + list(
+        getattr(topo, "uplinks_down", ())
+    )
+    return links
+
+
+def _assert_rates_within_capacity(net: FluidNetwork) -> None:
+    for link in _links_of(net.topo):
+        cap = link.gb_s * _GB
+        assert net.link_rate(link) <= cap * (1.0 + CAP_EPS), link.name
+
+
+def test_fluid_equal_share_when_symmetric() -> None:
+    """Three flows out of the same NIC: each gets exactly cap/3 and the
+    link is fully used — the max-min fair fixed point for symmetric
+    demand."""
+    topo = FlatNetwork(4, 1.0)
+    clk = _Clock(topo)
+    landed: list[float] = []
+    for dst in (1, 2, 3):
+        clk.net.start(0, dst, 3 * 2**30, landed.append)
+    cap = 1.0 * _GB
+    rates = [f.rate for f in clk.net.flows.values()]
+    assert len(rates) == 3
+    for r in rates:
+        assert r == pytest.approx(cap / 3.0, rel=1e-9)
+    assert clk.net.link_rate(topo.egress[0]) == pytest.approx(cap, rel=1e-9)
+    clk.run(check=lambda: _assert_rates_within_capacity(clk.net))
+    # 3 x 3 GiB through a 1 GiB/s NIC: all three finish together at 9 s.
+    assert landed == pytest.approx([9.0, 9.0, 9.0], rel=1e-6)
+    assert clk.net.n_active == 0
+
+
+def test_fluid_rerate_on_finish_frees_bandwidth() -> None:
+    """Progressive filling re-rates survivors the instant a flow
+    finishes: a 1 GiB and a 3 GiB flow sharing a 1 GiB/s NIC finish at
+    2 s and 4 s (each runs at cap/2 until t=2, the big one at full cap
+    after) — the store-and-forward model would say 1 s and 4 s."""
+    topo = FlatNetwork(3, 1.0)
+    clk = _Clock(topo)
+    done: dict[int, float] = {}
+    clk.net.start(0, 1, 1 * 2**30, lambda t: done.setdefault(1, t))
+    clk.net.start(0, 2, 3 * 2**30, lambda t: done.setdefault(3, t))
+    clk.run(check=lambda: _assert_rates_within_capacity(clk.net))
+    assert done[1] == pytest.approx(2.0, rel=1e-6)
+    assert done[3] == pytest.approx(4.0, rel=1e-6)
+
+
+def test_fluid_relay_route_charges_coordinator_twice() -> None:
+    """The relay route's coordinator NIC carries every payload byte in
+    and back out (weight 2.0): a lone relayed copy through an
+    equal-capacity coordinator runs at cap/2."""
+    topo = FlatNetwork(2, 1.0)
+    clk = _Clock(topo)
+    done: list[float] = []
+    clk.net.start(0, 1, 2**30, done.append, relay=True)
+    (flow,) = clk.net.flows.values()
+    assert flow.rate == pytest.approx(0.5 * _GB, rel=1e-9)
+    clk.run()
+    assert done == pytest.approx([2.0], rel=1e-6)
+    # The coordinator link was charged two bytes per payload byte.
+    assert topo.coordinator.bytes_total == 2 * 2**30
+
+
+def test_fluid_same_node_copy_is_instant_and_free() -> None:
+    topo = FlatNetwork(2, 1.0)
+    clk = _Clock(topo)
+    done: list[float] = []
+    fid = clk.net.start(1, 1, 2**30, done.append)
+    assert fid is None
+    assert done == [0.0]
+    assert clk.net.n_active == 0
+    assert clk.net.bytes_injected == 0
+
+
+def test_fluid_rates_and_conservation_random_fat_tree() -> None:
+    """Seed-pinned property sweep: random flows over an oversubscribed
+    fat tree, with randomized start times.  After every event: no link
+    over capacity, conservation error ~0.  At quiesce: every byte
+    injected was delivered."""
+    rng = random.Random(SEED)
+    topo = FatTreeNetwork(16, 1.0, rack_size=4, oversubscription=8.0)
+    clk = _Clock(topo)
+    landed: list[float] = []
+
+    def check() -> None:
+        _assert_rates_within_capacity(clk.net)
+        assert abs(clk.net.conservation_error()) < 1.0
+
+    def inject(n_left: int) -> None:
+        if n_left <= 0:
+            return
+        src, dst = rng.sample(range(16), 2)
+        nbytes = rng.randrange(1 * 2**20, 256 * 2**20)
+        clk.net.start(
+            src, dst, nbytes, landed.append, relay=rng.random() < 0.25
+        )
+        # Stagger the next injection so flows overlap mid-flight.
+        clk._post(clk.t + rng.random() * 0.05, lambda: inject(n_left - 1))
+
+    inject(40)
+    clk.run(check=check)
+    assert len(landed) == 40
+    assert clk.net.n_active == 0
+    assert clk.net.in_flight_bytes() == 0.0
+    assert clk.net.bytes_injected == clk.net.bytes_delivered > 0
+    assert clk.net.conservation_error() == pytest.approx(0.0, abs=1e-6)
+    # Timestamps of landings are the event clock: monotone.
+    assert landed == sorted(landed)
+
+
+def test_fluid_uplink_is_the_bottleneck_cross_rack() -> None:
+    """Cross-rack flows on an 8:1 oversubscribed fabric are capped by
+    the uplink, not the NICs — the honest contention estimate the
+    store-and-forward model could only approximate."""
+    topo = FatTreeNetwork(8, 1.0, rack_size=4, oversubscription=8.0)
+    clk = _Clock(topo)
+    # rack0 -> rack1, four concurrent flows from distinct sources.
+    for src, dst in ((0, 4), (1, 5), (2, 6), (3, 7)):
+        clk.net.start(src, dst, 2**30, lambda t: None)
+    up_cap = 4 * 1.0 / 8.0 * _GB  # rack_size * link / oversubscription
+    for f in clk.net.flows.values():
+        assert f.rate == pytest.approx(up_cap / 4.0, rel=1e-9)
+    assert clk.net.link_rate(topo.uplinks_up[0]) == pytest.approx(
+        up_cap, rel=1e-9
+    )
+
+
+# --------------------------------------------------------------------------
+# End-to-end invariants through ClusterSim (event engine).
+# --------------------------------------------------------------------------
+
+
+def _diamond_builder() -> AbstractWorkflow:
+    # Fan-out (cross-node pulls) + fan-in (predictive-push trigger);
+    # see test_eventsim_parity._diamond_builder for the rationale.
+    feats = ("pixel_stats", "gradient_stats", "haralick", "canny_edge")
+    stages = (
+        [Stage.single(Operation("recon_to_nuclei"))]
+        + [Stage.single(Operation(f)) for f in feats]
+        + [Stage.single(Operation("morphometry"))]
+    )
+    edges = tuple(("recon_to_nuclei", f) for f in feats) + tuple(
+        (f, "morphometry") for f in feats
+    )
+    return AbstractWorkflow("diamond", tuple(stages), edges)
+
+
+_BASE = dict(
+    n_nodes=8,
+    staging=True,
+    staging_locality=True,
+    window=1,
+    stage_output_mb=64.0,
+    interconnect_gb_s=1.0,
+    engine="event",
+)
+
+
+def _sim(cfg: SimConfig, n_tiles: int = 64) -> ClusterSim:
+    from repro.core.simulator import ConcreteWorkflow, make_tiles
+
+    cw = ConcreteWorkflow.replicate(
+        _diamond_builder(), make_tiles(n_tiles, seed=cfg.seed)
+    )
+    return ClusterSim(cw, cfg)
+
+
+def test_sim_fluid_quiesces_with_bytes_conserved() -> None:
+    sim = _sim(SimConfig(seed=SEED, **_BASE))
+    res = sim.run()
+    assert res.completed_ok
+    fl = sim.fluid
+    assert fl is not None
+    assert fl.n_active == 0
+    assert fl.flows_started == fl.flows_completed > 0
+    assert fl.bytes_injected == fl.bytes_delivered > 0
+    assert fl.conservation_error() == pytest.approx(0.0, abs=1e-6)
+    # Per-link conservation on a flat fabric: every direct flow crosses
+    # exactly one ingress NIC at weight 1.0, so the ingress byte
+    # counters must re-add to the total payload injected.
+    ingress_total = sum(l.bytes_total for l in sim.net.ingress)
+    assert ingress_total == fl.bytes_injected
+
+
+def test_sim_event_timestamps_monotone() -> None:
+    cfg = SimConfig(
+        seed=SEED,
+        record_event_log=True,
+        predictive_push=True,
+        msg_drop_rate=0.01,
+        corrupt_rate=0.02,
+        rpc_latency_us=200.0,
+        **_BASE,
+    )
+    sim = _sim(cfg)
+    res = sim.run()
+    assert res.completed_ok
+    assert sim.posted_in_past == 0
+    times = [t for t, _kind in sim.event_log]
+    assert times == sorted(times)
+    kinds = {k for _t, k in sim.event_log}
+    assert {"lease", "op_done", "transfer_progress"} <= kinds
+
+
+@pytest.mark.parametrize(
+    "fault_cfg",
+    [
+        dict(fail_node_at=(2, 1.0), backup_tasks=True),
+        dict(crash_at=(3, 0.5)),
+        dict(partition=((1, 2), 0.5, 2.0), msg_drop_rate=0.01),
+    ],
+    ids=["fail-stop", "crash-restart", "partition"],
+)
+def test_sim_exactly_once_stage_completion_under_faults(fault_cfg) -> None:
+    """Crash/partition recovery re-issues leases and may race clones;
+    whatever the engine does, each stage's *effective* completion (the
+    one that mutates stage_done and unlocks dependents) happens exactly
+    once."""
+    cfg = SimConfig(seed=SEED, heartbeat_timeout=0.5, **fault_cfg, **_BASE)
+    sim = _sim(cfg)
+    completions: dict[int, int] = {}
+    orig = sim._finish_stage
+
+    def counted(node, si):
+        first = si.uid not in sim.stage_done
+        orig(node, si)
+        if first and si.uid in sim.stage_done:
+            primary = sim._clone_of.get(si.uid, si.uid)
+            completions[primary] = completions.get(primary, 0) + 1
+
+    sim._finish_stage = counted
+    res = sim.run()
+    assert res.completed_ok
+    assert res.recovered_leases + res.duplicated_leases + res.msg_retries > 0
+    dupes = {uid: n for uid, n in completions.items() if n > 1}
+    assert not dupes, f"stages completed more than once: {dupes}"
+    # Fluid engine still quiesced clean through the faults.
+    assert sim.fluid.n_active == 0
+    assert sim.fluid.conservation_error() == pytest.approx(0.0, abs=1e-6)
+
+
+def test_sim_push_credit_ledger_zero_at_quiesce() -> None:
+    """Event-engine push flow control is an exact ledger (credits
+    return in the landing callback, not on an analytic timer): a slow
+    fabric makes pushes genuinely overlap so the cap trips, and every
+    credit must be back by quiesce."""
+    cfg = SimConfig(
+        seed=SEED,
+        **dict(
+            _BASE,
+            interconnect_gb_s=0.05,
+            predictive_push=True,
+            push_inflight_cap_bytes=96 * 2**20,
+        ),
+    )
+    sim = _sim(cfg)
+    res = sim.run()
+    assert res.completed_ok
+    assert res.pushes > 0
+    assert res.pushes_capped > 0  # the cap actually gated pushes
+    assert all(v == 0 for v in sim._push_inflight_bytes.values()), (
+        sim._push_inflight_bytes
+    )
+
+
+def test_sim_zero_completed_requests_yields_none_percentiles() -> None:
+    """Regression (ISSUE 10 satellite): a serving run that completes
+    zero requests must report percentiles as None and miss_rate 0.0,
+    not raise on an empty sample."""
+    cfg = SimConfig(
+        seed=SEED,
+        n_nodes=2,
+        arrival_rate=50.0,
+        serve_duration_s=0.5,
+        tenants={"t0": 1.0},
+        deadline_ms=100.0,
+        gateway_inflight=1,
+        admission_queue_cap=0,
+        fail_node_at=(0, 0.0),
+        crash_at=(1, 0.0),
+        heartbeat_timeout=0.1,
+    )
+    res = run_simulation(0, cfg, workflow_builder=_diamond_builder)
+    assert res.completed_requests == 0
+    assert res.latency_p50 is None
+    assert res.latency_p99 is None
+    assert res.tardiness_p99 is None
+    assert res.miss_rate == 0.0
+
+
+def test_sim_rack_affinity_auto_accepted_and_quiesces() -> None:
+    """`rack_affinity="auto"` derives the bonus from measured uplink
+    vs NIC busy instead of a hand-tuned constant; it must run clean on
+    both fabrics (flat fabric: bonus pinned to 0)."""
+    for net in ("flat", "fat_tree"):
+        cfg = SimConfig(
+            seed=SEED,
+            **dict(
+                _BASE,
+                network=net,
+                rack_size=2,
+                oversubscription=8.0,
+                rack_affinity="auto",
+            ),
+        )
+        res = run_simulation(48, cfg, workflow_builder=_diamond_builder)
+        assert res.completed_ok

@@ -1,0 +1,46 @@
+"""Fleet-scale smoke for the event core (slow tier; the CI `sim-scale`
+job runs this under a wall-clock budget).
+
+The acceptance bar from ISSUE 10: 1000 nodes x >= 100k requests in
+<= 120 s wall-clock.  The run uses the serving front end (open-loop
+arrivals through the gateway) with monolithic tasks — the shape the
+fleet-scale data structures (deque pending queue, room heap, gated
+duplicate purges) were built for.
+"""
+
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core.simulator import SimConfig, run_simulation
+
+WALL_BUDGET_S = 120.0
+
+
+@pytest.mark.slow
+def test_event_core_fleet_scale_smoke() -> None:
+    cfg = SimConfig(
+        n_nodes=1000,
+        n_gpus=1,
+        n_cpu_cores=3,
+        pipelined=False,
+        arrival_rate=10500.0,
+        serve_duration_s=10.0,
+        tenants={"t0": 1.0},
+        deadline_ms=500.0,
+        gateway_inflight=4000,
+        window=4,
+        seed=7,
+    )
+    t0 = time.perf_counter()
+    res = run_simulation(0, cfg)
+    wall = time.perf_counter() - t0
+    assert res.completed_ok
+    assert res.requests >= 100_000, res.requests
+    assert res.completed_requests + res.shed_requests == res.requests
+    assert wall <= WALL_BUDGET_S, f"scale smoke took {wall:.1f}s"
+    # The run is genuinely event-driven: the heap processed every
+    # arrival plus its dispatch/completion events.
+    assert res.n_events >= 2 * res.requests

@@ -213,6 +213,10 @@ def test_sim_rack_aware_placement_beats_rack_blind_on_fat_tree():
 
 
 def test_sim_push_cap_mirror_bounds_inflight_and_completes():
+    # Pinned to the store-and-forward engine: this test validates the
+    # tick mirror of the wire protocol's analytic in-flight window
+    # (landed-at-done_t credit returns).  The event engine's exact
+    # landing-callback ledger is covered by test_eventsim_invariants.
     base = dict(
         n_nodes=2,
         staging=True,
@@ -221,6 +225,7 @@ def test_sim_push_cap_mirror_bounds_inflight_and_completes():
         stage_output_mb=256.0,
         interconnect_gb_s=1.0,
         predictive_push=True,
+        engine="tick",
     )
     uncapped = run_simulation(
         40, SimConfig(**base), workflow_builder=_fanin_builder
